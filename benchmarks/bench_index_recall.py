@@ -1,0 +1,31 @@
+"""Paper Fig 11: IVF index recall on kNN search, k in {1, 10, 100, 500},
+SIFT-like vectors (scaled-down SIFT-1M regime)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core.vector_index import IVFIndex, recall_at_k
+from repro.data.synthetic_graph import sift_like_vectors
+
+
+def run() -> None:
+    n, dim = 20_000, 64
+    vecs = sift_like_vectors(n, dim=dim, n_clusters=128, seed=0)
+    cfg = VectorIndexConfig(dim=dim, metric="l2",
+                            vectors_per_bucket=1_000, min_buckets=8,
+                            nprobe=8, kmeans_iters=6)
+    index = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.choice(n, 64)] +
+               0.05 * rng.standard_normal((64, dim)).astype(np.float32))
+    for k in (1, 10, 100, 500):
+        rs = [recall_at_k(index, queries[i:i + 16], k, nprobe=8)
+              for i in range(0, 64, 16)]
+        emit(f"fig11/recall@k={k}", 0.0,
+             f"avg={np.mean(rs):.3f};min={np.min(rs):.3f};max={np.max(rs):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: XLA fallback path wall-time on CPU (the Pallas
+TPU path is validated via interpret=True in tests; wall-time here measures
+the oracle/fallback, giving the CPU-side baseline the kernels replace)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+from repro.models.attention import chunked_attention
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # ivf scan core
+    q = jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((65_536, 128)), jnp.float32)
+    def scan():
+        v, i = ivf_scan_topk_ref(q, c, 16, "l2")
+        v.block_until_ready()
+    t = timeit(scan, repeats=3)
+    flops = 2 * 8 * 65_536 * 128
+    emit("kernels/ivf_scan_64k_xla", t, f"GFLOPs={flops / (t * 1e-6) / 1e9:.1f}")
+
+    # attention (prefill tile)
+    qkv = [jnp.asarray(rng.standard_normal((1, 1024, 4, 64)), jnp.bfloat16)
+           for _ in range(3)]
+    def attn_full():
+        attention_ref(*qkv).block_until_ready()
+    def attn_chunked():
+        chunked_attention(*qkv, causal=True, block_kv=256).block_until_ready()
+    t_full = timeit(attn_full, repeats=3)
+    t_chunk = timeit(attn_chunked, repeats=3)
+    emit("kernels/attention_1k_materialized", t_full, "baseline")
+    emit("kernels/attention_1k_chunked", t_chunk,
+         f"vs_materialized={t_full / max(t_chunk, 1e-9):.2f}x")
+
+    # decode over a 32k cache tile
+    qd = jnp.asarray(rng.standard_normal((4, 1, 8, 128)), jnp.bfloat16)
+    kd = jnp.asarray(rng.standard_normal((4, 32_768, 2, 128)), jnp.bfloat16)
+    vd = jnp.asarray(rng.standard_normal((4, 32_768, 2, 128)), jnp.bfloat16)
+    pos = jnp.asarray([32_000] * 4, jnp.int32)
+    def dec():
+        decode_attention_ref(qd, kd, vd, pos).block_until_ready()
+    t = timeit(dec, repeats=3)
+    bytes_read = 2 * 4 * 32_768 * 2 * 128 * 2
+    emit("kernels/decode_32k_cache", t,
+         f"GB_s={bytes_read / (t * 1e-6) / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: CSV emission `name,us_per_call,derived`."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)
+
+
+def build_snb_db(n_persons: int = 120, seed: int = 0):
+    """Standard experimental DB: LDBC-SNB-like graph + LFW-like photos."""
+    from repro.core import PandaDB
+    from repro.core.aipm import feature_hash_extractor, label_extractor
+    from repro.data.synthetic_graph import SNBConfig, build_snb
+
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=64))
+    db.register_extractor("animal", label_extractor(["cat", "dog", "bird"]))
+    build_snb(db, SNBConfig(n_persons=n_persons,
+                            n_identities=max(2, n_persons // 3), seed=seed))
+    return db

@@ -1,0 +1,79 @@
+"""Roofline report: read the dry-run JSONs and emit the per-cell three-term
+table (compute / memory / collective seconds, dominant term, useful-FLOPs
+ratio).  Source of truth for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    cells = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        if "FAILED" in f.name:
+            continue
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def table(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for c in load_cells(mesh):
+        r = c["roofline"]
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append({
+            "cell": f"{c['arch']}×{c['shape']}",
+            "kind": c.get("kind"),
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "bound_s": dom_s,
+            "roofline_frac": (r["compute_s"] / dom_s) if dom_s else 0.0,
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "temp_gb": (c["memory"]["temp_size_in_bytes"] / 1e9
+                        if c.get("memory") else None),
+        })
+    return rows
+
+
+PERF_DIR = RESULTS.parent / "perf"
+
+# §Perf winners (EXPERIMENTS.md): the hillclimbed variant per cell
+PERF_BEST = {
+    ("llama3-8b", "train_4k"): "fsdp_accum1",
+    ("deepseek-v2-236b", "train_4k"): "vmap_combine",
+    ("equiformer-v2", "ogb_products"): "custom_vjp_rows",
+}
+
+
+def run() -> None:
+    rows = table("single")
+    for r in rows:
+        emit(f"roofline/{r['cell']}", r["bound_s"] * 1e6,
+             f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+             f"comp={r['compute_s']:.3g};mem={r['memory_s']:.3g};"
+             f"coll={r['collective_s']:.3g}")
+    if not rows:
+        emit("roofline/NO_DRYRUN_RESULTS", 0.0,
+             "run: python -m repro.launch.dryrun --all --mesh both")
+    # optimized (post-§Perf) rows for the hillclimbed cells, side by side
+    for (arch, shape), variant in PERF_BEST.items():
+        f = PERF_DIR / f"{arch}__{shape}__{variant}.json"
+        if not f.exists():
+            continue
+        d = json.loads(f.read_text())
+        bound = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        emit(f"roofline_opt/{arch}×{shape}", bound * 1e6,
+             f"variant={variant};frac={d['compute_s'] / bound:.3f};"
+             f"comp={d['compute_s']:.3g};mem={d['memory_s']:.3g};"
+             f"coll={d['collective_s']:.3g}")
+
+
+if __name__ == "__main__":
+    run()

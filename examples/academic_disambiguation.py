@@ -1,0 +1,60 @@
+"""Paper case study §VII-B1: academic-graph author disambiguation (NSFC).
+
+Scholars with multiple name spellings are matched by facial-photo similarity:
+nodes with similar face features are considered the same scholar.  Builds an
+SNB-style graph with duplicate identities, indexes the face space (IVF), and
+resolves duplicates through CypherPlus queries.
+
+  PYTHONPATH=src python examples/academic_disambiguation.py
+"""
+import numpy as np
+
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor
+from repro.data.synthetic_graph import SNBConfig, build_snb
+
+
+def main() -> None:
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=64))
+
+    # 90 scholar records, only 30 real identities (each person appears under
+    # ~3 name variants -- the Wang/Wei vs Wang/WW ambiguity)
+    build_snb(db, SNBConfig(n_persons=90, n_identities=30, seed=7))
+    print(f"graph: {db.graph.n_nodes} nodes, "
+          f"{db.graph.n_relationships} relationships")
+
+    # BatchIndexing over the face semantic space (Algorithm 2)
+    index = db.build_index("face", "photo",
+                           cfg=VectorIndexConfig(dim=64, metric="l2",
+                                                 vectors_per_bucket=16,
+                                                 min_buckets=4, nprobe=4))
+    print(f"face index: {index.centroids.shape[0]} buckets, "
+          f"{index.vectors.shape[0]} vectors")
+
+    # resolve duplicates for a query scholar
+    rows = db.query(
+        "MATCH (n:Person), (m:Person) WHERE n.name='person_3' "
+        "AND n.photo->face ~: m.photo->face RETURN m.name")
+    dup_names = sorted(r["m.name"] for r in rows)
+    print(f"\nrecords matching person_3's face: {dup_names}")
+    truth = {f"person_{i}" for i in range(90) if i % 30 == 3}
+    found = set(dup_names)
+    print(f"ground-truth duplicates: {sorted(truth)}")
+    print(f"precision={len(found & truth) / max(len(found), 1):.2f} "
+          f"recall={len(found & truth) / len(truth):.2f}")
+
+    # the graph side: merge implied affiliations of the duplicates
+    rows = db.query(
+        "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name='person_3' "
+        "RETURN t.name")
+    print(f"\naffiliation via graph expand: {rows}")
+    print("cache:", db.cache.stats())
+    print("extractor speed stats feed the cost model:",
+          {k: f"{db.registry.get(k).avg_speed * 1e6:.1f}us/row"
+           for k in db.registry.known()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Sampled-minibatch GNN training: the `minibatch_lg` regime end-to-end at
+reduced scale -- real neighbor sampler over a synthetic power-law graph,
+GraphSAGE blocks, accuracy on held-out seeds.
+
+  PYTHONPATH=src python examples/gnn_minibatch_training.py [--steps 60]
+"""
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.data.sampler import NeighborSampler, random_graph
+from repro.models.gnn import build_gnn
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+
+    # synthetic Reddit-flavoured graph (labels correlate with features)
+    g = random_graph(n_nodes=4_000, avg_degree=8, d_feat=32, n_classes=5,
+                     seed=0)
+    w_true = np.random.default_rng(1).standard_normal((32, 5))
+    g.labels = (g.feats @ w_true).argmax(axis=1)
+    sampler = NeighborSampler(g, fanout=(10, 5), seed=2)
+
+    cfg = GNNConfig(kind="graphsage", n_layers=2, d_hidden=64,
+                    aggregator="mean", sample_sizes=(10, 5), n_classes=5)
+    model = build_gnn(cfg)
+    params = model.init(jax.random.key(0), 32, 5)
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=3e-3, weight_decay=0.0, warmup_steps=5)
+
+    @jax.jit
+    def step(params, opt, feats, src, dst, mask, labels, n_seeds):
+        def loss_fn(p):
+            lg = model.node_logits(p, feats, None, src, dst, mask,
+                                   feats.shape[0])
+            valid = (labels >= 0) & (jnp.arange(feats.shape[0]) < n_seeds)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            ll = jnp.take_along_axis(lg, jnp.maximum(labels, 0)[:, None],
+                                     axis=-1)[:, 0]
+            loss = jnp.sum(jnp.where(valid, lse - ll, 0.0)) / \
+                jnp.maximum(jnp.sum(valid), 1)
+            acc = jnp.sum(jnp.where(valid, (lg.argmax(-1) == labels), 0)) / \
+                jnp.maximum(jnp.sum(valid), 1)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
+        return params, opt, loss, acc
+
+    for i, block in enumerate(sampler.batches(args.batch, args.steps)):
+        params, opt, loss, acc = step(
+            params, opt,
+            jnp.asarray(block["feats"]), jnp.asarray(block["src"]),
+            jnp.asarray(block["dst"]),
+            jnp.asarray(block["edge_mask"], jnp.float32),
+            jnp.asarray(block["labels"]), args.batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:3d}  loss {float(loss):.3f}  "
+                  f"seed-acc {float(acc):.2f}")
+    assert float(acc) > 0.5, "minibatch training failed to learn"
+    print("ok: sampled-minibatch GraphSAGE learns the synthetic labels")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper case study §VII-B3: graph-based entertainment application.
+
+"Which actor is this?" -- a viewer submits a photo; PandaDB finds the actor
+whose stored photo matches the face, then walks the graph for their movies.
+Exercises the createFromSource literal function + vector-index pushdown +
+graph expansion in ONE CypherPlus query.
+
+  PYTHONPATH=src python examples/movie_face_search.py
+"""
+import numpy as np
+
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor
+from repro.data.synthetic_graph import identity_photo
+
+
+def main() -> None:
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=64))
+    rng = np.random.default_rng(11)
+
+    # DoubanMovie-style property graph: actors, movies, participation
+    actors, photos = [], {}
+    for i in range(40):
+        ident = rng.standard_normal(64)
+        photo = identity_photo(rng, ident, 2048)
+        photos[i] = (ident, photo)
+        actors.append(db.graph.create_node("Actor", name=f"actor_{i}",
+                                           photo=photo))
+    movies = [db.graph.create_node("Movie", title=f"movie_{j}")
+              for j in range(15)]
+    for i, a in enumerate(actors):
+        for j in range(3):
+            db.graph.create_relationship(a, movies[(i + j * 7) % 15],
+                                         "participatedIn")
+
+    db.build_index("face", "photo",
+                   cfg=VectorIndexConfig(dim=64, vectors_per_bucket=10,
+                                         min_buckets=4, nprobe=4))
+
+    # the viewer's submitted photo: a new shot of actor_17 (same identity,
+    # different noise) -> written to disk, referenced via createFromSource
+    ident, _ = photos[17]
+    snapshot = identity_photo(rng, ident, 2048, noise=0.08)
+    with open("/tmp/viewer_snapshot.bin", "wb") as f:
+        f.write(snapshot)
+
+    rows = db.query(
+        "MATCH (a:Actor)-[:participatedIn]->(m:Movie) "
+        "WHERE a.photo->face ~: createFromSource('/tmp/viewer_snapshot.bin')->face "
+        "RETURN a.name, m.title")
+    names = {r["a.name"] for r in rows}
+    films = sorted({r["m.title"] for r in rows})
+    print(f"matched actor(s): {sorted(names)}")
+    print(f"their movies: {films}")
+    assert "actor_17" in names, "face search failed to find the right actor"
+    print("\n(query ran extraction only for the submitted photo + "
+          f"{db.cache.stats()['misses']} cache misses; "
+          "stored faces came from the index/cache)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: build a PandaDB, register extractors, run CypherPlus queries.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor, label_extractor
+
+
+def main() -> None:
+    db = PandaDB()
+
+    # φ: sub-property extraction functions (AIPM model registry)
+    db.register_extractor("face", feature_hash_extractor(dim=64))
+    db.register_extractor("animal", label_extractor(["cat", "dog", "bird"]))
+
+    # the paper's Figure-1 graph
+    rng = np.random.default_rng(0)
+    jordan = db.graph.create_node("Person", name="Michael Jordan",
+                                  photo=rng.bytes(512))
+    bulls = db.graph.create_node("Team", name="Chicago Bulls")
+    pet = db.graph.create_node("Pet", name="Tom", photo=rng.bytes(512))
+    pippen = db.graph.create_node("Person", name="Scott Pippen",
+                                  photo=rng.bytes(512))
+    kerr = db.graph.create_node("Person", name="Steve Kerr",
+                                photo=rng.bytes(512))
+    warriors = db.graph.create_node("Team", name="Golden State Warriors")
+    db.graph.create_relationship(jordan, bulls, "workFor")
+    db.graph.create_relationship(jordan, pet, "hasPet")
+    db.graph.create_relationship(jordan, pippen, "teamMate")
+    db.graph.create_relationship(jordan, kerr, "teamMate")
+    db.graph.create_relationship(kerr, warriors, "coachOf")
+
+    print("Q: who are Michael Jordan's teammates?")
+    print(db.query("MATCH (n:Person)-[:teamMate]->(m:Person) "
+                   "WHERE n.name='Michael Jordan' RETURN m.name"))
+
+    print("\nQ1 (paper): what animal is Michael Jordan's pet?")
+    print(db.query("MATCH (n:Person)-[:hasPet]->(p:Pet) "
+                   "WHERE n.name='Michael Jordan' "
+                   "RETURN p.name, p.photo->animal"))
+
+    print("\nQ3 (paper): is Jordan's former teammate the Warriors' coach? "
+          "(face similarity)")
+    print(db.query(
+        "MATCH (n:Person)-[:teamMate]->(m:Person), (c:Person)-[:coachOf]->(t:Team) "
+        "WHERE n.name='Michael Jordan' AND t.name='Golden State Warriors' "
+        "AND m.photo->face ~: c.photo->face RETURN m.name"))
+
+    print("\nOptimized vs naive plan (the cost-based greedy re-ordering):")
+    ex = db.explain("MATCH (n:Person)-[:hasPet]->(p:Pet) "
+                    "WHERE n.name='Michael Jordan' AND p.photo->animal='cat' "
+                    "RETURN p.name")
+    print(ex["optimized"])
+    print(f"est cost: optimized={ex['optimized_cost']:.4f} "
+          f"naive={ex['naive_cost']:.4f}")
+    print("\ncache:", db.cache.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_arch("llama3-8b")`` resolves an ArchSpec."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    ArchSpec,
+    GNNConfig,
+    GraphShape,
+    LMShape,
+    RecsysConfig,
+    RecsysShape,
+    TransformerConfig,
+    gnn_shapes,
+    lm_shapes,
+    recsys_shapes,
+    reduced,
+)
+
+_ARCH_MODULES = {
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "gcn-cora": "repro.configs.gcn_cora",
+    "schnet": "repro.configs.schnet",
+    "autoint": "repro.configs.autoint",
+    # bonus archs from the public pool (not in the assigned 40-cell grid)
+    "gat-bonus": "repro.configs.gat_bonus",
+    "gin-bonus": "repro.configs.gin_bonus",
+}
+
+ASSIGNED = [n for n in _ARCH_MODULES if not n.endswith("-bonus")]
+
+
+def arch_names() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_arch(name: str) -> ArchSpec:
+    try:
+        mod = importlib.import_module(_ARCH_MODULES[name])
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}") from None
+    return mod.ARCH
+
+
+def all_cells() -> List[tuple]:
+    """Every ASSIGNED (arch, shape) pair -- the 40 dry-run cells."""
+    cells = []
+    for name in ASSIGNED:
+        spec = get_arch(name)
+        for shape_name in spec.shapes:
+            cells.append((name, shape_name))
+    return cells

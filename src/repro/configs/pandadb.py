@@ -1,0 +1,67 @@
+"""PandaDB deployment config: the paper's own system knobs (§IV-§VI)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class VectorIndexConfig:
+    """IVF-Flat per Algorithm 2: ~1 bucket per `vectors_per_bucket` vectors."""
+
+    dim: int = 128
+    metric: str = "l2"            # l2 | ip | cosine
+    vectors_per_bucket: int = 100_000   # paper's empirical value
+    min_buckets: int = 4
+    nprobe: int = 8               # buckets scanned per query
+    kmeans_iters: int = 8         # batch-build refinement steps
+
+
+@dataclass(frozen=True)
+class BlobStoreConfig:
+    """BLOB metadata/content separation (§VI-A, Fig 5)."""
+
+    inline_threshold: int = 10 * 1024  # <10kB stored inline as long-string
+    table_columns: int = 64            # BLOB-table columns (row=id/|col|, col=id%|col|)
+    metadata_bytes: int = 29           # length + mime + id (paper: "28.5 bytes")
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Semantic-information cache keyed by (item, subprop, model serial)."""
+
+    capacity_items: int = 1_000_000
+    eviction: str = "lru"
+
+
+@dataclass(frozen=True)
+class AIPMConfig:
+    """AI-model interactive protocol: async batched extractor dispatch."""
+
+    max_batch: int = 256
+    max_inflight: int = 4          # bounded async queue depth
+    timeout_ms: int = 30_000
+
+
+@dataclass(frozen=True)
+class CostModelConfig:
+    """Operator-speed statistics (§V-B): EWMA over observed per-row times."""
+
+    ewma_alpha: float = 0.3
+    default_structured_speed: float = 1e-7   # s/row prior
+    default_semantic_speed: float = 0.3      # s/row prior (paper: 0.3s/face)
+
+
+@dataclass(frozen=True)
+class PandaDBConfig:
+    index: VectorIndexConfig = field(default_factory=VectorIndexConfig)
+    blob: BlobStoreConfig = field(default_factory=BlobStoreConfig)
+    cache: CacheConfig = field(default_factory=CacheConfig)
+    aipm: AIPMConfig = field(default_factory=AIPMConfig)
+    cost: CostModelConfig = field(default_factory=CostModelConfig)
+    # distributed layout (§VII-A): structure replicated, properties sharded
+    replicate_graph_structure: bool = True
+    shard_axis: str = "data"
+
+
+DEFAULT = PandaDBConfig()

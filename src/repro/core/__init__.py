@@ -1,0 +1,5 @@
+"""PandaDB core: data model, CypherPlus, cost-based optimizer, executor,
+semantic cache, vector index, AIPM extractor protocol."""
+from repro.core.property_graph import PandaGraph  # noqa: F401
+from repro.core.cypherplus import parse_query  # noqa: F401
+from repro.core.database import PandaDB  # noqa: F401

@@ -1,0 +1,201 @@
+"""AIPM: the AI-model interactive protocol (paper §IV-B).
+
+AI models (sub-property extraction functions φ) are deployed *away from* the
+database kernel: the query engine sends an AIPM-request, the model service
+extracts the "computable pattern" (feature vector / label / text)
+asynchronously in batches, and the engine caches the result.
+
+Here the model service is an in-process registry whose extractors are JAX
+models (the assigned architectures double as extractors -- see DESIGN.md §4),
+dispatched through a bounded async queue so the protocol semantics (request /
+future / batched async completion) are preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.pandadb import AIPMConfig
+
+
+@dataclasses.dataclass
+class ExtractorSpec:
+    """One registered φ: sub-property key -> model."""
+
+    sub_key: str
+    fn: Callable[[List[np.ndarray]], np.ndarray]   # batch of raw -> [B, ...]
+    serial: int = 1
+    batch_size: int = 64
+    calls: int = 0
+    rows: int = 0
+    total_time: float = 0.0
+
+    @property
+    def avg_speed(self) -> float:
+        """Observed s/row (feeds the cost model statistics)."""
+        return self.total_time / self.rows if self.rows else 0.0
+
+
+@dataclasses.dataclass
+class AIPMRequest:
+    sub_key: str
+    items: List[Tuple[int, np.ndarray]]    # (item_id, raw content)
+    future: Future = dataclasses.field(default_factory=Future)
+
+
+class ModelRegistry:
+    """sub-property key -> extractor; serial bumps on model update."""
+
+    def __init__(self) -> None:
+        self._extractors: Dict[str, ExtractorSpec] = {}
+
+    def register(self, sub_key: str,
+                 fn: Callable[[List[np.ndarray]], np.ndarray],
+                 batch_size: int = 64) -> ExtractorSpec:
+        old = self._extractors.get(sub_key)
+        serial = old.serial + 1 if old else 1
+        spec = ExtractorSpec(sub_key, fn, serial=serial, batch_size=batch_size)
+        self._extractors[sub_key] = spec
+        return spec
+
+    def get(self, sub_key: str) -> ExtractorSpec:
+        if sub_key not in self._extractors:
+            raise KeyError(f"no extractor registered for sub-property {sub_key!r}")
+        return self._extractors[sub_key]
+
+    def serial(self, sub_key: str) -> int:
+        return self.get(sub_key).serial
+
+    def known(self) -> List[str]:
+        return list(self._extractors)
+
+
+class AIPMService:
+    """Bounded async request queue in front of the registry.
+
+    ``submit`` returns a Future (the AIPM-request); a worker drains the queue
+    in extractor-sized batches.  ``extract_sync`` is the blocking convenience
+    used by the executor when it wants the result immediately.
+    """
+
+    def __init__(self, registry: ModelRegistry,
+                 cfg: Optional[AIPMConfig] = None) -> None:
+        self.registry = registry
+        self.cfg = cfg or AIPMConfig()
+        self._queue: "queue.Queue[Optional[AIPMRequest]]" = queue.Queue(
+            maxsize=self.cfg.max_inflight)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            req = self._queue.get()
+            if req is None:
+                return
+            try:
+                req.future.set_result(self._execute(req))
+            except Exception as e:  # noqa: BLE001
+                req.future.set_exception(e)
+
+    def _execute(self, req: AIPMRequest) -> Dict[int, np.ndarray]:
+        spec = self.registry.get(req.sub_key)
+        out: Dict[int, np.ndarray] = {}
+        t0 = time.perf_counter()
+        for off in range(0, len(req.items), spec.batch_size):
+            chunk = req.items[off:off + spec.batch_size]
+            raws = [r for (_i, r) in chunk]
+            vecs = np.asarray(spec.fn(raws))
+            for (item_id, _r), v in zip(chunk, vecs):
+                out[item_id] = v
+        dt = time.perf_counter() - t0
+        spec.calls += 1
+        spec.rows += len(req.items)
+        spec.total_time += dt
+        return out
+
+    def submit(self, sub_key: str,
+               items: List[Tuple[int, np.ndarray]]) -> Future:
+        req = AIPMRequest(sub_key, items)
+        self._queue.put(req, timeout=self.cfg.timeout_ms / 1000)
+        return req.future
+
+    def extract_sync(self, sub_key: str,
+                     items: List[Tuple[int, np.ndarray]]) -> Dict[int, np.ndarray]:
+        return self.submit(sub_key, items).result(
+            timeout=self.cfg.timeout_ms / 1000)
+
+    def shutdown(self) -> None:
+        self._queue.put(None)
+
+
+# ---------------------------------------------------------------------------
+# Built-in extractors (deterministic, content-derived -- offline container)
+# ---------------------------------------------------------------------------
+
+
+def feature_hash_extractor(dim: int = 128, seed: int = 0
+                           ) -> Callable[[List[np.ndarray]], np.ndarray]:
+    """Deterministic 'face-feature' style extractor: content -> unit vector.
+    Similar content maps to similar vectors (locality via byte histograms)."""
+    rng = np.random.default_rng(seed)
+    proj = rng.standard_normal((256, dim)).astype(np.float32) / 16.0
+
+    def fn(raws: List[np.ndarray]) -> np.ndarray:
+        out = np.zeros((len(raws), dim), np.float32)
+        for i, raw in enumerate(raws):
+            b = np.asarray(raw, np.uint8).ravel()
+            hist = np.bincount(b, minlength=256).astype(np.float32)
+            hist /= max(1.0, hist.sum())
+            v = hist @ proj
+            out[i] = v / max(1e-9, np.linalg.norm(v))
+        return out
+
+    return fn
+
+
+def label_extractor(labels: Sequence[str], seed: int = 1
+                    ) -> Callable[[List[np.ndarray]], np.ndarray]:
+    """'animal'/'jerseyNumber' style: content -> deterministic class label."""
+    labels = list(labels)
+
+    def fn(raws: List[np.ndarray]) -> np.ndarray:
+        out = []
+        for raw in raws:
+            b = np.asarray(raw, np.uint8).ravel()
+            h = int(b[:16].sum() + len(b)) if b.size else 0
+            out.append(labels[(h + seed) % len(labels)])
+        return np.asarray(out, dtype=object)
+
+    return fn
+
+
+def model_embedding_extractor(model, params, rules, dim: int,
+                              max_tokens: int = 64
+                              ) -> Callable[[List[np.ndarray]], np.ndarray]:
+    """Adapter: use an LM from the zoo as φ (mean-pooled hidden state)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def embed(tokens):
+        logits, _aux, _ = model.forward(params, tokens, rules)
+        return logits.mean(axis=1)
+
+    def fn(raws: List[np.ndarray]) -> np.ndarray:
+        toks = np.zeros((len(raws), max_tokens), np.int32)
+        for i, raw in enumerate(raws):
+            b = np.asarray(raw, np.uint8).ravel()[:max_tokens]
+            toks[i, :len(b)] = b % model.cfg.vocab_size
+        out = np.asarray(embed(jnp.asarray(toks)), np.float32)
+        out = out[:, :dim] if out.shape[1] >= dim else np.pad(
+            out, [(0, 0), (0, dim - out.shape[1])])
+        norms = np.linalg.norm(out, axis=1, keepdims=True)
+        return out / np.maximum(norms, 1e-9)
+
+    return fn

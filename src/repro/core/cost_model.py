@@ -1,0 +1,132 @@
+"""Cost model + operator-speed statistics service (paper §V-B).
+
+|σ_p| = Σcost / |T| : observed average per-row time of an operator, kept as
+an EWMA in the statistics service and updated after every execution.
+
+Est(o) = E[speed(o)|S] * Σ(row, T) : expected cost of running operator ``o``
+over input table T (Definition 5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.configs.pandadb import CostModelConfig
+from repro.core import logical_plan as lp
+from repro.core.cypherplus import Compare, is_semantic
+
+
+class StatisticsService:
+    """Metadata service holding per-operator average speeds (s/row)."""
+
+    def __init__(self, cfg: Optional[CostModelConfig] = None) -> None:
+        self.cfg = cfg or CostModelConfig()
+        self.speeds: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+        # cardinality statistics
+        self.n_nodes = 1
+        self.label_counts: Dict[str, int] = {}
+        self.avg_degree: float = 4.0
+        self.structured_selectivity: float = 0.1
+        self.semantic_selectivity: float = 0.5
+
+    # -- speed statistics ------------------------------------------------------
+
+    def op_key(self, op: lp.PlanOp) -> str:
+        if isinstance(op, lp.SemanticFilter):
+            # one speed entry per sub-property extractor family
+            return f"semantic_filter:{_sem_key(op.predicate)}"
+        return type(op).__name__.lower()
+
+    def record(self, key: str, total_time: float, n_rows: int) -> None:
+        """|σ_p| = Σ(cost) / |T| folded into an EWMA."""
+        if n_rows <= 0:
+            return
+        speed = total_time / n_rows
+        a = self.cfg.ewma_alpha
+        old = self.speeds.get(key)
+        self.speeds[key] = speed if old is None else a * speed + (1 - a) * old
+        self.counts[key] = self.counts.get(key, 0) + n_rows
+
+    def expected_speed(self, op: lp.PlanOp) -> float:
+        """E[speed(o)|S] with paper-calibrated priors."""
+        key = self.op_key(op)
+        if key in self.speeds:
+            return self.speeds[key]
+        if isinstance(op, lp.SemanticFilter):
+            return self.cfg.default_semantic_speed      # 0.3 s/row (paper §VI-B)
+        if isinstance(op, (lp.Filter, lp.AllNodeScan, lp.NodeByLabelScan,
+                           lp.Projection)):
+            return self.cfg.default_structured_speed
+        if isinstance(op, lp.Expand):
+            return 2 * self.cfg.default_structured_speed
+        if isinstance(op, lp.Join):
+            return 3 * self.cfg.default_structured_speed
+        return self.cfg.default_structured_speed
+
+    # -- cardinality -----------------------------------------------------------
+
+    def refresh_from_graph(self, graph) -> None:
+        self.n_nodes = max(1, graph.n_nodes)
+        self.avg_degree = graph.n_relationships / self.n_nodes if self.n_nodes else 0
+        labels = np.asarray(graph.store.node_labels)
+        for lid in range(len(graph.store.labels)):
+            name = graph.store.labels.name_of(lid)
+            self.label_counts[name] = int((labels == lid).sum())
+
+    def estimate_rows(self, op: lp.PlanOp) -> float:
+        if isinstance(op, lp.AllNodeScan):
+            return float(self.n_nodes)
+        if isinstance(op, lp.NodeByLabelScan):
+            return float(self.label_counts.get(op.label, self.n_nodes / 10))
+        if isinstance(op, lp.Filter):
+            return self.structured_selectivity * self.estimate_rows(op.child)
+        if isinstance(op, lp.SemanticFilter):
+            return self.semantic_selectivity * self.estimate_rows(op.child)
+        if isinstance(op, lp.Expand):
+            return self.avg_degree * self.estimate_rows(op.child)
+        if isinstance(op, lp.Join):
+            lrows = self.estimate_rows(op.left)
+            rrows = self.estimate_rows(op.right)
+            shared = op.left.vars & op.right.vars
+            if shared:
+                return max(lrows, rrows)
+            return lrows * rrows
+        if isinstance(op, (lp.Projection, lp.Limit)):
+            return self.estimate_rows(op.children()[0])
+        return float(self.n_nodes)
+
+
+def _sem_key(expr: Any) -> str:
+    from repro.core.cypherplus import BoolOp, SubProp
+    if isinstance(expr, SubProp):
+        return expr.sub_key
+    if isinstance(expr, Compare):
+        return _sem_key(expr.left) or _sem_key(expr.right)
+    if isinstance(expr, BoolOp):
+        for a in expr.args:
+            k = _sem_key(a)
+            if k:
+                return k
+    return ""
+
+
+def estimate_cost(op: lp.PlanOp, stats: StatisticsService) -> float:
+    """Est(o) = E[speed(o)|S] * Σ(row, T_input)  (Definition 5.1)."""
+    if isinstance(op, (lp.AllNodeScan, lp.NodeByLabelScan)):
+        input_rows = stats.estimate_rows(op)
+    elif isinstance(op, lp.Join):
+        input_rows = stats.estimate_rows(op.left) + stats.estimate_rows(op.right)
+    else:
+        input_rows = stats.estimate_rows(op.children()[0]) if op.children() else 1.0
+    return stats.expected_speed(op) * input_rows
+
+
+def estimate_plan_cost(plan: lp.PlanOp, stats: StatisticsService) -> float:
+    """Total cost: Σ over operators of Est(o)."""
+    total = estimate_cost(plan, stats)
+    for c in plan.children():
+        total += estimate_plan_cost(c, stats)
+    return total

@@ -1,0 +1,197 @@
+"""PandaDB facade: one object wiring graph + parser + optimizer + executor +
+cache + AIPM + vector indexes (the paper's Fig 2 architecture)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.pandadb import PandaDBConfig, VectorIndexConfig
+from repro.core import logical_plan as lp
+from repro.core.aipm import AIPMService, ModelRegistry
+from repro.core.cost_model import StatisticsService, estimate_plan_cost
+from repro.core.cypherplus import CreateQuery, MatchQuery, parse_query
+from repro.core.executor import ExecutionContext, execute
+from repro.core.plan_optimizer import QueryGraph, naive_plan, optimize
+from repro.core.property_graph import PandaGraph
+from repro.core.semantic_cache import SemanticCache
+from repro.core.vector_index import IVFIndex
+
+
+class PandaDB:
+    def __init__(self, cfg: Optional[PandaDBConfig] = None,
+                 wal_path: Optional[str] = None) -> None:
+        self.cfg = cfg or PandaDBConfig()
+        self.graph = PandaGraph(self.cfg, wal_path)
+        self.registry = ModelRegistry()
+        self.aipm = AIPMService(self.registry, self.cfg.aipm)
+        self.cache = SemanticCache(self.cfg.cache)
+        self.stats = StatisticsService(self.cfg.cost)
+        self.indexes: Dict[str, IVFIndex] = {}
+        self.scalar_indexes: Dict[str, Any] = {}   # NumericIndex | InvertedIndex
+
+    # -- model / φ management (paper §IV-B) -----------------------------------
+
+    def register_extractor(self, sub_key: str,
+                           fn: Callable[[List[np.ndarray]], np.ndarray],
+                           batch_size: int = 64) -> int:
+        """Register/update the AI model for a sub-property.  Updating bumps
+        the serial and invalidates stale cache entries + indexes (Fig 6)."""
+        spec = self.registry.register(sub_key, fn, batch_size)
+        self.graph.declare_sub_property(sub_key)
+        dropped = self.cache.invalidate_serial(sub_key, spec.serial)
+        idx = self.indexes.get(sub_key)
+        if idx is not None and idx.serial != spec.serial:
+            del self.indexes[sub_key]     # must be rebuilt (BatchIndexing)
+        sidx = self.scalar_indexes.get(sub_key)
+        if sidx is not None and sidx.serial != spec.serial:
+            del self.scalar_indexes[sub_key]
+        return spec.serial
+
+    # -- indexing (paper §VI-B2) ------------------------------------------------
+
+    def build_index(self, sub_key: str, prop_key: str,
+                    node_ids: Optional[np.ndarray] = None,
+                    cfg: Optional[VectorIndexConfig] = None) -> IVFIndex:
+        """BatchIndexing: extract φ for every unstructured item, then build
+        the IVF index over the semantic space."""
+        node_ids = (np.asarray(node_ids) if node_ids is not None
+                    else self.graph.store.all_nodes())
+        col = self.graph.store.node_props.column(prop_key)
+        if col is None:
+            raise KeyError(f"no property {prop_key!r}")
+        blob_ids = np.asarray(col.values, np.int64)[node_ids]
+        ok = blob_ids >= 0
+        blob_ids = np.unique(blob_ids[ok])
+        serial = self.registry.serial(sub_key)
+        items = []
+        for bid in blob_ids:
+            cached = self.cache.get(int(bid), sub_key, serial)
+            if cached is None:
+                items.append((int(bid), self.graph.blobs.as_array(int(bid))))
+        if items:
+            for bid, vec in self.aipm.extract_sync(sub_key, items).items():
+                self.cache.put(bid, sub_key, serial, vec)
+        vecs = np.stack([self.cache.get(int(b), sub_key, serial)
+                         for b in blob_ids])
+        cfg = cfg or VectorIndexConfig(dim=vecs.shape[1],
+                                       metric=self.cfg.index.metric,
+                                       vectors_per_bucket=self.cfg.index.vectors_per_bucket,
+                                       min_buckets=self.cfg.index.min_buckets,
+                                       nprobe=self.cfg.index.nprobe,
+                                       kmeans_iters=self.cfg.index.kmeans_iters)
+        index = IVFIndex.build(vecs, ids=blob_ids, cfg=cfg, serial=serial)
+        self.indexes[sub_key] = index
+        return index
+
+    def build_scalar_index(self, sub_key: str, prop_key: str):
+        """Paper §VI-B2: B-tree-style index for numeric semantic info,
+        inverted index for strings/labels.  Type is detected from the
+        extracted values."""
+        from repro.core.scalar_index import InvertedIndex, NumericIndex
+        node_ids = self.graph.store.all_nodes()
+        col = self.graph.store.node_props.column(prop_key)
+        if col is None:
+            raise KeyError(f"no property {prop_key!r}")
+        blob_ids = np.asarray(col.values, np.int64)[node_ids]
+        blob_ids = np.unique(blob_ids[blob_ids >= 0])
+        serial = self.registry.serial(sub_key)
+        items = [(int(b), self.graph.blobs.as_array(int(b)))
+                 for b in blob_ids
+                 if self.cache.get(int(b), sub_key, serial) is None]
+        if items:
+            for bid, v in self.aipm.extract_sync(sub_key, items).items():
+                self.cache.put(bid, sub_key, serial, v)
+        vals = [self.cache.get(int(b), sub_key, serial) for b in blob_ids]
+        if all(isinstance(v, (int, float, np.integer, np.floating))
+               or (isinstance(v, np.ndarray) and v.ndim == 0
+                   and np.issubdtype(v.dtype, np.number))
+               for v in vals):
+            idx = NumericIndex.build([float(v) for v in vals], blob_ids,
+                                     serial)
+        else:
+            idx = InvertedIndex.build([str(v) for v in vals], blob_ids,
+                                      serial)
+        self.scalar_indexes[sub_key] = idx
+        return idx
+
+    def index_insert(self, sub_key: str, blob_id: int) -> None:
+        """DynamicIndexing for newly added items."""
+        index = self.indexes.get(sub_key)
+        if index is None:
+            return
+        serial = self.registry.serial(sub_key)
+        vec = self.cache.get(blob_id, sub_key, serial)
+        if vec is None:
+            vec = self.aipm.extract_sync(
+                sub_key, [(blob_id, self.graph.blobs.as_array(blob_id))])[blob_id]
+            self.cache.put(blob_id, sub_key, serial, vec)
+        index.insert(np.asarray(vec, np.float32), blob_id)
+
+    # -- query path (paper Fig 2) -------------------------------------------------
+
+    def plan(self, text: str, optimized: bool = True) -> lp.PlanOp:
+        q = parse_query(text)
+        if not isinstance(q, MatchQuery):
+            raise TypeError("plan() expects a MATCH query")
+        qg = QueryGraph.from_query(q)
+        self.stats.refresh_from_graph(self.graph)
+        plan = optimize(qg, self.stats) if optimized else naive_plan(qg, self.stats)
+        plan = lp.Projection(plan, q.returns)
+        if q.limit is not None:
+            plan = lp.Limit(plan, q.limit)
+        return plan
+
+    def query(self, text: str, optimized: bool = True
+              ) -> List[Dict[str, Any]]:
+        q = parse_query(text)
+        if isinstance(q, CreateQuery):
+            self._execute_create(q, text)
+            return []
+        plan = self.plan(text, optimized)
+        ctx = ExecutionContext(self)
+        _, rows = execute(plan, ctx)
+        return rows
+
+    def explain(self, text: str) -> Dict[str, Any]:
+        self.stats.refresh_from_graph(self.graph)
+        opt = self.plan(text, optimized=True)
+        naive = self.plan(text, optimized=False)
+        return {
+            "optimized": opt.describe(),
+            "optimized_cost": estimate_plan_cost(opt, self.stats),
+            "naive": naive.describe(),
+            "naive_cost": estimate_plan_cost(naive, self.stats),
+        }
+
+    # -- CREATE ------------------------------------------------------------------
+
+    def _execute_create(self, q: CreateQuery, text: str) -> None:
+        from repro.core.cypherplus import FuncCall, Literal
+        env: Dict[str, int] = {}
+        for pat in q.patterns:
+            prev = None
+            for i, np_ in enumerate(pat.nodes):
+                if np_.var in env:
+                    nid = env[np_.var]
+                else:
+                    props = {}
+                    for k, v in np_.props:
+                        if isinstance(v, Literal):
+                            props[k] = v.value
+                        elif isinstance(v, FuncCall) and v.name == "createFromSource":
+                            src = v.args[0].value if isinstance(v.args[0], Literal) else str(v.args[0])
+                            props[k] = self.graph.blobs.create_from_source(src)
+                    nid = self.graph.create_node(np_.label or "Node",
+                                                 log=False, **props)
+                    if np_.var:
+                        env[np_.var] = nid
+                if prev is not None:
+                    rel = pat.rels[i - 1]
+                    src, dst = (prev, nid) if rel.direction != "in" else (nid, prev)
+                    self.graph.create_relationship(src, dst,
+                                                   rel.rel_type or "REL",
+                                                   log=False)
+                prev = nid
+        self.graph.wal.append(text.strip())

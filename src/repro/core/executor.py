@@ -1,0 +1,472 @@
+"""Vectorized Volcano executor (paper §IV-B).
+
+Bindings tables are dicts var -> np.int64[rows] of node ids (a columnar
+match table).  Structured predicates evaluate as vectorized column ops;
+semantic predicates go through cache -> AIPM batch extraction -> vectorized
+similarity on device.  Every operator execution is timed and folded into the
+statistics service (|σ_p| = Σcost/|T|), closing the loop with the optimizer.
+
+Index pushdown: a SemanticFilter of shape
+    scan -> filter( var.prop->sub  ~:/::  <literal vector> )
+whose sub-property has a built vector index executes as an index kNN search
+instead of extracting φ for every row (paper §VI-B2: "the query plan
+generator pushes the semantic-information operator into the index").
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import logical_plan as lp
+from repro.core.cypherplus import (
+    BoolOp,
+    Compare,
+    FuncCall,
+    Literal,
+    Prop,
+    SubProp,
+)
+
+Bindings = Dict[str, np.ndarray]
+
+SIM_THRESHOLD = 0.80
+
+
+class ExecutionContext:
+    def __init__(self, db) -> None:
+        self.db = db
+        self.graph = db.graph
+        self.stats = db.stats
+        self.cache = db.cache
+        self.aipm = db.aipm
+        self.registry = db.registry
+        self.extract_count = 0      # φ invocations (cache misses), for benches
+        self.index_hits = 0
+
+
+def _rows(b: Bindings) -> int:
+    for v in b.values():
+        return len(v)
+    return 0
+
+
+def execute(plan: lp.PlanOp, ctx: ExecutionContext) -> Tuple[Bindings, List[Dict]]:
+    """Returns (bindings, projected rows if Projection at root)."""
+    t0 = time.perf_counter()
+    if isinstance(plan, lp.AllNodeScan):
+        out = {plan.var: ctx.graph.store.all_nodes()}
+        _record(ctx, plan, time.perf_counter() - t0, len(out[plan.var]))
+        return out, []
+    if isinstance(plan, lp.NodeByLabelScan):
+        out = {plan.var: ctx.graph.store.nodes_with_label(plan.label)}
+        _record(ctx, plan, time.perf_counter() - t0, len(out[plan.var]))
+        return out, []
+    if isinstance(plan, lp.Filter):
+        child, _ = execute(plan.child, ctx)
+        n_in = _rows(child)
+        t0 = time.perf_counter()
+        mask = np.asarray(eval_expr(plan.predicate, child, ctx), bool)
+        out = {k: v[mask] for k, v in child.items()}
+        _record(ctx, plan, time.perf_counter() - t0, n_in)
+        return out, []
+    if isinstance(plan, lp.SemanticFilter):
+        child, _ = execute(plan.child, ctx)
+        n_in = _rows(child)
+        t0 = time.perf_counter()
+        pushed = _try_index_pushdown(plan, child, ctx)
+        if pushed is not None:
+            out = pushed
+        else:
+            mask = np.asarray(eval_expr(plan.predicate, child, ctx), bool)
+            out = {k: v[mask] for k, v in child.items()}
+        _record(ctx, plan, time.perf_counter() - t0, n_in)
+        return out, []
+    if isinstance(plan, lp.Expand):
+        child, _ = execute(plan.child, ctx)
+        n_in = _rows(child)
+        t0 = time.perf_counter()
+        type_id = (ctx.graph.store.rel_types.id_of(plan.rel_type)
+                   if plan.rel_type else None)
+        if plan.dst in child:   # expand-into: existence check between bound vars
+            row_idx, nbrs = ctx.graph.store.rels.expand_batch(
+                child[plan.src], type_id,
+                "out" if plan.direction != "in" else "in")
+            ok = np.zeros(n_in, bool)
+            match = child[plan.dst][row_idx] == nbrs
+            np.logical_or.at(ok, row_idx[match], True)
+            if plan.direction == "any":
+                row_idx2, nbrs2 = ctx.graph.store.rels.expand_batch(
+                    child[plan.src], type_id, "in")
+                match2 = child[plan.dst][row_idx2] == nbrs2
+                np.logical_or.at(ok, row_idx2[match2], True)
+            out = {k: v[ok] for k, v in child.items()}
+        else:
+            direction = plan.direction if plan.direction != "any" else "out"
+            row_idx, nbrs = ctx.graph.store.rels.expand_batch(
+                child[plan.src], type_id, direction)
+            if plan.direction == "any":
+                r2, n2 = ctx.graph.store.rels.expand_batch(
+                    child[plan.src], type_id, "in")
+                row_idx = np.concatenate([row_idx, r2])
+                nbrs = np.concatenate([nbrs, n2])
+            out = {k: v[row_idx] for k, v in child.items()}
+            out[plan.dst] = nbrs
+        _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
+        return out, []
+    if isinstance(plan, lp.Join):
+        left, _ = execute(plan.left, ctx)
+        right, _ = execute(plan.right, ctx)
+        t0 = time.perf_counter()
+        shared = sorted(set(left) & set(right))
+        n_in = _rows(left) + _rows(right)
+        if not shared:  # cross product
+            nl, nr = _rows(left), _rows(right)
+            li = np.repeat(np.arange(nl), nr)
+            ri = np.tile(np.arange(nr), nl)
+        else:
+            lkey = np.stack([left[v] for v in shared], axis=1)
+            rkey = np.stack([right[v] for v in shared], axis=1)
+            # hash join via void view
+            lview = np.ascontiguousarray(lkey).view([("", lkey.dtype)] * lkey.shape[1]).ravel()
+            rview = np.ascontiguousarray(rkey).view([("", rkey.dtype)] * rkey.shape[1]).ravel()
+            buckets: Dict[Any, List[int]] = {}
+            for i, kv in enumerate(lview):
+                buckets.setdefault(kv.tobytes(), []).append(i)
+            li_list, ri_list = [], []
+            for j, kv in enumerate(rview):
+                for i in buckets.get(kv.tobytes(), ()):
+                    li_list.append(i)
+                    ri_list.append(j)
+            li = np.asarray(li_list, np.int64)
+            ri = np.asarray(ri_list, np.int64)
+        out = {k: v[li] for k, v in left.items()}
+        for k, v in right.items():
+            if k not in out:
+                out[k] = v[ri]
+        _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
+        return out, []
+    if isinstance(plan, lp.Limit):
+        child, rows = execute(plan.child, ctx)
+        return {k: v[:plan.n] for k, v in child.items()}, rows[:plan.n]
+    if isinstance(plan, lp.Projection):
+        child, _ = execute(plan.child, ctx)
+        t0 = time.perf_counter()
+        cols = []
+        for item in plan.items:
+            vals = eval_expr(item.expr, child, ctx)
+            cols.append((item.alias or _name_of(item.expr), vals))
+        n = _rows(child)
+        rows = [{name: (vals[i] if hasattr(vals, "__len__") else vals)
+                 for name, vals in cols} for i in range(n)]
+        _record(ctx, plan, time.perf_counter() - t0, max(n, 1))
+        return child, rows
+    raise TypeError(f"unknown plan op {type(plan)}")
+
+
+def _record(ctx: ExecutionContext, op: lp.PlanOp, dt: float, rows: int) -> None:
+    ctx.stats.record(ctx.stats.op_key(op), dt, rows)
+
+
+def _name_of(expr: Any) -> str:
+    if isinstance(expr, Prop):
+        return f"{expr.var}.{expr.key}"
+    if isinstance(expr, SubProp):
+        return f"{_name_of(expr.base)}->{expr.sub_key}"
+    return "expr"
+
+
+# ---------------------------------------------------------------------------
+# expression evaluation
+# ---------------------------------------------------------------------------
+
+
+def eval_expr(expr: Any, b: Bindings, ctx: ExecutionContext):
+    n = _rows(b)
+    if isinstance(expr, Literal):
+        return expr.value
+    if isinstance(expr, Prop):
+        if expr.key == "__self__":
+            return b[expr.var]
+        col = ctx.graph.store.node_props.column(expr.key)
+        ids = b[expr.var]
+        if col is None:
+            return np.array([None] * n, object)
+        if col.kind == "string":
+            return np.array(
+                [col.values[i] if i < len(col.present) and col.present[i]
+                 else None for i in ids], object)
+        vals = np.asarray(col.values)
+        safe = np.clip(ids, 0, len(vals) - 1) if len(vals) else ids
+        out = vals[safe].astype(object)
+        present = np.asarray(col.present)
+        ok = (ids < len(present)) & present[np.clip(ids, 0, len(present) - 1)]
+        out[~ok] = None
+        return out
+    if isinstance(expr, SubProp):
+        return eval_subprop(expr, b, ctx)
+    if isinstance(expr, FuncCall):
+        if expr.name == "createFromSource":
+            src = eval_expr(expr.args[0], b, ctx)
+            blob = ctx.graph.blobs.create_from_source(
+                src if isinstance(src, (str, bytes)) else str(src))
+            return ("__blob__", blob.blob_id)
+        raise KeyError(f"unknown function {expr.name!r}")
+    if isinstance(expr, BoolOp):
+        if expr.op == "AND":
+            out = np.ones(n, bool)
+            for a in expr.args:
+                out &= np.asarray(eval_expr(a, b, ctx), bool)
+            return out
+        if expr.op == "OR":
+            out = np.zeros(n, bool)
+            for a in expr.args:
+                out |= np.asarray(eval_expr(a, b, ctx), bool)
+            return out
+        return ~np.asarray(eval_expr(expr.args[0], b, ctx), bool)
+    if isinstance(expr, Compare):
+        return eval_compare(expr, b, ctx)
+    raise TypeError(f"cannot evaluate {expr!r}")
+
+
+def _blob_ids_for(expr: Any, b: Bindings, ctx: ExecutionContext) -> np.ndarray:
+    """Resolve the BLOB ids an extractor should run on."""
+    if isinstance(expr, Prop):
+        col = ctx.graph.store.node_props.column(expr.key)
+        ids = b[expr.var]
+        if col is None or col.kind != "blob":
+            raise TypeError(f"{expr.var}.{expr.key} is not a BLOB property")
+        vals = np.asarray(col.values, np.int64)
+        return vals[ids]
+    if isinstance(expr, FuncCall):
+        tag = eval_expr(expr, b, ctx)
+        return np.full(_rows(b) or 1, tag[1], np.int64)
+    raise TypeError(f"cannot extract sub-property of {expr!r}")
+
+
+def eval_subprop(expr: SubProp, b: Bindings, ctx: ExecutionContext):
+    """φ(item, key, sub_key) with cache -> AIPM batch extraction."""
+    blob_ids = _blob_ids_for(expr.base, b, ctx)
+    sub_key = expr.sub_key
+    serial = ctx.registry.serial(sub_key)
+    missing: List[Tuple[int, np.ndarray]] = []
+    seen = set()
+    for bid in blob_ids:
+        bid = int(bid)
+        if bid < 0 or bid in seen:
+            continue
+        if ctx.cache.get(bid, sub_key, serial) is None:
+            raw = ctx.graph.blobs.as_array(bid)
+            missing.append((bid, raw))
+            seen.add(bid)
+    if missing:
+        extracted = ctx.aipm.extract_sync(sub_key, missing)
+        ctx.extract_count += len(missing)
+        for bid, vec in extracted.items():
+            ctx.cache.put(bid, sub_key, serial, vec)
+    out = [ctx.cache.get(int(bid), sub_key, serial) if bid >= 0 else None
+           for bid in blob_ids]
+    if out and isinstance(out[0], np.ndarray):
+        return np.stack([o if o is not None else np.zeros_like(out[0])
+                         for o in out])
+    return np.array(out, object)
+
+
+def _similarity(x, y) -> np.ndarray:
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float32)
+    if x.ndim == 1:
+        x = x[None]
+    if y.ndim == 1:
+        y = y[None]
+    if y.shape[0] == 1 and x.shape[0] > 1:
+        y = np.broadcast_to(y, x.shape)
+    if x.shape[0] == 1 and y.shape[0] > 1:
+        x = np.broadcast_to(x, y.shape)
+    num = np.sum(x * y, axis=-1)
+    den = np.linalg.norm(x, axis=-1) * np.linalg.norm(y, axis=-1)
+    return num / np.maximum(den, 1e-9)
+
+
+def eval_compare(expr: Compare, b: Bindings, ctx: ExecutionContext):
+    op = expr.op
+    if op in ("::", "~:", "!:"):
+        lx = _vector_side(expr.left, b, ctx)
+        rx = _vector_side(expr.right, b, ctx)
+        sim = _similarity(lx, rx)
+        if op == "::":
+            return sim
+        if op == "~:":
+            return sim >= SIM_THRESHOLD
+        return sim < SIM_THRESHOLD
+    if op in ("<:", ">:"):
+        lv = eval_expr(expr.left, b, ctx)
+        rv = eval_expr(expr.right, b, ctx)
+        if op == ">:":
+            lv, rv = rv, lv
+        return _contained_in(lv, rv, _rows(b))
+    lv = eval_expr(expr.left, b, ctx)
+    rv = eval_expr(expr.right, b, ctx)
+    n = _rows(b)
+    lv = _broadcast(lv, n)
+    rv = _broadcast(rv, n)
+    if op == "=":
+        return _eq(lv, rv)
+    if op == "<>":
+        return ~_eq(lv, rv)
+    lf = lv.astype(np.float64)
+    rf = rv.astype(np.float64)
+    if op == "<":
+        return lf < rf
+    if op == "<=":
+        return lf <= rf
+    if op == ">":
+        return lf > rf
+    if op == ">=":
+        return lf >= rf
+    if op == "CONTAINS":
+        return np.array([str(r) in str(l) for l, r in zip(lv, rv)])
+    raise KeyError(f"unknown comparison {op!r}")
+
+
+def _vector_side(expr: Any, b: Bindings, ctx: ExecutionContext):
+    if isinstance(expr, SubProp):
+        return eval_subprop(expr, b, ctx)
+    val = eval_expr(expr, b, ctx)
+    if isinstance(val, tuple) and val[0] == "__blob__":
+        raise TypeError("similarity against raw blob: wrap with ->subProperty")
+    return val
+
+
+def _contained_in(lv, rv, n: int) -> np.ndarray:
+    lv = _broadcast(np.asarray(lv, object), n)
+    rv = _broadcast(np.asarray(rv, object), n)
+    out = np.zeros(n, bool)
+    for i in range(n):
+        l, r = lv[i], rv[i]
+        if l is None or r is None:
+            continue
+        if isinstance(r, (list, tuple, set, np.ndarray)) and not isinstance(r, str):
+            out[i] = l in r
+        else:
+            out[i] = str(l) in str(r)
+    return out
+
+
+def _broadcast(v, n: int) -> np.ndarray:
+    if isinstance(v, np.ndarray) and v.ndim >= 1 and len(v) == n:
+        return v
+    if isinstance(v, np.ndarray) and v.ndim > 1:
+        return v
+    return np.array([v] * n, object)
+
+
+def _eq(lv: np.ndarray, rv: np.ndarray) -> np.ndarray:
+    out = np.zeros(len(lv), bool)
+    for i, (l, r) in enumerate(zip(lv, rv)):
+        if isinstance(l, float) and isinstance(r, (int, float)):
+            out[i] = abs(l - float(r)) < 1e-9
+        else:
+            out[i] = l == r
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vector-index pushdown
+# ---------------------------------------------------------------------------
+
+
+def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
+                        ctx: ExecutionContext) -> Optional[Bindings]:
+    pred = plan.predicate
+    if not isinstance(pred, Compare):
+        return None
+    if pred.op in ("=", "<", ">", "<=", ">="):
+        return _try_scalar_pushdown(pred, child, ctx)
+    if pred.op not in ("~:", "::"):
+        return None
+    # normalize: var-side on the left, literal/query side on the right
+    def side_info(e):
+        if isinstance(e, SubProp) and isinstance(e.base, Prop):
+            return ("var", e)
+        if isinstance(e, SubProp) and isinstance(e.base, FuncCall):
+            return ("query", e)
+        return (None, e)
+
+    lk, le = side_info(pred.left)
+    rk, re_ = side_info(pred.right)
+    if lk == "var" and rk == "query":
+        var_expr, query_expr = le, re_
+    elif rk == "var" and lk == "query":
+        var_expr, query_expr = re_, le
+    else:
+        return None
+    index = ctx.db.indexes.get(var_expr.sub_key)
+    if index is None or index.serial != ctx.registry.serial(var_expr.sub_key):
+        return None
+    if pred.op == "::":
+        return None  # raw similarity values requested; cannot prefilter
+    # extract the query vector (1 item), search the index
+    qvec = eval_subprop(query_expr, {v: a[:1] for v, a in child.items()}, ctx)
+    qvec = np.asarray(qvec, np.float32).reshape(1, -1)
+    k = min(max(64, len(child[var_expr.base.var]) // 10 + 1), len(index.ids))
+    vals, ids = index.search(qvec, k)
+    sim_ok = ids[0][vals[0] >= _index_threshold(index)]
+    ctx.index_hits += 1
+    # index returns *blob ids*; map rows whose blob id matched
+    col = ctx.graph.store.node_props.column(var_expr.base.key)
+    blob_vals = np.asarray(col.values, np.int64)[child[var_expr.base.var]]
+    keep = np.isin(blob_vals, sim_ok)
+    return {kk: vv[keep] for kk, vv in child.items()}
+
+
+def _try_scalar_pushdown(pred: Compare, child: Bindings,
+                         ctx: ExecutionContext) -> Optional[Bindings]:
+    """Numeric (B-tree) / inverted-index pushdown (paper §VI-B2): the query
+    plan generator pushes the semantic-information operator into the index
+    instead of extracting φ per row."""
+    from repro.core.scalar_index import InvertedIndex, NumericIndex
+
+    # normalize: SubProp(var.prop)->sk  <op>  Literal
+    left, right, op = pred.left, pred.right, pred.op
+    if isinstance(right, SubProp) and isinstance(left, Literal):
+        left, right = right, left
+        op = {"<": ">", ">": "<", "<=": ">=", ">=": "<="}.get(op, op)
+    if not (isinstance(left, SubProp) and isinstance(left.base, Prop)
+            and isinstance(right, Literal)):
+        return None
+    index = ctx.db.scalar_indexes.get(left.sub_key)
+    if index is None or index.serial != ctx.registry.serial(left.sub_key):
+        return None
+    val = right.value
+    if isinstance(index, NumericIndex):
+        if not isinstance(val, (int, float)):
+            return None
+        if op == "=":
+            ok_ids = index.eq(float(val))
+        elif op in ("<", "<="):
+            ok_ids = index.range(hi=float(val), inclusive=(op == "<="))
+        else:
+            ok_ids = index.range(lo=float(val), inclusive=(op == ">="))
+    elif isinstance(index, InvertedIndex):
+        if op != "=":
+            return None
+        ok_ids = index.lookup(str(val))
+    else:
+        return None
+    ctx.index_hits += 1
+    col = ctx.graph.store.node_props.column(left.base.key)
+    if col is None or col.kind != "blob":
+        return None
+    blob_vals = np.asarray(col.values, np.int64)[child[left.base.var]]
+    keep = np.isin(blob_vals, ok_ids)
+    return {k: v[keep] for k, v in child.items()}
+
+
+def _index_threshold(index) -> float:
+    if index.cfg.metric in ("cosine", "ip"):
+        return SIM_THRESHOLD
+    # l2 scores are negative squared distances; cosine-normalized vectors:
+    # |x-y|^2 = 2 - 2 cos  =>  cos >= t  <=>  -|x-y|^2 >= 2t - 2
+    return 2.0 * SIM_THRESHOLD - 2.0

@@ -1,0 +1,61 @@
+"""Semantic-information cache (paper §VI-B1, Fig 6).
+
+Key = (item id, sub-property key, model serial number).  One AI model == one
+semantic space; when the admin updates a model, its serial bumps and every
+cache entry built by older serials becomes invalid (checked lazily, purged
+eagerly on demand).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.configs.pandadb import CacheConfig
+
+Key = Tuple[int, str, int]
+
+
+class SemanticCache:
+    def __init__(self, cfg: Optional[CacheConfig] = None) -> None:
+        self.cfg = cfg or CacheConfig()
+        self._data: "OrderedDict[Key, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, item_id: int, sub_key: str, serial: int) -> Optional[Any]:
+        key = (item_id, sub_key, serial)
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        return None
+
+    def put(self, item_id: int, sub_key: str, serial: int, value: Any) -> None:
+        key = (item_id, sub_key, serial)
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.cfg.capacity_items:
+            self._data.popitem(last=False)
+
+    def invalidate_serial(self, sub_key: str, older_than: int) -> int:
+        """Purge entries for `sub_key` built by serials < `older_than`.
+        Returns the number of entries dropped (paper Fig 6: cache entries with
+        a stale serial are out of date)."""
+        stale = [k for k in self._data if k[1] == sub_key and k[2] < older_than]
+        for k in stale:
+            del self._data[k]
+        return len(stale)
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "entries": len(self._data),
+        }
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = self.misses = 0

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    ShardingRules,
+    logical_spec,
+    logical_sharding,
+    constrain,
+)

@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (t5x-style) mapping model axes -> mesh axes.
+
+Model code annotates arrays with *logical* axis names ("batch", "heads",
+"mlp", ...).  A :class:`ShardingRules` table maps each logical name to zero or
+more *physical* mesh axes.  The same model code then runs on the 1-device CPU
+smoke mesh, the 16x16 single-pod mesh, and the 2x16x16 multi-pod mesh purely
+by swapping rule tables.
+
+Physical axes:
+  * ``pod``   -- DP across pods (DCN crossing; gradient-compressed)
+  * ``data``  -- DP + FSDP + corpus/KV-sequence sharding within a pod
+  * ``model`` -- TP (heads / mlp / vocab) and EP (experts)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis name -> physical mesh axis (or tuple, or None)."""
+
+    rules: Dict[str, AxisVal]
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        """PartitionSpec for an array whose dims carry these logical names."""
+        out = []
+        seen: list = []
+        for ax in logical_axes:
+            phys = self.rules.get(ax) if ax is not None else None
+            # a physical axis may appear at most once in a PartitionSpec
+            if phys is not None:
+                flat = (phys,) if isinstance(phys, str) else tuple(phys)
+                flat = tuple(a for a in flat if a not in seen)
+                seen.extend(flat)
+                phys = flat if len(flat) > 1 else (flat[0] if flat else None)
+            out.append(phys)
+        # trailing Nones are implicit
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def with_overrides(self, **kw: AxisVal) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(kw)
+        return ShardingRules(new)
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def base_rules(mesh: Mesh, *, fsdp: bool = False) -> ShardingRules:
+    """Default rule table, adapted to whichever axes the mesh actually has."""
+    axes = _mesh_axes(mesh)
+    has = lambda a: a in axes and mesh.shape[a] > 1  # noqa: E731
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    data = "data" if has("data") else None
+    model = "model" if has("model") else None
+    rules: Dict[str, AxisVal] = {
+        # --- activations ---
+        "batch": batch_axes or None,
+        "seq": None,
+        "embed": None,             # activations keep d_model replicated (TP style)
+        "heads": model,
+        "kv_heads": model,
+        "head_dim": None,
+        "mlp": model,
+        "vocab": model,
+        "expert": model,
+        "kv_seq": None,            # overridden for decode shapes
+        "qk_lora": None,
+        # --- params ---
+        "p_embed": data if fsdp else None,   # FSDP axis on weight matrices
+        "p_vocab": model,
+        "p_heads": model,
+        "p_mlp": model,
+        "p_expert": model,
+        "p_kv_heads": model,
+        "layers": None,
+        # --- pandadb / gnn / recsys ---
+        "corpus": (tuple(a for a in ("data", "model") if has(a)) or None),
+        "edge": data,
+        "node": None,
+        "feat": None,
+        "table_row": (tuple(a for a in ("data", "model") if has(a)) or None),
+        "candidate": (tuple(a for a in ("data", "model") if has(a)) or None),
+        "field": None,
+    }
+    return ShardingRules(rules)
+
+
+def decode_rules(mesh: Mesh, *, shard_seq_over_data: bool = False,
+                 fsdp: bool = False) -> ShardingRules:
+    """Decode shapes: KV cache sequence-sharded.
+
+    ``shard_seq_over_data=True`` (long_500k, batch=1): the batch axis cannot
+    use ``data``, so the KV sequence takes both ``data`` and ``model``.
+    """
+    r = base_rules(mesh, fsdp=fsdp)
+    axes = _mesh_axes(mesh)
+    has = lambda a: a in axes and mesh.shape[a] > 1  # noqa: E731
+    if shard_seq_over_data:
+        kv_seq = tuple(a for a in ("data", "model") if has(a)) or None
+        batch = ("pod",) if "pod" in axes and mesh.shape["pod"] > 1 else None
+        # attention heads cannot also be sharded over model: keep heads local
+        return r.with_overrides(kv_seq=kv_seq, batch=batch, heads=None,
+                                kv_heads=None)
+    kv_seq = "model" if has("model") else None
+    return r.with_overrides(kv_seq=kv_seq, heads=None, kv_heads=None)
+
+
+LOGICAL_RULES = base_rules  # legacy alias
+
+
+def logical_spec(rules: ShardingRules, *axes: Optional[str]) -> P:
+    return rules.spec(*axes)
+
+
+def logical_sharding(mesh: Mesh, rules: ShardingRules,
+                     *axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(*axes))
+
+
+def constrain(x: jax.Array, rules: ShardingRules, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*axes))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, spec_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec(*(axes or ()))),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )

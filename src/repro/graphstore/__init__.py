@@ -1,0 +1,3 @@
+from repro.graphstore.stores import GraphStore, LabelRegistry, PropertyStore, RelationshipStore  # noqa: F401
+from repro.graphstore.blob import Blob, BlobStore, BlobValueManager  # noqa: F401
+from repro.graphstore.wal import WriteAheadLog  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel ships three files:
+  <name>.py -- pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd wrapper with XLA fallback (CPU / dry-run path)
+  ref.py    -- pure-jnp oracle used by the allclose test sweeps
+"""

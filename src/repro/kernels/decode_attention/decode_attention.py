@@ -1,0 +1,116 @@
+"""Flash-decoding Pallas kernel (TPU): split-K single-token attention.
+
+The KV cache is read exactly once, in ``block_s`` tiles; the grid splits the
+sequence so independent cores stream disjoint KV ranges (split-K).  Each
+split emits a partial (max, sumexp, acc); a tiny jnp epilogue combines them
+-- identical math to a sequence-sharded decode where GSPMD psums partials
+(this kernel is the single-chip version of that collective schedule).
+
+Layout: q [B, KVH, G, D] grouped; caches [B, S, KVH, D].  Grid:
+(B*KVH, n_splits); within a split a fori over block_s tiles runs the online
+softmax in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
+                   block_s: int, split: int, scale: float):
+    # shapes: q [1, G, D]; k/v [1, split, D]; outs m/l [1, G], acc [1, G, D]
+    q = q_ref[0].astype(jnp.float32) * scale            # [G, D]
+    s_i = pl.program_id(1)
+    pos = pos_ref[0]
+    n_blocks = split // block_s
+
+    def body(i, carry):
+        m, l, acc = carry
+        k_blk = k_ref[0, pl.dslice(i * block_s, block_s), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.dslice(i * block_s, block_s), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, bs]
+        k_pos = s_i * split + i * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= pos, s, NEG)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    g, d = q.shape
+    m0 = jnp.full((g,), NEG, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    acc_ref[0, 0] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_splits", "block_s", "interpret"))
+def decode_attention_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, pos: jnp.ndarray,
+                            n_splits: int = 8, block_s: int = 512,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q [B,1,H,D]; caches [B,S,KVH,D]; pos [B] -> [B,1,H,D]."""
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    if s % (n_splits * block_s) != 0:
+        n_splits = 1
+        block_s = min(block_s, s)
+    assert s % (n_splits * block_s) == 0, (s, n_splits, block_s)
+    split = s // n_splits
+    scale = d ** -0.5
+
+    qg = q.reshape(b, 1, kvh, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b * kvh, g, d)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    pos_rep = jnp.repeat(pos.astype(jnp.int32), kvh)        # [B*KVH]
+
+    kernel = functools.partial(_decode_kernel, block_s=block_s, split=split,
+                               scale=scale)
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, n_splits),
+        in_specs=[
+            pl.BlockSpec((1,), lambda gidx, si: (gidx,)),
+            pl.BlockSpec((1, g, d), lambda gidx, si: (gidx, 0, 0)),
+            pl.BlockSpec((1, split, d), lambda gidx, si: (gidx, si, 0)),
+            pl.BlockSpec((1, split, d), lambda gidx, si: (gidx, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g), lambda gidx, si: (gidx, si, 0)),
+            pl.BlockSpec((1, 1, g), lambda gidx, si: (gidx, si, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda gidx, si: (gidx, si, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * kvh, n_splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((b * kvh, n_splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((b * kvh, n_splits, g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_rep, qg, kf, vf)
+
+    # combine partials across splits (tiny epilogue)
+    m_glob = jnp.max(m, axis=1)                              # [BK, G]
+    w = jnp.exp(m - m_glob[:, None])                         # [BK, S, G]
+    l_glob = jnp.sum(l * w, axis=1)
+    out = jnp.sum(acc * w[..., None], axis=1) / \
+        jnp.maximum(l_glob, 1e-30)[..., None]
+    return out.reshape(b, kvh, g, d).reshape(b, 1, kvh * g, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Dispatching wrapper: Pallas flash-decoding on TPU, grouped jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention_kernel(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, pos: jnp.ndarray,
+                            n_splits: int = 8, block_s: int = 512,
+                            force_pallas: bool = False) -> jnp.ndarray:
+    if force_pallas or _on_tpu():
+        return decode_attention_pallas(q, k_cache, v_cache, pos,
+                                       n_splits=n_splits, block_s=block_s,
+                                       interpret=not _on_tpu())
+    return decode_attention_ref(q, k_cache, v_cache, pos)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: single-token GQA decode over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, pos: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """q [B, 1, H, D]; caches [B, S, KVH, D]; pos [B] -> [B, 1, H, D]."""
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return ctx.reshape(b, 1, h, d).astype(q.dtype)

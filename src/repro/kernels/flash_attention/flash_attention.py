@@ -1,0 +1,108 @@
+"""FlashAttention Pallas kernel (TPU): blocked online-softmax, causal.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks) -- kv innermost, so the (m, l,
+acc) scratch carries across kv iterations for one q block (TPU grids execute
+minor-most sequentially on the same core).  Causal blocks above the diagonal
+are skipped arithmetically (fully-masked tiles contribute nothing and the
+mask keeps the online max stable).
+
+VMEM per step (block_q=block_kv=512, d=128, fp32):
+  q 512x128 + k/v 512x128 + scores 512x512 + acc 512x128  ~= 2.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_kv: int, causal: bool,
+                  n_kv: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_i = pl.program_id(1)
+    run = True
+    if causal:
+        # kv block strictly above the causal diagonal: skip
+        run = (kv_i * block_kv) <= (q_i * block_q + block_q - 1)
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bkv, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = q_i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            k_pos = kv_i * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG)
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, block_q: int = 512,
+                           block_kv: int = 512, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """q,k,v: [B, S, H, D] -> [B, S, H, D].  S % block == 0."""
+    b, s, h, d = q.shape
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0
+    scale = d ** -0.5
+    # fold batch x heads into the leading grid dim: [B*H, S, D]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    n_q, n_kv = s // block_q, s // block_kv
+
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                               block_kv=block_kv, causal=causal, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, chunked-jnp elsewhere.
+
+GQA is handled above the kernel (repeat_kv before the call) so the kernel
+stays a pure same-head-count attention primitive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512, force_pallas: bool = False
+                    ) -> jnp.ndarray:
+    s = q.shape[1]
+    usable = s % min(block_q, s) == 0 and s % min(block_kv, s) == 0
+    if (force_pallas or _on_tpu()) and usable:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      block_q=block_q, block_kv=block_kv,
+                                      interpret=not _on_tpu())
+    from repro.models.attention import chunked_attention
+    return chunked_attention(q, k, v, causal=causal,
+                             block_kv=min(block_kv, s))

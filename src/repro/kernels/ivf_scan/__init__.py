@@ -1,0 +1,1 @@
+from repro.kernels.ivf_scan.ops import ivf_scan_topk  # noqa: F401

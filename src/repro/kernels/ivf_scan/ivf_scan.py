@@ -1,0 +1,87 @@
+"""IVF scan Pallas kernel: fused similarity + per-tile top-L (TPU).
+
+The paper's kNN hot loop (§VI-B2 / Appendix C) re-blocked for the MXU:
+corpus tiles stream HBM -> VMEM; each grid step computes a [Q, BN] score
+tile with one MXU matmul (L2 via the ||q||^2 - 2qc + ||c||^2 identity, norms
+fused), then keeps the tile-local top-L via L vectorized max/mask sweeps --
+no data-dependent control flow, no cross-tile traffic.  A tiny jnp epilogue
+merges the [n_tiles, L] partials (exactly the TPU-KNN two-phase shape).
+
+VMEM working set per grid step (defaults Q<=128, BN=512, d<=256, fp32):
+  q 128x256 (128 kB) + tile 512x256 (512 kB) + scores 128x512 (256 kB)
+  + out tiles  -> well under the ~16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+
+
+def _ivf_kernel(q_ref, c_ref, c2_ref, vals_ref, idx_ref, *, metric: str,
+                topl: int, block_n: int):
+    qf = q_ref[...].astype(jnp.float32)            # [Q, d]
+    cf = c_ref[...].astype(jnp.float32)            # [BN, d]
+    s = jax.lax.dot_general(qf, cf, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Q, BN]
+    if metric == "l2":
+        q2 = jnp.sum(qf * qf, axis=-1, keepdims=True)
+        s = -(q2 - 2.0 * s + c2_ref[...][None, :])
+    # tile-local top-L via repeated max-extract (vectorized, L small)
+    base = pl.program_id(0) * block_n
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    for l in range(topl):
+        m = jnp.max(s, axis=-1)                                   # [Q]
+        a = jnp.argmax(s, axis=-1).astype(jnp.int32)              # [Q]
+        vals_ref[:, l] = m
+        idx_ref[:, l] = a + base
+        s = jnp.where(cols == a[:, None], NEG, s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "block_n", "interpret"))
+def ivf_scan_topk_pallas(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
+                         metric: str = "l2", block_n: int = 512,
+                         interpret: bool = True
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[Q, d] x [N, d] -> (vals [Q, k], ids [Q, k]); N % block_n == 0."""
+    qn, d = q.shape
+    n = corpus.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        corpus = corpus / jnp.maximum(
+            jnp.linalg.norm(corpus, axis=-1, keepdims=True), 1e-9)
+        metric = "ip"
+    c2 = jnp.sum(corpus.astype(jnp.float32) ** 2, axis=-1)
+
+    kernel = functools.partial(_ivf_kernel, metric=metric, topl=k,
+                               block_n=block_n)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda i: (0, 0)),        # q: resident
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # corpus tile
+            pl.BlockSpec((block_n,), lambda i: (i,)),       # ||c||^2 tile
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, k), lambda i: (0, i)),        # per-tile topL
+            pl.BlockSpec((qn, k), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, n_tiles * k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, n_tiles * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, corpus, c2)
+
+    # epilogue: merge per-tile partials (tiny)
+    mv, mi = jax.lax.top_k(vals, k)
+    return mv, jnp.take_along_axis(idx, mi, axis=1)

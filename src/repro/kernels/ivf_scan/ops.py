@@ -1,0 +1,36 @@
+"""Dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere.
+
+The kernel path is exact for any k (per-tile top-k >= global contribution of
+that tile), so parity with ref.py is bitwise up to fp32 reduction order.
+Large k (> 64) falls back to the XLA path: the L max-extract sweeps stop
+paying for themselves.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_scan.ivf_scan import ivf_scan_topk_pallas
+from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+
+_KERNEL_MAX_K = 64
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ivf_scan_topk(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
+                  metric: str = "l2", block_n: int = 512,
+                  force_pallas: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = corpus.shape[0]
+    use_kernel = (force_pallas or _on_tpu()) and k <= _KERNEL_MAX_K \
+        and n % block_n == 0 and n >= block_n
+    if use_kernel:
+        return ivf_scan_topk_pallas(q, corpus, k, metric=metric,
+                                    block_n=block_n,
+                                    interpret=not _on_tpu())
+    return ivf_scan_topk_ref(q, corpus, k, metric)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the IVF scan kernel: exact fused distance + top-k."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scores_ref(q: jnp.ndarray, corpus: jnp.ndarray, metric: str
+               ) -> jnp.ndarray:
+    qf = q.astype(jnp.float32)
+    cf = corpus.astype(jnp.float32)
+    if metric == "ip":
+        return qf @ cf.T
+    if metric == "cosine":
+        qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-9)
+        cn = cf / jnp.maximum(jnp.linalg.norm(cf, axis=-1, keepdims=True), 1e-9)
+        return qn @ cn.T
+    q2 = jnp.sum(qf * qf, axis=-1, keepdims=True)
+    c2 = jnp.sum(cf * cf, axis=-1)
+    return -(q2 - 2.0 * (qf @ cf.T) + c2[None, :])
+
+
+def ivf_scan_topk_ref(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
+                      metric: str = "l2") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[Q, d] x [N, d] -> (scores [Q, k], indices [Q, k]), higher = closer."""
+    s = scores_ref(q, corpus, metric)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)

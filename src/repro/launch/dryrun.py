@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory / cost / collective analysis for §Roofline.
+
+MUST keep the two lines above first: jax locks the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+Results are one JSON per cell; existing files are skipped (resumable).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import all_cells, get_arch
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.steps import build_step
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(match) -> int:
+    dt, dims = match.group(1), match.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of collective ops, scaling ops inside while-loops by
+    their trip count (scan-over-layers!).  Best-effort static analysis."""
+    # split into computations
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->", line.strip())
+        if m and ("{" in line or line.strip().endswith("{")):
+            if cur_name:
+                comps[cur_name] = cur_lines
+            cur_name, cur_lines = m.group(1), []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name:
+        comps[cur_name] = cur_lines
+
+    # collective bytes + counts per computation
+    per_comp = {}
+    for name, lines in comps.items():
+        by_op = {}
+        for line in lines:
+            for op in _COLLECTIVES:
+                if re.search(rf"= .*\b{op}(-start|-done)?\(", line):
+                    if f"{op}-done" in line:
+                        continue  # avoid double count of async pairs
+                    b = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(
+                        line.split("=", 1)[1].split(f"{op}", 1)[0]))
+                    cnt, tot = by_op.get(op, (0, 0))
+                    by_op[op] = (cnt + 1, tot + b)
+                    break
+        per_comp[name] = by_op
+
+    # while-loop trip counts: body/condition linkage
+    whiles = []  # (body_name, cond_name, parent)
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)", line)
+            if not m:
+                m2c = re.search(r"condition=%?([\w\.\-]+)", line)
+                m2b = re.search(r"body=%?([\w\.\-]+)", line)
+                if "while(" in line and m2c and m2b:
+                    whiles.append((m2b.group(1), m2c.group(1), name))
+                continue
+            whiles.append((m.group(2), m.group(1), name))
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = []
+        for line in lines:
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+    # attribute body-computation collectives (and anything they call) scaled
+    multiplier = {name: 1 for name in comps}
+    for body, cond, _parent in whiles:
+        t = trip_count(cond)
+        if body in multiplier:
+            multiplier[body] = max(multiplier[body], t)
+    # propagate one level into called computations (fusion/remat wrappers)
+    call_re = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+    for name, lines in comps.items():
+        mult = multiplier.get(name, 1)
+        if mult <= 1:
+            continue
+        for line in lines:
+            for m in call_re.finditer(line):
+                callee = m.group(1)
+                if callee in multiplier:
+                    multiplier[callee] = max(multiplier[callee], mult)
+
+    total = {op: [0, 0] for op in _COLLECTIVES}
+    for name, by_op in per_comp.items():
+        mult = multiplier.get(name, 1)
+        for op, (cnt, b) in by_op.items():
+            total[op][0] += cnt * mult
+            total[op][1] += b * mult
+    out = {op: {"count": c, "bytes": b} for op, (c, b) in total.items() if c}
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if k in _COLLECTIVES)
+    return out
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode D=batch tokens."""
+    spec = get_arch(arch)
+    if spec.family != "lm":
+        return 0.0
+    cfg = spec.model
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    shape = spec.shape(shape_name)
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    bundle = build_step(arch, shape_name, mesh)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate_argnums,
+        )
+        lowered = jitted.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # NOTE: cost_analysis() counts while (scan) bodies once; `analyze` applies
+    # trip-count multipliers -- see launch/hlo_analysis.py.
+    an = analyze(hlo).as_dict()
+
+    flops_dev = float(an["flops"])
+    bytes_dev = float(an["bytes_accessed"])
+    coll_bytes_dev = float(an["collective_bytes"])
+    compute_s = flops_dev / HW["peak_flops_bf16"]
+    memory_s = bytes_dev / HW["hbm_bw"]
+    collective_s = coll_bytes_dev / HW["ici_bw"]
+    mflops = model_flops(arch, shape_name)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": n_chips,
+        "kind": bundle.meta.get("kind"),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            k: getattr(mem, k, None) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        } if mem is not None else None,
+        "cost_xla_raw": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                                  "transcendentals")},
+        "collectives": an["collectives"],
+        "n_while": an["n_while"],
+        "trip_counts": an["trip_counts"],
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)], key=lambda kv: kv[1])[0],
+            "model_flops_total": mflops,
+            "hlo_flops_total": flops_dev * n_chips,
+            "useful_flops_ratio": (mflops / (flops_dev * n_chips)
+                                   if flops_dev else None),
+        },
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            path = out_dir / f"{tag}.json"
+            if path.exists() and not args.force:
+                n_skip += 1
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                res = run_cell(arch, shape, multi)
+                path.write_text(json.dumps(res, indent=1))
+                r = res["roofline"]
+                print(f"[dryrun] {tag} OK compile={res['compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"compute={r['compute_s']:.4g}s mem={r['memory_s']:.4g}s "
+                      f"coll={r['collective_s']:.4g}s", flush=True)
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001
+                n_fail += 1
+                err = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if multi else "single",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                (out_dir / f"{tag}.FAILED.json").write_text(json.dumps(err, indent=1))
+                print(f"[dryrun] {tag} FAILED: {type(e).__name__}: {str(e)[:200]}",
+                      flush=True)
+    print(f"[dryrun] done ok={n_ok} fail={n_fail} skip={n_skip}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""GNN step bundles: every GNN shape reduces to one edge-list training step.
+
+  * full_graph / full-batch-large : (feats, [pos], src, dst, mask, labels)
+  * minibatch                     : the sampled block-graph (same layout;
+                                    loss only on the first `batch_nodes` seeds)
+  * molecule (batched)            : graphs flattened with offsets + graph_ids,
+                                    MSE on a mean-readout target
+
+Padding: node/edge counts are padded up so every sharded dim divides the
+mesh (recorded in `meta`); padded edges carry mask=False.  Geometric models
+(SchNet / Equiformer) receive positions; on non-molecular graphs these are
+synthetic coordinates (documented in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec
+from repro.configs.base import GraphShape
+from repro.distributed.sharding import ShardingRules, base_rules, tree_shardings
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, opt_state_axes
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def gnn_rules(mesh: Mesh, *, shard_nodes: bool, channel_shard: bool
+              ) -> ShardingRules:
+    r = base_rules(mesh)
+    has = lambda a: a in mesh.axis_names and mesh.shape[a] > 1  # noqa: E731
+    over: Dict[str, Any] = {
+        "edge": "data" if has("data") else None,
+        "node": (tuple(a for a in ("data", "model") if has(a)) or None)
+        if shard_nodes else None,
+        "channel": ("model" if (channel_shard and has("model")) else None),
+        "channel_out": None,
+        "graph": (tuple(a for a in ("pod", "data") if has(a)) or None),
+    }
+    return r.with_overrides(**over)
+
+
+@dataclasses.dataclass
+class GNNCell:
+    n_nodes: int
+    n_edges: int
+    d_feat: int
+    n_out: int
+    needs_pos: bool
+    shard_nodes: bool
+    channel_shard: bool
+    chunk: Optional[int]
+    graph_level: bool = False
+    n_graphs: int = 0
+    seeds: int = 0                      # minibatch: loss on first `seeds` nodes
+
+
+def cell_of(spec: ArchSpec, shape: GraphShape, mesh: Mesh) -> GNNCell:
+    cfg = spec.model
+    kind = cfg.kind
+    needs_pos = kind in ("schnet", "equiformer_v2")
+    big = shape.n_nodes > 500_000
+    d_shard = max(
+        (mesh.shape["data"] if "data" in mesh.axis_names else 1), 1)
+    total = mesh.size
+
+    if shape.kind == "batched":      # molecule
+        g = shape.batch_graphs
+        n_nodes = g * shape.n_nodes
+        n_edges = _pad_to(g * shape.n_edges, 512)
+        return GNNCell(n_nodes=n_nodes, n_edges=n_edges, d_feat=100,
+                       n_out=1, needs_pos=needs_pos, shard_nodes=False,
+                       channel_shard=(kind == "equiformer_v2"), chunk=None,
+                       graph_level=True, n_graphs=g)
+    if shape.kind == "minibatch":
+        b = shape.batch_nodes
+        f1, f2 = shape.fanout
+        n_nodes = b * (1 + f1 + f1 * f2)
+        n_edges = b * f1 + b * f1 * f2
+        chunk = None
+        if kind == "equiformer_v2":
+            chunk = _pick_chunk(n_edges, d_shard)
+        return GNNCell(n_nodes=_pad_to(n_nodes, 512),
+                       n_edges=_pad_to(n_edges, 512 if chunk is None else chunk),
+                       d_feat=shape.d_feat, n_out=spec.model.n_classes,
+                       needs_pos=needs_pos, shard_nodes=False,
+                       channel_shard=(kind == "equiformer_v2"),
+                       chunk=chunk, seeds=b)
+    # full graph
+    chunk = None
+    if kind == "equiformer_v2" and shape.n_edges > 1_000_000:
+        chunk = _pick_chunk(shape.n_edges, d_shard)
+    n_edges = _pad_to(shape.n_edges, 512 if chunk is None else chunk)
+    shard_nodes = big and kind != "equiformer_v2"
+    return GNNCell(
+        n_nodes=_pad_to(shape.n_nodes, total * 2) if shard_nodes else shape.n_nodes,
+        n_edges=n_edges, d_feat=shape.d_feat, n_out=spec.model.n_classes,
+        needs_pos=needs_pos, shard_nodes=shard_nodes,
+        channel_shard=(kind == "equiformer_v2"), chunk=chunk)
+
+
+def _pick_chunk(n_edges: int, d_shard: int) -> int:
+    """Chunk divisible by the data axis; ~32k edges per chunk."""
+    base = 32_768
+    while base % d_shard:
+        base *= 2
+    return base
+
+
+def gnn_bundle(spec: ArchSpec, shape: GraphShape, mesh: Mesh,
+               rule_overrides: Optional[Dict[str, Any]] = None):
+    from repro.launch.steps import StepBundle  # local import to avoid cycle
+
+    cfg = spec.model
+    model = build_model(cfg)
+    cell = cell_of(spec, shape, mesh)
+    rules = gnn_rules(mesh, shard_nodes=cell.shard_nodes,
+                      channel_shard=cell.channel_shard)
+    if rule_overrides:
+        rules = rules.with_overrides(**rule_overrides)
+
+    feat_dtype = jnp.bfloat16 if cell.n_nodes > 500_000 else jnp.float32
+    p_abs = jax.eval_shape(
+        lambda k: model.init(k, cell.d_feat, cell.n_out), jax.random.key(0))
+    p_axes = model.param_axes()
+    p_shard = tree_shardings(mesh, rules, p_axes)
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    o_abs = jax.eval_shape(init_opt_state, p_abs)
+    o_shard = tree_shardings(mesh, rules, opt_state_axes(p_axes))
+
+    n, e = cell.n_nodes, cell.n_edges
+    batch_abs: Dict[str, Any] = {
+        "feats": jax.ShapeDtypeStruct((n, cell.d_feat), feat_dtype),
+        "src": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), jnp.bool_),
+    }
+    batch_sh: Dict[str, Any] = {
+        "feats": NamedSharding(mesh, rules.spec("node", None)),
+        "src": NamedSharding(mesh, rules.spec("edge")),
+        "dst": NamedSharding(mesh, rules.spec("edge")),
+        "edge_mask": NamedSharding(mesh, rules.spec("edge")),
+    }
+    if cell.needs_pos:
+        batch_abs["pos"] = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+        batch_sh["pos"] = NamedSharding(mesh, rules.spec("node", None))
+    if cell.graph_level:
+        batch_abs["graph_ids"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+        batch_abs["target"] = jax.ShapeDtypeStruct((cell.n_graphs,), jnp.float32)
+        batch_sh["graph_ids"] = NamedSharding(mesh, rules.spec("node"))
+        batch_sh["target"] = NamedSharding(mesh, rules.spec(None))
+    else:
+        batch_abs["labels"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+        batch_sh["labels"] = NamedSharding(mesh, rules.spec("node"))
+
+    compute_dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+
+    def loss_fn(params, batch):
+        pos = batch.get("pos", jnp.zeros((n, 3), jnp.float32))
+        logits = model.node_logits(
+            params, batch["feats"].astype(compute_dtype), pos,
+            batch["src"], batch["dst"],
+            batch["edge_mask"].astype(jnp.float32), n,
+            **({"chunk": cell.chunk} if cell.chunk else {}))
+        if cell.graph_level:
+            num = jax.ops.segment_sum(logits[:, 0], batch["graph_ids"],
+                                      cell.n_graphs)
+            cnt = jax.ops.segment_sum(jnp.ones(n), batch["graph_ids"],
+                                      cell.n_graphs)
+            pred = num / jnp.maximum(cnt, 1.0)
+            return jnp.mean(jnp.square(pred - batch["target"])), pred
+        labels = batch["labels"]
+        valid = labels >= 0
+        if cell.seeds:
+            valid = valid & (jnp.arange(n) < cell.seeds)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+        ce = jnp.where(valid, lse - ll, 0.0)
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(valid), 1.0), lse
+
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    met_sh = {"loss": NamedSharding(mesh, P()),
+              "grad_norm": NamedSharding(mesh, P()),
+              "lr": NamedSharding(mesh, P())}
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(p_abs, o_abs, batch_abs),
+        in_shardings=(p_shard, o_shard, batch_sh),
+        out_shardings=(p_shard, o_shard, met_sh),
+        rules=rules,
+        donate_argnums=(0, 1),
+        meta={"kind": "gnn_train", "cell": dataclasses.asdict(cell)},
+    )

@@ -1,0 +1,167 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration runner (§Perf): lower + compile a cell VARIANT, print the
+roofline terms + top contributors, persist to results/perf/.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch llama3-8b --shape train_4k \
+      --variant baseline
+  PYTHONPATH=src python -m repro.launch.perf --list
+
+Variants are (rule_overrides, cfg_overrides) pairs registered per cell below;
+each corresponds to one hypothesis in EXPERIMENTS.md §Perf.
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.steps import build_step
+
+# ---------------------------------------------------------------------------
+# variant registry: cell -> name -> dict(rules=..., cfg=...)
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    ("llama3-8b", "train_4k"): {
+        "baseline": {},
+        # H1: pure FSDP -- fold the model axis into data-parallel batch,
+        # shard params over BOTH axes; kills the Megatron activation
+        # all-reduces entirely.
+        "fsdp_only": {"rules": {
+            "batch": ("data", "model"),
+            "heads": None, "mlp": None, "vocab": None, "kv_heads": None,
+            "p_heads": "model", "p_mlp": "model", "p_vocab": "model",
+            "p_kv_heads": None,      # kv=8 < model axis: data-shard via d only
+        }},
+        # H2: fewer microbatches (fewer FSDP regathers, more activation mem)
+        "accum2": {"cfg": {"grad_accum": 2}},
+        # H3: larger attention KV blocks (fewer score-chain materializations)
+        "blk4096": {"cfg": {"attn_block_kv": 4096}},
+        # H4: fused rmsnorm (no fp32 materialization)
+        "fused_norm": {"cfg": {"fused_norm": True}},
+        # H5: bf16 softmax weights
+        "bf16_probs": {"cfg": {"bf16_probs": True}},
+        # H6b: fsdp with accum=1 (microbatch must cover the full mesh)
+        "fsdp_accum1": {"rules": {
+            "batch": ("data", "model"),
+            "heads": None, "mlp": None, "vocab": None, "kv_heads": None,
+            "p_heads": "model", "p_mlp": "model", "p_vocab": "model",
+            "p_kv_heads": None},
+            "cfg": {"grad_accum": 1, "attn_block_kv": 4096,
+                    "fused_norm": True}},
+        # H7: fsdp_accum1 + bf16 softmax weights (single-block: no rescale)
+        "combo": {"rules": {
+            "batch": ("data", "model"),
+            "heads": None, "mlp": None, "vocab": None, "kv_heads": None,
+            "p_heads": "model", "p_mlp": "model", "p_vocab": "model",
+            "p_kv_heads": None},
+            "cfg": {"grad_accum": 1, "attn_block_kv": 4096,
+                    "fused_norm": True, "bf16_probs": True}},
+    },
+    ("deepseek-v2-236b", "train_4k"): {
+        "baseline": {},
+        "accum8": {"cfg": {"grad_accum": 8}},
+        "accum32": {"cfg": {"grad_accum": 32}},
+        # EP-heavy: keep experts on model axis but stop sharding attn heads
+        # (MLA latent is small; replicating attention kills its all-reduces)
+        "ep_only_attn_replicated": {"rules": {
+            "heads": None, "p_heads": None, "mlp": None, "vocab": None}},
+        # capacity factor reduction (less dispatch padding)
+        "cap1": {"cfg": {"capacity_factor": 1.0}},
+        "fused_norm": {"cfg": {"fused_norm": True}},
+        "blk4096": {"cfg": {"attn_block_kv": 4096}},
+        "combo": {"cfg": {"fused_norm": True, "grad_accum": 8,
+                          "attn_block_kv": 4096}},
+        # H8: vmapped combine scatter (batch-local; code change) + winners
+        "vmap_combine": {"cfg": {"attn_block_kv": 4096,
+                                 "capacity_factor": 1.0}},
+    },
+    ("equiformer-v2", "ogb_products"): {
+        # NOTE: "baseline" now includes the SH-row fast-logits pass-1 (code
+        # change); the pre-change baseline is the dry-run JSON.  Name it
+        # explicitly for the §Perf log.
+        "baseline": {},
+        "fast_logits": {},
+        "fast_logits_remat": {},
+        "rowln_stopgrad": {},
+        "custom_vjp": {},
+        "custom_vjp_rows": {},
+        "pin_channel": {},
+        "custom_vjp_bf16": {"cfg": {"dtype": "bfloat16"}},
+        # bf16 irrep features end-to-end + remat
+        "bf16_remat": {"cfg": {"dtype": "bfloat16"}},
+    },
+    ("autoint", "retrieval_cand"): {
+        "baseline": {},
+        # score in bf16 (candidates are the dominant read)
+        "bf16_cands": {"flags": {"bf16_cands": True}},
+    },
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, multi_pod: bool = False,
+                out_dir: str = "results/perf") -> dict:
+    spec = VARIANTS.get((arch, shape), {"baseline": {}})
+    v = spec[variant]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    bundle = build_step(arch, shape, mesh, rule_overrides=v.get("rules"),
+                        cfg_overrides=v.get("cfg"))
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(
+            bundle.fn, in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate_argnums,
+        ).lower(*bundle.abstract_args).compile()
+    an = analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    d = an.as_dict()
+    res = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "compile_s": round(time.time() - t0, 1),
+        "compute_s": an.flops / HW["peak_flops_bf16"],
+        "memory_s": an.bytes_accessed / HW["hbm_bw"],
+        "collective_s": an.collective_bytes / HW["ici_bw"],
+        "temp_gb": (mem.temp_size_in_bytes / 1e9) if mem else None,
+        "top_bytes": d["top_bytes"],
+        "top_flops": d["top_flops"][:6],
+        "top_collectives": d["top_collectives"],
+        "trip_counts": d["trip_counts"],
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{arch}__{shape}__{variant}.json").write_text(
+        json.dumps(res, indent=1))
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for (a, s), vs in VARIANTS.items():
+            print(f"{a} x {s}: {sorted(vs)}")
+        return
+    res = run_variant(args.arch, args.shape, args.variant)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("top_bytes", "top_flops",
+                                   "top_collectives")}, indent=1))
+    print("--- top bytes ---")
+    for k, v in res["top_bytes"]:
+        print(f"  {v / 1e9:10.1f} GB  {k}")
+    print("--- top collectives ---")
+    for k, v in res["top_collectives"]:
+        print(f"  {v / 1e9:10.1f} GB  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving launcher: stand up a PandaDB with extractors + index and serve a
+mixed CypherPlus workload (Fig 8's harness as a CLI).
+
+  PYTHONPATH=src python -m repro.launch.serve --persons 200 --clients 8
+"""
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.pandadb import PandaDBConfig, VectorIndexConfig
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor, label_extractor
+from repro.data.synthetic_graph import SNBConfig, build_snb
+from repro.serving.engine import QueryServer
+
+
+def build_db(n_persons: int) -> PandaDB:
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=64))
+    db.register_extractor("animal", label_extractor(["cat", "dog", "bird"]))
+    build_snb(db, SNBConfig(n_persons=n_persons,
+                            n_identities=max(2, n_persons // 3)))
+    db.build_index("face", "photo")
+    return db
+
+
+QUERIES = [
+    "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name='person_3' RETURN t.name",
+    "MATCH (n:Person) WHERE n.age > 40 RETURN n.name LIMIT 5",
+    "MATCH (n:Person)-[:knows]->(m:Person) WHERE n.name='person_1' RETURN m.name",
+    "MATCH (n:Person), (m:Person) WHERE n.name='person_2' "
+    "AND n.photo->face ~: m.photo->face RETURN m.name",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--persons", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args()
+
+    db = build_db(args.persons)
+    server = QueryServer(db, n_workers=args.workers)
+    stats = server.run_closed_loop(QUERIES, n_clients=args.clients,
+                                   duration_s=args.duration)
+    print(json.dumps(stats.summary(), indent=1))
+    print("cache:", db.cache.stats())
+
+
+if __name__ == "__main__":
+    main()

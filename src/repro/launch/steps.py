@@ -1,0 +1,233 @@
+"""Step builders: (arch x shape x mesh) -> jit-able fn + abstract inputs + shardings.
+
+Used by the dry-run, the trainer and the server.  Everything here is
+allocation-free: inputs are ShapeDtypeStructs (params via ``jax.eval_shape``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, get_arch
+from repro.configs.base import GraphShape, LMShape, RecsysShape
+from repro.distributed.sharding import (
+    ShardingRules,
+    base_rules,
+    decode_rules,
+    tree_shardings,
+)
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, opt_state_axes
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch x shape) cell on a mesh."""
+
+    fn: Callable                       # positional-arg step function
+    abstract_args: Tuple[Any, ...]     # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    rules: ShardingRules
+    donate_argnums: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _ns(mesh, rules, *axes):
+    return NamedSharding(mesh, rules.spec(*axes))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def lm_rules(cfg, shape: LMShape, mesh: Mesh) -> ShardingRules:
+    """Config-aware rules: jit in_shardings require divisible dims, so any
+    param axis that does not divide evenly falls back to replicated (the
+    *activation* constraint can still use uneven GSPMD padding)."""
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    psize = _axis_size(mesh, "pod")
+    heads_ok = cfg.n_heads % msize == 0
+    kvh_ok = (not cfg.is_mla) and cfg.n_kv_heads % msize == 0
+
+    if shape.kind == "decode":
+        b = shape.global_batch
+        shard_seq_over_data = b < psize * dsize
+        r = decode_rules(mesh, shard_seq_over_data=shard_seq_over_data)
+        over = {}
+        if shard_seq_over_data:
+            # batch too small for any DP axis: replicate batch, spread the KV
+            # sequence over every axis (must divide; 512k does)
+            kv_axes = tuple(a for a in ("pod", "data", "model")
+                            if _axis_size(mesh, a) > 1)
+            if b % max(psize, 1) != 0:
+                over["batch"] = None
+            over["kv_seq"] = kv_axes
+        if cfg.is_mla and heads_ok:
+            over["heads"] = "model" if msize > 1 else None  # MLA: no GQA reshape
+        if not heads_ok:
+            over["p_heads"] = None
+        if not kvh_ok:
+            over["p_kv_heads"] = None
+        return r.with_overrides(**over)
+
+    # train / prefill
+    fsdp = cfg.fsdp and shape.kind == "train"
+    r = base_rules(mesh, fsdp=fsdp)
+    over = {}
+    if not heads_ok:
+        over["p_heads"] = None
+    if not kvh_ok:
+        over["p_kv_heads"] = None
+        over["kv_heads"] = None
+    if shape.kind == "prefill":
+        # prefill emits the cache seq-sharded so decode can consume it
+        over["kv_seq"] = "model" if msize > 1 else None
+    return r.with_overrides(**over)
+
+
+def _lm_bundle(spec: ArchSpec, shape: LMShape, mesh: Mesh,
+               extra: Optional[Dict[str, Any]] = None) -> StepBundle:
+    cfg = spec.model
+    model = build_model(cfg)
+    rules = lm_rules(cfg, shape, mesh)
+    if extra:
+        rules = rules.with_overrides(**extra)
+    p_abs = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = tree_shardings(mesh, rules, model.param_axes())
+    b, s = shape.global_batch, shape.seq_len
+    tok_sh = _ns(mesh, rules, "batch", "seq")
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        o_abs = jax.eval_shape(init_opt_state, p_abs)
+        o_shard = tree_shardings(mesh, rules, opt_state_axes(model.param_axes()))
+        n_micro = max(1, getattr(cfg, "grad_accum", 1))
+        assert b % n_micro == 0, (b, n_micro)
+        mb = b // n_micro
+
+        def grads_of(params, tokens, labels):
+            return jax.value_and_grad(model.loss_fn, has_aux=True)(
+                params, tokens, labels, rules)
+
+        def train_step(params, opt_state, tokens, labels):
+            if n_micro == 1:
+                (loss, metrics), grads = grads_of(params, tokens, labels)
+            else:
+                tok_m = tokens.reshape(n_micro, mb, s)
+                lab_m = labels.reshape(n_micro, mb, s)
+
+                def micro(carry, xs):
+                    g_acc, loss_acc, ce_acc, aux_acc = carry
+                    t, l = xs
+                    t = jax.lax.with_sharding_constraint(
+                        t, rules.spec(None, "batch", "seq"))
+                    (loss, met), g = grads_of(params, t, l)
+                    g_acc = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                    return (g_acc, loss_acc + loss, ce_acc + met["ce"],
+                            aux_acc + met["aux"]), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                z = jnp.zeros((), jnp.float32)
+                (g_acc, loss, ce, aux), _ = jax.lax.scan(
+                    micro, (g0, z, z, z), (tok_m, lab_m))
+                inv = 1.0 / n_micro
+                grads = jax.tree.map(lambda g: g * inv, g_acc)
+                loss, metrics = loss * inv, {"ce": ce * inv, "aux": aux * inv}
+            params, opt_state, opt_metrics = adamw_update(
+                grads, opt_state, params, opt_cfg)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return params, opt_state, metrics
+
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        met_sh = jax.tree.map(lambda _: _ns(mesh, rules), {
+            "ce": 0, "aux": 0, "loss": 0, "grad_norm": 0, "lr": 0})
+        return StepBundle(
+            fn=train_step,
+            abstract_args=(p_abs, o_abs, tok, tok),
+            in_shardings=(p_shard, o_shard, tok_sh, tok_sh),
+            out_shardings=(p_shard, o_shard, met_sh),
+            rules=rules,
+            donate_argnums=(0, 1),
+            meta={"kind": "train"},
+        )
+
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens):
+            return model.prefill(params, tokens, rules)
+
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        cache_sh = jax.tree.map(
+            lambda axes: _ns(mesh, rules, *axes), model.cache_axes(),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(a, (str, type(None))) for a in x))
+        logits_sh = _ns(mesh, rules, "batch", "vocab")
+        return StepBundle(
+            fn=prefill_step,
+            abstract_args=(p_abs, tok),
+            in_shardings=(p_shard, tok_sh),
+            out_shardings=(logits_sh, cache_sh),
+            rules=rules,
+            meta={"kind": "prefill"},
+        )
+
+    # decode
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, rules)
+
+    cache_abs = model.cache_spec(b, s)
+    cache_sh = jax.tree.map(
+        lambda axes: _ns(mesh, rules, *axes), model.cache_axes(),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_sh1 = _ns(mesh, rules, "batch", None)
+    pos_sh = _ns(mesh, rules, "batch")
+    logits_sh = _ns(mesh, rules, "batch", "vocab")
+    return StepBundle(
+        fn=serve_step,
+        abstract_args=(p_abs, cache_abs, tok, pos),
+        in_shardings=(p_shard, cache_sh, tok_sh1, pos_sh),
+        out_shardings=(logits_sh, cache_sh),
+        rules=rules,
+        donate_argnums=(1,),
+        meta={"kind": "decode"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh,
+               rule_overrides: Optional[Dict[str, Any]] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None) -> StepBundle:
+    spec = get_arch(arch)
+    if cfg_overrides:
+        spec = dataclasses.replace(
+            spec, model=dataclasses.replace(spec.model, **cfg_overrides))
+    shape = spec.shape(shape_name)
+    if spec.family == "lm":
+        return _lm_bundle(spec, shape, mesh, rule_overrides)
+    if spec.family == "gnn":
+        from repro.launch.gnn_steps import gnn_bundle
+        return gnn_bundle(spec, shape, mesh, rule_overrides)
+    if spec.family == "recsys":
+        from repro.launch.recsys_steps import recsys_bundle
+        return recsys_bundle(spec, shape, mesh, rule_overrides)
+    raise ValueError(f"unknown family {spec.family}")

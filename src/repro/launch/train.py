@@ -1,0 +1,80 @@
+"""Production train launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --shape train_4k \
+      --steps 10 [--devices 512] [--smoke]
+
+On real hardware this runs the lowered bundle from steps.py step-by-step
+with checkpoint/restart; on this CPU container use --smoke to run a reduced
+config of the same arch end-to-end (the full configs are dry-run only)."""
+import os
+
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_FORCE_DEVICES']}")
+
+import argparse
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.base import reduced
+from repro.data.lm_data import LMDataConfig, SyntheticLM
+from repro.distributed.sharding import base_rules
+from repro.launch.mesh import make_smoke_mesh
+from repro.training.train_loop import TrainLoopConfig, run_train_loop
+
+
+def smoke_config(arch: str):
+    spec = get_arch(arch)
+    cfg = spec.model
+    if spec.family != "lm":
+        raise SystemExit("--smoke currently supports LM archs; "
+                         "see examples/ for GNN/recsys drivers")
+    overrides = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                     head_dim=32, d_ff=256, vocab_size=512, dtype="float32",
+                     grad_accum=1, fsdp=False)
+    if cfg.is_moe:
+        overrides.update(n_routed_experts=8, n_shared_experts=1, top_k=2,
+                         moe_d_ff=64, n_kv_heads=4)
+    if cfg.is_mla:
+        overrides.update(kv_lora_rank=32, q_lora_rank=64, qk_nope_head_dim=32,
+                         qk_rope_head_dim=16, v_head_dim=32, n_kv_heads=4)
+    return reduced(cfg, **overrides)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    from repro.models.transformer import LM
+    model = LM(cfg)
+    mesh = make_smoke_mesh()
+    rules = base_rules(mesh)
+    params = model.init(jax.random.key(0))
+    data = SyntheticLM(LMDataConfig(cfg.vocab_size, args.seq, args.batch))
+
+    def loss_fn(p, batch):
+        loss, _ = model.loss_fn(p, batch["tokens"], batch["labels"], rules)
+        return loss
+
+    with jax.set_mesh(mesh):
+        out = run_train_loop(
+            loss_fn, params, data.batches(args.steps + 1),
+            TrainLoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir),
+            meta={"arch": args.arch, "smoke": True})
+    print(f"[train] done: final loss {out['final_loss']:.4f} "
+          f"wall {out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

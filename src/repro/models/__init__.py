@@ -1,0 +1,2 @@
+"""Model zoo: the AIPM extractor architectures (LM / GNN / recsys)."""
+from repro.models.registry import build_model  # noqa: F401

@@ -1,0 +1,113 @@
+"""Attention: chunked (flash-style) jnp path for train/prefill, grouped decode.
+
+Two compute regimes:
+
+* ``chunked_attention`` -- online-softmax over KV blocks via ``lax.scan``;
+  never materializes the full S x S score matrix (required for prefill_32k on
+  the XLA path; on TPU the Pallas ``flash_attention`` kernel replaces it, see
+  ``repro.kernels.flash_attention``).
+* ``decode_attention`` -- one query token against a (possibly sequence-
+  sharded) KV cache.  Uses the grouped GQA einsum (KV read once, not
+  repeated); the softmax over a sharded ``kv_seq`` axis lowers to the
+  flash-decoding partial-max/partial-sum collective combine under GSPMD.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, KVH, D] -> [B, S, KVH * n_rep, D] (GQA broadcast)."""
+    if n_rep == 1:
+        return k
+    b, s, kvh, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, n_rep, d))
+    return k.reshape(b, s, kvh * n_rep, d)
+
+
+def chunked_attention(
+    q: jax.Array,          # [B, Sq, H, D]
+    k: jax.Array,          # [B, Skv, H, D]  (already repeated to H heads)
+    v: jax.Array,          # [B, Skv, H, Dv]
+    *,
+    causal: bool = True,
+    block_kv: int = 1024,
+    scale: Optional[float] = None,
+    bf16_probs: bool = False,
+) -> jax.Array:
+    """Online-softmax attention, scanning over KV blocks. fp32 accumulation."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    block_kv = min(block_kv, skv)
+    n_blocks, rem = divmod(skv, block_kv)
+    assert rem == 0, f"Skv={skv} not divisible by block_kv={block_kv}"
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # [B,H,Sq,D]
+    kb = k.reshape(b, n_blocks, block_kv, h, d).transpose(1, 0, 3, 2, 4)   # [N,B,H,bk,D]
+    vb = v.reshape(b, n_blocks, block_kv, h, dv).transpose(1, 0, 3, 2, 4)  # [N,B,H,bk,Dv]
+
+    q_pos = jnp.arange(sq) + (skv - sq)  # right-aligned (prefill continuation safe)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        blk_idx, k_blk, v_blk = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_blk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = blk_idx * block_kv + jnp.arange(block_kv)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        if bf16_probs:
+            # §Perf: softmax weights in bf16 (max-shifted, so in [0,1]);
+            # accumulation stays fp32 via preferred_element_type
+            p = p.astype(jnp.bfloat16)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, v_blk.astype(v_blk.dtype if bf16_probs else jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_blocks), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,Sq,H,Dv]
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, S, KVH, D]
+    v_cache: jax.Array,  # [B, S, KVH, Dv]
+    pos: jax.Array,      # [B] int32 -- index of the *new* token
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query single-token attention over the cache (masked at > pos)."""
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]          # [B, S]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return ctx.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)

@@ -1,0 +1,23 @@
+from repro.models.gnn.common import segment_mean, segment_softmax  # noqa: F401
+
+
+def build_gnn(cfg):
+    if cfg.kind == "gcn":
+        from repro.models.gnn.gcn import GCN
+        return GCN(cfg)
+    if cfg.kind == "graphsage":
+        from repro.models.gnn.graphsage import GraphSAGE
+        return GraphSAGE(cfg)
+    if cfg.kind == "schnet":
+        from repro.models.gnn.schnet import SchNet
+        return SchNet(cfg)
+    if cfg.kind == "equiformer_v2":
+        from repro.models.gnn.equiformer import EquiformerV2
+        return EquiformerV2(cfg)
+    if cfg.kind == "gat":
+        from repro.models.gnn.gat import GAT
+        return GAT(cfg)
+    if cfg.kind == "gin":
+        from repro.models.gnn.gin import GIN
+        return GIN(cfg)
+    raise KeyError(cfg.kind)

@@ -1,0 +1,94 @@
+"""GNN message-passing primitives.
+
+JAX sparse is BCOO-only, so message passing is implemented over an edge list
+(src, dst) with ``jax.ops.segment_sum`` / ``segment_max`` scatters -- this IS
+the system's SpMM layer (kernel regime 1 of the taxonomy).  Edge arrays are
+sharded over the ``data`` axis; partial per-shard aggregations are combined
+by GSPMD's scatter-add lowering (an all-reduce when the node table is
+replicated, reduce-scatter when it is sharded).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def segment_mean(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                 num_segments: int) -> jnp.ndarray:
+    s = jax.ops.segment_sum(data, segment_ids, num_segments)
+    c = jax.ops.segment_sum(jnp.ones(data.shape[:1], data.dtype),
+                            segment_ids, num_segments)
+    return s / jnp.maximum(c, 1.0).reshape((-1,) + (1,) * (data.ndim - 1))
+
+
+def segment_softmax(scores: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Softmax over edges grouped by destination node (edge-softmax)."""
+    smax = jax.ops.segment_max(scores, segment_ids, num_segments)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[segment_ids])
+    den = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(den[segment_ids], 1e-16)
+
+
+def gather_scatter(x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                   n_nodes: int, edge_weight: Optional[jnp.ndarray] = None,
+                   reduce: str = "sum") -> jnp.ndarray:
+    """One SpMM: out[v] = reduce_{(u,v) in E} w_uv * x[u]."""
+    msg = x[src]
+    if edge_weight is not None:
+        msg = msg * edge_weight.reshape((-1,) + (1,) * (x.ndim - 1))
+    if reduce == "mean":
+        return segment_mean(msg, dst, n_nodes)
+    if reduce == "max":
+        return jax.ops.segment_max(msg, dst, n_nodes)
+    return jax.ops.segment_sum(msg, dst, n_nodes)
+
+
+def chunked_gather_scatter(x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                           n_nodes: int, msg_fn, chunk: int,
+                           out_feat_shape: Tuple[int, ...],
+                           edge_mask: Optional[jnp.ndarray] = None
+                           ) -> jnp.ndarray:
+    """Edge-chunked message passing for big-irrep models: process edges in
+    ``chunk``-sized blocks under lax.scan, accumulating into the node buffer
+    (bounds peak edge-activation memory to chunk x feat)."""
+    e = src.shape[0]
+    n_chunks = max(1, e // chunk)
+    assert e % n_chunks == 0, (e, chunk)
+    c = e // n_chunks
+    src_b = src.reshape(n_chunks, c)
+    dst_b = dst.reshape(n_chunks, c)
+    mask_b = (edge_mask.reshape(n_chunks, c) if edge_mask is not None
+              else jnp.ones((n_chunks, c), bool))
+
+    def body(acc, xs):
+        s, d, m = xs
+        msg = msg_fn(x[s], s, d)                       # [c, *feat]
+        msg = jnp.where(m.reshape((-1,) + (1,) * (msg.ndim - 1)), msg, 0)
+        return acc.at[d].add(msg), None
+
+    acc0 = jnp.zeros((n_nodes,) + out_feat_shape, x.dtype)
+    acc, _ = lax.scan(body, acc0, (src_b, dst_b, mask_b))
+    return acc
+
+
+def degree(dst: jnp.ndarray, n_nodes: int,
+           edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    ones = jnp.ones(dst.shape[0], jnp.float32)
+    if edge_mask is not None:
+        ones = ones * edge_mask
+    return jax.ops.segment_sum(ones, dst, n_nodes)
+
+
+def sym_norm_coeff(src: jnp.ndarray, dst: jnp.ndarray, n_nodes: int,
+                   edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """GCN symmetric normalization 1/sqrt(d_u d_v) per edge (with self-loops
+    accounted by +1)."""
+    deg = degree(dst, n_nodes, edge_mask) + degree(src, n_nodes, edge_mask)
+    deg = deg / 2.0 + 1.0
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+    return inv_sqrt[src] * inv_sqrt[dst]

@@ -1,0 +1,63 @@
+"""GAT [arXiv:1710.10903] (bonus arch from the pool): SDDMM edge scores ->
+segment-softmax -> SpMM -- the third GNN kernel regime (edge-softmax)
+alongside SpMM (GCN/SAGE) and geometric gathers (SchNet/Equiformer)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import segment_softmax
+from repro.models.layers import dense_init, split_keys
+
+
+class GAT:
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+        self.heads = max(cfg.n_heads, 1)
+
+    def init(self, key, d_in: int, n_out: int) -> Dict:
+        cfg = self.cfg
+        h, dh = self.heads, cfg.d_hidden
+        dims = [d_in] + [h * dh] * (cfg.n_layers - 1) + [n_out]
+        layers = []
+        ks = split_keys(key, 3 * cfg.n_layers)
+        for i in range(cfg.n_layers):
+            # hidden layers concat heads; the final layer averages them, so
+            # each head emits the full n_out
+            d_out = dh if i < cfg.n_layers - 1 else dims[i + 1]
+            layers.append({
+                "w": dense_init(ks[3 * i], (dims[i], h, d_out), dims[i]),
+                "a_src": dense_init(ks[3 * i + 1], (h, d_out), d_out),
+                "a_dst": dense_init(ks[3 * i + 2], (h, d_out), d_out),
+            })
+        return {"layers": layers}
+
+    def param_axes(self) -> Dict:
+        return {"layers": [{"w": (None, None, None), "a_src": (None, None),
+                            "a_dst": (None, None)}
+                           for _ in range(self.cfg.n_layers)]}
+
+    def node_logits(self, params, feats, pos, src, dst, edge_mask, n_nodes,
+                    chunk: Optional[int] = None):
+        h = feats
+        n_layers = len(params["layers"])
+        for i, lp in enumerate(params["layers"]):
+            z = jnp.einsum("nd,dhk->nhk", h, lp["w"])           # [N,H,K]
+            # SDDMM: per-edge attention logits
+            e_src = jnp.einsum("nhk,hk->nh", z, lp["a_src"])[src]
+            e_dst = jnp.einsum("nhk,hk->nh", z, lp["a_dst"])[dst]
+            logits = jax.nn.leaky_relu(e_src + e_dst, 0.2)      # [E,H]
+            logits = jnp.where(edge_mask[:, None] > 0, logits, -1e30)
+            attn = segment_softmax(logits, dst, n_nodes)        # [E,H]
+            msg = z[src] * attn[..., None]
+            agg = jax.ops.segment_sum(
+                jnp.where(edge_mask[:, None, None] > 0, msg, 0.0),
+                dst, n_nodes)                                   # [N,H,K]
+            if i < n_layers - 1:
+                h = jax.nn.elu(agg.reshape(n_nodes, -1))        # concat heads
+            else:
+                h = agg.mean(axis=1)                            # average heads
+        return h

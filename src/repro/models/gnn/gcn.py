@@ -1,0 +1,40 @@
+"""GCN [arXiv:1609.02907]: sym-normalized SpMM Ã X W, 2 layers d=16."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import gather_scatter, sym_norm_coeff
+from repro.models.layers import dense_init, split_keys
+
+
+class GCN:
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+
+    def init(self, key, d_in: int, n_out: int) -> Dict:
+        cfg = self.cfg
+        dims = [d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [n_out]
+        ks = split_keys(key, cfg.n_layers)
+        return {"w": [dense_init(ks[i], (dims[i], dims[i + 1]), dims[i])
+                      for i in range(cfg.n_layers)]}
+
+    def param_axes(self) -> Dict:
+        return {"w": [(None, None) for _ in range(self.cfg.n_layers)]}  # tiny weights: replicate
+
+    def node_logits(self, params, feats, pos, src, dst, edge_mask, n_nodes,
+                    chunk: Optional[int] = None):
+        coeff = sym_norm_coeff(src, dst, n_nodes, edge_mask.astype(jnp.float32))
+        coeff = coeff * edge_mask
+        deg_self = 1.0 / (jnp.zeros(n_nodes).at[dst].add(edge_mask * 1.0) + 1.0)
+        h = feats
+        for i, w in enumerate(params["w"]):
+            hw = h @ w
+            agg = gather_scatter(hw, src, dst, n_nodes, edge_weight=coeff)
+            h = agg + hw * deg_self[:, None]               # self-loop term
+            if i < len(params["w"]) - 1:
+                h = jax.nn.relu(h)
+        return h

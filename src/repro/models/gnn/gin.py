@@ -1,0 +1,50 @@
+"""GIN [arXiv:1810.00826] (bonus arch from the pool): sum-aggregation SpMM
+with a learnable epsilon + MLP update -- maximally discriminative WL-style
+message passing."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import gather_scatter
+from repro.models.layers import dense_init, split_keys
+
+
+class GIN:
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+
+    def init(self, key, d_in: int, n_out: int) -> Dict:
+        cfg = self.cfg
+        dims = [d_in] + [cfg.d_hidden] * cfg.n_layers
+        layers = []
+        ks = split_keys(key, 2 * cfg.n_layers + 1)
+        for i in range(cfg.n_layers):
+            layers.append({
+                "w1": dense_init(ks[2 * i], (dims[i], dims[i + 1]), dims[i]),
+                "w2": dense_init(ks[2 * i + 1], (dims[i + 1], dims[i + 1]),
+                                 dims[i + 1]),
+                "eps": jnp.zeros(()),
+            })
+        return {"layers": layers,
+                "head": dense_init(ks[-1], (cfg.d_hidden, n_out),
+                                   cfg.d_hidden)}
+
+    def param_axes(self) -> Dict:
+        return {"layers": [{"w1": (None, None), "w2": (None, None),
+                            "eps": None}
+                           for _ in range(self.cfg.n_layers)],
+                "head": (None, None)}
+
+    def node_logits(self, params, feats, pos, src, dst, edge_mask, n_nodes,
+                    chunk: Optional[int] = None):
+        h = feats
+        for lp in params["layers"]:
+            agg = gather_scatter(h, src, dst, n_nodes,
+                                 edge_weight=edge_mask.astype(jnp.float32))
+            z = (1.0 + lp["eps"]) * h + agg
+            h = jax.nn.relu(jax.nn.relu(z @ lp["w1"]) @ lp["w2"])
+        return h @ params["head"]

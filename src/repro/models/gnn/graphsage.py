@@ -1,0 +1,51 @@
+"""GraphSAGE [arXiv:1706.02216], mean aggregator, 2 layers d=128.
+
+Works on any edge-list graph; the ``minibatch_lg`` shape feeds it the
+neighbor-sampled block graph produced by ``repro.data.sampler``."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import gather_scatter
+from repro.models.layers import dense_init, split_keys
+
+
+class GraphSAGE:
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+
+    def init(self, key, d_in: int, n_out: int) -> Dict:
+        cfg = self.cfg
+        dims = [d_in] + [cfg.d_hidden] * cfg.n_layers
+        ks = split_keys(key, 2 * cfg.n_layers + 1)
+        return {
+            "w_self": [dense_init(ks[2 * i], (dims[i], dims[i + 1]), dims[i])
+                       for i in range(cfg.n_layers)],
+            "w_nbr": [dense_init(ks[2 * i + 1], (dims[i], dims[i + 1]), dims[i])
+                      for i in range(cfg.n_layers)],
+            "head": dense_init(ks[-1], (cfg.d_hidden, n_out), cfg.d_hidden),
+        }
+
+    def param_axes(self) -> Dict:
+        n = self.cfg.n_layers
+        return {
+            "w_self": [(None, None)] * n,   # tiny weights: replicate
+            "w_nbr": [(None, None)] * n,
+            "head": (None, None),
+        }
+
+    def node_logits(self, params, feats, pos, src, dst, edge_mask, n_nodes,
+                    chunk: Optional[int] = None):
+        h = feats
+        ew = edge_mask.astype(jnp.float32)
+        for ws, wn in zip(params["w_self"], params["w_nbr"]):
+            agg = gather_scatter(h, src, dst, n_nodes, edge_weight=ew,
+                                 reduce="mean" if self.cfg.aggregator == "mean"
+                                 else "max")
+            h = jax.nn.relu(h @ ws + agg @ wn)
+            h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-9)
+        return h @ params["head"]

@@ -1,0 +1,78 @@
+"""SchNet [arXiv:1706.08566]: continuous-filter convolutions, 3 interactions.
+
+Kernel regime 2 (triplet-free geometric gather): RBF(r_uv) -> filter MLP ->
+elementwise product with gathered neighbor features -> segment_sum."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import dense_init, split_keys
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+class SchNet:
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+
+    def init(self, key, d_in: int, n_out: int) -> Dict:
+        cfg = self.cfg
+        c, r = cfg.d_hidden, cfg.n_rbf
+        ks = split_keys(key, 2 + cfg.n_layers)
+
+        def interaction(k):
+            k1, k2, k3, k4 = split_keys(k, 4)
+            return {
+                "filter_w1": dense_init(k1, (r, c), r),
+                "filter_w2": dense_init(k2, (c, c), c),
+                "w_in": dense_init(k3, (c, c), c),
+                "w_out": dense_init(k4, (c, c), c),
+            }
+
+        return {
+            "embed": dense_init(ks[0], (d_in, c), d_in),
+            "interactions": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[interaction(k) for k in split_keys(ks[1], cfg.n_layers)]),
+            "head": dense_init(ks[-1], (c, n_out), c),
+        }
+
+    def param_axes(self) -> Dict:
+        L = ("layers", None, None)
+        return {
+            "embed": (None, None),
+            "interactions": {"filter_w1": L, "filter_w2": L,
+                             "w_in": L, "w_out": L},
+            "head": (None, None),
+        }
+
+    def _rbf(self, r: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        mu = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+        gamma = 10.0 / cfg.cutoff
+        return jnp.exp(-gamma * jnp.square(r[..., None] - mu))
+
+    def node_logits(self, params, feats, pos, src, dst, edge_mask, n_nodes,
+                    chunk: Optional[int] = None):
+        h = feats @ params["embed"]
+        rel = pos[dst] - pos[src]
+        r = jnp.linalg.norm(rel, axis=-1)
+        rbf = self._rbf(r)
+        cutoff_w = 0.5 * (jnp.cos(jnp.pi * jnp.clip(r / self.cfg.cutoff, 0, 1)) + 1)
+        ew = (edge_mask * cutoff_w)[:, None]
+
+        def body(h, ip):
+            w = shifted_softplus(rbf @ ip["filter_w1"]) @ ip["filter_w2"]
+            msg = (h @ ip["w_in"])[src] * w * ew
+            agg = jax.ops.segment_sum(msg, dst, n_nodes)
+            v = shifted_softplus(agg @ ip["w_out"])
+            return h + v, None
+
+        h, _ = jax.lax.scan(body, h, params["interactions"])
+        return shifted_softplus(h) @ params["head"]

@@ -1,0 +1,72 @@
+"""Shared neural layers: RMSNorm, rotary embeddings, init helpers."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5,
+             fused: bool = False) -> jax.Array:
+    """RMSNorm.  Default: fp32 intermediate (reference numerics).
+
+    ``fused=True`` (the §Perf 'fused_norm' variant): the fp32 square feeds
+    the reduction directly and the rescale happens in the input dtype, so no
+    full-width fp32 copy of x is ever materialized -- 3x less HBM traffic per
+    norm at bf16, at the cost of a bf16 (not fp32) multiply rounding."""
+    if fused:
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * scale.astype(x.dtype)
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rotary_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                   dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for RoPE. positions: [...]; returns [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (split-half convention). x: [B, S, H, D]; cos/sin: [B?, S, D/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+
+    # insert the head axis at -2, then left-pad batch axes
+    def _expand(c):
+        c = c[..., None, :]
+        while c.ndim < x.ndim:
+            c = c[None]
+        return c
+
+    cos, sin = _expand(cos), _expand(sin)
+    dtype = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    return jnp.concatenate([r1, r2], axis=-1).astype(dtype)
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], in_axis_size: int,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    std = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))

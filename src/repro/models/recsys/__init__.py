@@ -1,0 +1,2 @@
+from repro.models.recsys.embedding_bag import embedding_bag_dense, embedding_bag_ragged  # noqa: F401
+from repro.models.recsys.autoint import AutoInt  # noqa: F401

@@ -1,0 +1,107 @@
+"""AutoInt [arXiv:1810.11921]: multi-head self-attention feature interaction
+over sparse-field embeddings, with huge row tables (the lookup is the hot
+path -- see embedding_bag.py for the layout).
+
+Fields are padded to a multiple of the model axis (39 -> 48) so tables shard
+field-wise; padded fields are masked out of the interaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import dense_init, embed_init, split_keys
+from repro.models.recsys.embedding_bag import embedding_bag_dense
+
+
+class AutoInt:
+    def __init__(self, cfg: RecsysConfig, n_fields_padded: Optional[int] = None):
+        self.cfg = cfg
+        self.f_real = cfg.n_sparse
+        self.f = n_fields_padded or cfg.n_sparse
+        self.d_repr = self.f * cfg.d_attn    # final representation width
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = split_keys(key, 3 + 3 * cfg.n_attn_layers)
+        params: Dict = {
+            "tables": embed_init(ks[0], (self.f, cfg.vocab_per_field,
+                                         cfg.embed_dim)),
+            "layers": [],
+        }
+        d_in = cfg.embed_dim
+        layers = []
+        for i in range(cfg.n_attn_layers):
+            k1, k2, k3 = ks[1 + 3 * i: 4 + 3 * i]
+            layers.append({
+                "wq": dense_init(k1, (d_in, cfg.n_heads, cfg.d_attn // cfg.n_heads), d_in),
+                "wk": dense_init(k2, (d_in, cfg.n_heads, cfg.d_attn // cfg.n_heads), d_in),
+                "wv": dense_init(k3, (d_in, cfg.n_heads, cfg.d_attn // cfg.n_heads), d_in),
+                "w_res": dense_init(ks[-3], (d_in, cfg.d_attn), d_in),
+            })
+            d_in = cfg.d_attn
+        params["layers"] = layers
+        params["w_out"] = dense_init(ks[-2], (self.f * cfg.d_attn, 1),
+                                     self.f * cfg.d_attn)
+        return params
+
+    def param_axes(self) -> Dict:
+        # attention weights are tiny -> replicated; only tables field-shard
+        la = [{"wq": (None, None, None), "wk": (None, None, None),
+               "wv": (None, None, None), "w_res": (None, None)}
+              for _ in range(self.cfg.n_attn_layers)]
+        return {
+            "tables": ("field", None, None),
+            "layers": la,
+            "w_out": (None, None),
+        }
+
+    # -- forward -----------------------------------------------------------------
+
+    def representation(self, params: Dict, ids: jnp.ndarray,
+                       field_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """ids [B, F, H] -> user/sample representation [B, F*d_attn]."""
+        cfg = self.cfg
+        x = embedding_bag_dense(params["tables"], ids, mode="mean")  # [B,F,D]
+        if field_mask is not None:
+            x = x * field_mask[None, :, None]
+        for lp in params["layers"]:
+            q = jnp.einsum("bfd,dhk->bfhk", x, lp["wq"])
+            k = jnp.einsum("bfd,dhk->bfhk", x, lp["wk"])
+            v = jnp.einsum("bfd,dhk->bfhk", x, lp["wv"])
+            scores = jnp.einsum("bfhk,bghk->bhfg", q, k)
+            if field_mask is not None:
+                scores = jnp.where(field_mask[None, None, None, :] > 0,
+                                   scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhfg,bghk->bfhk", probs, v)
+            ctx = ctx.reshape(ctx.shape[0], ctx.shape[1], -1)      # [B,F,d_attn]
+            x = jax.nn.relu(ctx + jnp.einsum("bfd,de->bfe", x, lp["w_res"]))
+        return x.reshape(x.shape[0], -1)
+
+    def logits(self, params: Dict, ids: jnp.ndarray,
+               field_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        rep = self.representation(params, ids, field_mask)
+        return rep @ params["w_out"][:, 0]
+
+    def loss_fn(self, params: Dict, ids: jnp.ndarray, labels: jnp.ndarray,
+                field_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        lg = self.logits(params, ids, field_mask)
+        l = jnp.clip(lg, -30, 30)
+        return jnp.mean(jnp.maximum(l, 0) - l * labels + jnp.log1p(jnp.exp(-jnp.abs(l))))
+
+    def score_candidates(self, params: Dict, query_ids: jnp.ndarray,
+                         cand_reps: jnp.ndarray, k: int = 100,
+                         field_mask: Optional[jnp.ndarray] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """retrieval_cand: 1 query vs n_candidates item representations --
+        batched dot + top-k (the same scan/merge path as the PandaDB vector
+        index; NOT a loop)."""
+        q = self.representation(params, query_ids, field_mask)      # [1, R]
+        scores = (cand_reps @ q[0]).astype(jnp.float32)             # [N]
+        vals, idx = jax.lax.top_k(scores, k)
+        return vals, idx

@@ -1,0 +1,59 @@
+"""EmbeddingBag for JAX.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse -- the lookup layer
+IS part of the system: ``jnp.take`` gathers + ``jax.ops.segment_sum``
+reductions.  Two layouts:
+
+  * dense multi-hot  [B, F, H] ids         -> [B, F, D]  (AutoInt path)
+  * ragged           (ids [T], offsets [B]) -> [B, D]    (torch-parity path)
+
+Distributed: tables are FIELD-sharded over the ``model`` axis (each device
+owns whole fields -> gathers are local), batch over ``data``; the interaction
+layer's all-gather of [B, F, D] is the DLRM-style a2a, a few MB per step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_dense(table: jnp.ndarray, ids: jnp.ndarray,
+                        mode: str = "mean",
+                        weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """table [F, V, D]; ids [B, F, H] -> [B, F, D] (reduce over H)."""
+    f = table.shape[0]
+    gathered = jnp.take_along_axis(
+        table[None],                                    # [1, F, V, D]
+        ids.transpose(1, 0, 2).reshape(1, f, -1, 1),    # [1, F, B*H, 1]
+        axis=2,
+    )                                                   # [1, F, B*H, D]
+    b, h = ids.shape[0], ids.shape[2]
+    g = gathered[0].reshape(f, b, h, table.shape[-1]).transpose(1, 0, 2, 3)
+    if weights is not None:
+        g = g * weights[..., None]
+    if mode == "sum":
+        return jnp.sum(g, axis=2)
+    if mode == "max":
+        return jnp.max(g, axis=2)
+    return jnp.mean(g, axis=2)
+
+
+def embedding_bag_ragged(table: jnp.ndarray, ids: jnp.ndarray,
+                         offsets: jnp.ndarray, n_bags: int,
+                         mode: str = "mean") -> jnp.ndarray:
+    """table [V, D]; ids [T] flat, offsets [B] bag starts -> [B, D].
+
+    The torch ``nn.EmbeddingBag(ids, offsets)`` contract, built from
+    take + segment ops (bag id per element via searchsorted)."""
+    t = ids.shape[0]
+    seg = jnp.searchsorted(offsets, jnp.arange(t), side="right") - 1
+    rows = jnp.take(table, ids, axis=0)                 # [T, D]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, seg, n_bags)
+    if mode == "max":
+        return jax.ops.segment_max(rows, seg, n_bags)
+    s = jax.ops.segment_sum(rows, seg, n_bags)
+    c = jax.ops.segment_sum(jnp.ones(t, rows.dtype), seg, n_bags)
+    return s / jnp.maximum(c, 1.0)[:, None]

@@ -1,0 +1,20 @@
+"""build_model: ArchSpec -> model object with a uniform step interface."""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ArchSpec, GNNConfig, RecsysConfig, TransformerConfig
+
+
+def build_model(spec_or_cfg: Any):
+    cfg = spec_or_cfg.model if isinstance(spec_or_cfg, ArchSpec) else spec_or_cfg
+    if isinstance(cfg, TransformerConfig):
+        from repro.models.transformer import LM
+        return LM(cfg)
+    if isinstance(cfg, GNNConfig):
+        from repro.models.gnn import build_gnn
+        return build_gnn(cfg)
+    if isinstance(cfg, RecsysConfig):
+        from repro.models.recsys.autoint import AutoInt
+        return AutoInt(cfg)
+    raise TypeError(f"unknown model config type: {type(cfg)}")

@@ -1,0 +1,122 @@
+"""Query serving engine: concurrent CypherPlus requests against PandaDB.
+
+Reproduces the paper's Fig 8 setup: a request queue, worker(s) executing
+queries through the full parse -> optimize -> execute path, measured
+throughput + response-time percentiles.  Reading-queries go to any worker;
+writing-queries are serialized through the leader WAL (paper §VII-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeStats:
+    latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    started: float = 0.0
+    finished: float = 0.0
+
+    @property
+    def throughput_qps(self) -> float:
+        dur = max(self.finished - self.started, 1e-9)
+        return len(self.latencies_ms) / dur
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(self.latencies_ms, p))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": len(self.latencies_ms),
+            "throughput_qps": self.throughput_qps,
+            "mean_ms": float(np.mean(self.latencies_ms)) if self.latencies_ms else 0,
+            "p50_ms": self.percentile(50),
+            "p99_ms": self.percentile(99),
+        }
+
+
+class QueryServer:
+    def __init__(self, db, n_workers: int = 1) -> None:
+        self.db = db
+        self.n_workers = n_workers
+        self._queue: "queue.Queue" = queue.Queue()
+        self._stats = ServeStats()
+        self._lock = threading.Lock()
+        self._write_lock = threading.Lock()   # leader serialization
+        self._workers: List[threading.Thread] = []
+        self._stop = False
+
+    def start(self) -> None:
+        self._stats.started = time.perf_counter()
+        for _ in range(self.n_workers):
+            t = threading.Thread(target=self._worker, daemon=True)
+            t.start()
+            self._workers.append(t)
+
+    def _worker(self) -> None:
+        while not self._stop:
+            try:
+                item = self._queue.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if item is None:
+                return
+            text, optimized, done = item
+            t0 = time.perf_counter()
+            try:
+                is_write = text.lstrip().upper().startswith("CREATE")
+                if is_write:
+                    with self._write_lock:      # writing-query -> leader
+                        rows = self.db.query(text, optimized=optimized)
+                else:
+                    rows = self.db.query(text, optimized=optimized)
+                err = None
+            except Exception as e:  # noqa: BLE001
+                rows, err = [], e
+            dt = (time.perf_counter() - t0) * 1000
+            with self._lock:
+                self._stats.latencies_ms.append(dt)
+            done((rows, err))
+
+    def submit(self, text: str, optimized: bool = True) -> "queue.Queue":
+        out: "queue.Queue" = queue.Queue(maxsize=1)
+        self._queue.put((text, optimized, out.put))
+        return out
+
+    def run_closed_loop(self, queries: List[str], n_clients: int,
+                        duration_s: float = 2.0,
+                        optimized: bool = True) -> ServeStats:
+        """Closed-loop load: each client resubmits on completion (the JMeter
+        pattern from §VII-D)."""
+        self.start()
+        stop_at = time.perf_counter() + duration_s
+        rng = np.random.default_rng(0)
+
+        def client(cid: int):
+            i = 0
+            while time.perf_counter() < stop_at:
+                q = queries[(cid + i) % len(queries)]
+                self.submit(q, optimized).get()
+                i += 1
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self._stats.finished = time.perf_counter()
+        self.shutdown()
+        return self._stats
+
+    def shutdown(self) -> None:
+        self._stop = True
+        for _ in self._workers:
+            self._queue.put(None)

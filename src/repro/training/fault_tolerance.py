@@ -1,0 +1,85 @@
+"""Fault tolerance & elasticity (design target: 1000+ nodes).
+
+Three mechanisms, mirroring the paper's cluster semantics (§VII-A):
+
+1. **Checkpoint/restart** -- versioned manifests (checkpoint.py).  On any
+   failure the job restarts from `latest_version`; graph-store mutations
+   since the checkpoint replay from the WAL (graphstore/wal.py), exactly the
+   paper's "execute query statements in the local log until the version is
+   consistent".
+
+2. **Elastic re-mesh** -- `elastic_restart` re-factorizes the surviving
+   device count into a (data, model) mesh, rebuilds shardings from the SAME
+   logical axis rules, and device_puts the restored host state.  Because all
+   sharding is rule-driven (distributed/sharding.py), no model code changes.
+
+3. **Straggler mitigation** -- `StragglerMonitor` tracks per-step latencies;
+   a host whose EWMA exceeds `threshold x` median is flagged for the
+   scheduler to drain (on TPU pods slow hosts are replaced, not worked
+   around, since SPMD steps are synchronous); the data pipeline additionally
+   over-provisions micro-shards so a re-assigned host can catch up by
+   skipping (deterministic work stealing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.distributed.sharding import ShardingRules, tree_shardings
+from repro.launch.mesh import make_mesh_for
+from repro.training.checkpoint import CheckpointManager
+
+
+def elastic_restart(ckpt: CheckpointManager, like_state,
+                    rules_fn: Callable[[Any], ShardingRules],
+                    axes_tree, n_devices: int, model_parallel: int = 1):
+    """Restore the latest checkpoint onto a fresh mesh of `n_devices`.
+
+    rules_fn(mesh) -> ShardingRules must be the same rule builder used at
+    launch; axes_tree is the logical-axis pytree for the state."""
+    mesh = make_mesh_for(n_devices, model_parallel=model_parallel)
+    rules = rules_fn(mesh)
+    shardings = tree_shardings(mesh, rules, axes_tree)
+    state, version = ckpt.restore(like_state, shardings=shardings)
+    return mesh, rules, state, version
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    threshold: float = 1.5
+    alpha: float = 0.3
+    ewma: Optional[np.ndarray] = None
+
+    def record(self, host_times: np.ndarray) -> List[int]:
+        """Feed per-host step latencies; returns hosts flagged as stragglers."""
+        host_times = np.asarray(host_times, np.float64)
+        if self.ewma is None:
+            self.ewma = host_times.copy()
+        else:
+            self.ewma = self.alpha * host_times + (1 - self.alpha) * self.ewma
+        med = float(np.median(self.ewma))
+        return [i for i, t in enumerate(self.ewma)
+                if med > 0 and t > self.threshold * med]
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_restarts: int = 100
+    backoff_s: float = 5.0
+
+    def run(self, step_fn: Callable[[], Any],
+            on_failure: Callable[[Exception], None]) -> Any:
+        """Supervision loop: run until success or restart budget exhausted."""
+        for attempt in range(self.max_restarts):
+            try:
+                return step_fn()
+            except Exception as e:  # noqa: BLE001
+                on_failure(e)
+                time.sleep(min(self.backoff_s * (attempt + 1), 60.0))
+        raise RuntimeError(f"exceeded {self.max_restarts} restarts")

@@ -1,0 +1,66 @@
+"""Training driver: jit'd step + checkpointing + WAL versioning + restart.
+
+Used by examples/train_lm_e2e.py and launch/train.py.  On the CPU container
+this trains reduced configs end-to-end; on a pod the same loop runs the
+production bundles from launch/steps.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault_tolerance import StragglerMonitor
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    n_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    restore: bool = True
+
+
+def run_train_loop(loss_fn: Callable, params: Any, batches: Iterator[Dict],
+                   cfg: TrainLoopConfig,
+                   opt_cfg: Optional[AdamWConfig] = None,
+                   meta: Optional[Dict] = None) -> Dict[str, Any]:
+    """Generic loop: loss_fn(params, batch) -> scalar loss."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    opt_state = init_opt_state(params)
+    start_step = 0
+    ckpt = CheckpointManager(cfg.ckpt_dir) if cfg.ckpt_dir else None
+    if ckpt and cfg.restore and ckpt.latest_version() is not None:
+        (params, opt_state), start_step = ckpt.restore((params, opt_state))
+        print(f"[train] restored version {start_step}")
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, loss, om["grad_norm"]
+
+    history = []
+    t_start = time.perf_counter()
+    it = iter(batches)
+    for i in range(start_step, cfg.n_steps):
+        batch = next(it)
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, loss, gnorm = step(params, opt_state, batch)
+        if i % cfg.log_every == 0 or i == cfg.n_steps - 1:
+            l = float(loss)
+            history.append({"step": i, "loss": l, "grad_norm": float(gnorm)})
+            print(f"[train] step {i} loss {l:.4f} gnorm {float(gnorm):.3f}")
+        if ckpt and ((i + 1) % cfg.ckpt_every == 0 or i == cfg.n_steps - 1):
+            ckpt.save(i + 1, (params, opt_state), meta=meta)
+    wall = time.perf_counter() - t_start
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "wall_s": wall, "final_loss": history[-1]["loss"] if history else None}

@@ -1,0 +1,97 @@
+"""Semantic cache (Fig 6) + AIPM protocol tests."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import CacheConfig
+from repro.core.aipm import AIPMService, ModelRegistry, feature_hash_extractor
+from repro.core.semantic_cache import SemanticCache
+
+
+def test_cache_hit_miss():
+    c = SemanticCache()
+    assert c.get(1, "face", 1) is None
+    c.put(1, "face", 1, np.ones(4))
+    assert c.get(1, "face", 1) is not None
+    assert c.stats()["hits"] == 1 and c.stats()["misses"] == 1
+
+
+def test_serial_invalidation():
+    """Paper Fig 6: entries built by an older model serial are out of date."""
+    c = SemanticCache()
+    c.put(1, "face", 1, "old")
+    c.put(2, "face", 1, "old")
+    c.put(3, "face", 2, "new")
+    c.put(4, "animal", 1, "other-space")
+    dropped = c.invalidate_serial("face", older_than=2)
+    assert dropped == 2
+    assert c.get(1, "face", 1) is None
+    assert c.get(3, "face", 2) == "new"
+    assert c.get(4, "animal", 1) == "other-space"
+
+
+def test_cache_key_includes_serial():
+    c = SemanticCache()
+    c.put(1, "face", 1, "v1")
+    assert c.get(1, "face", 2) is None   # new model serial -> miss
+
+
+def test_lru_eviction():
+    c = SemanticCache(CacheConfig(capacity_items=2))
+    c.put(1, "f", 1, "a")
+    c.put(2, "f", 1, "b")
+    c.get(1, "f", 1)           # touch 1 -> 2 is LRU
+    c.put(3, "f", 1, "c")
+    assert c.get(2, "f", 1) is None
+    assert c.get(1, "f", 1) == "a"
+
+
+def test_registry_serial_bumps():
+    r = ModelRegistry()
+    s1 = r.register("face", feature_hash_extractor(8)).serial
+    s2 = r.register("face", feature_hash_extractor(8, seed=1)).serial
+    assert (s1, s2) == (1, 2)
+    assert r.serial("face") == 2
+    with pytest.raises(KeyError):
+        r.get("unknown")
+
+
+def test_aipm_async_future():
+    r = ModelRegistry()
+    r.register("face", feature_hash_extractor(16), batch_size=4)
+    svc = AIPMService(r)
+    items = [(i, np.full(64, i, np.uint8)) for i in range(10)]
+    fut = svc.submit("face", items)
+    out = fut.result(timeout=10)
+    assert set(out) == set(range(10))
+    assert all(v.shape == (16,) for v in out.values())
+    svc.shutdown()
+
+
+def test_aipm_speed_statistics():
+    r = ModelRegistry()
+    spec = r.register("face", feature_hash_extractor(8))
+    svc = AIPMService(r)
+    svc.extract_sync("face", [(0, np.zeros(8, np.uint8))])
+    assert spec.rows == 1 and spec.total_time > 0
+    assert spec.avg_speed > 0
+    svc.shutdown()
+
+
+def test_extractor_determinism():
+    fn = feature_hash_extractor(32)
+    raw = [np.arange(100, dtype=np.uint8)]
+    v1, v2 = fn(raw), fn(raw)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_allclose(np.linalg.norm(v1, axis=1), 1.0, rtol=1e-5)
+
+
+def test_db_register_invalidates(figure1_db):
+    db = figure1_db
+    db.cache.put(12345, "face", db.registry.serial("face"), np.ones(4))
+    from repro.core.aipm import feature_hash_extractor as fhe
+    new_serial = db.register_extractor("face", fhe(64, seed=9))
+    assert db.cache.get(12345, "face", new_serial - 1) is None
+    # restore original for other tests
+    db.register_extractor("face", fhe(64))

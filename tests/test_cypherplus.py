@@ -1,0 +1,119 @@
+"""CypherPlus lexer/parser unit tests (paper §III-C grammar)."""
+import pytest
+
+from repro.core.cypherplus import (
+    BoolOp,
+    Compare,
+    CreateQuery,
+    FuncCall,
+    Literal,
+    MatchQuery,
+    Prop,
+    SubProp,
+    expr_vars,
+    is_semantic,
+    parse_query,
+)
+
+
+def test_basic_match():
+    q = parse_query(
+        "MATCH (n:Person)-[:teamMate]->(m:Person) "
+        "WHERE n.name='Michael Jordan' RETURN m.name")
+    assert isinstance(q, MatchQuery)
+    pat = q.patterns[0]
+    assert pat.nodes[0].label == "Person"
+    assert pat.rels[0].rel_type == "teamMate"
+    assert pat.rels[0].direction == "out"
+    assert isinstance(q.where, Compare) and q.where.op == "="
+    assert q.returns[0].expr == Prop("m", "name")
+
+
+def test_incoming_and_undirected_rel():
+    q = parse_query("MATCH (a)<-[:workFor]-(b) RETURN a.name")
+    assert q.patterns[0].rels[0].direction == "in"
+    q2 = parse_query("MATCH (a)-[r:knows]-(b) RETURN a.name")
+    assert q2.patterns[0].rels[0].direction == "any"
+    assert q2.patterns[0].rels[0].var == "r"
+
+
+def test_subproperty_extractor():
+    q = parse_query(
+        "MATCH (p:Pet) WHERE p.photo->animal='cat' RETURN p.name")
+    cmp_ = q.where
+    assert isinstance(cmp_.left, SubProp)
+    assert cmp_.left.sub_key == "animal"
+    assert cmp_.left.base == Prop("p", "photo")
+    assert is_semantic(cmp_)
+
+
+def test_similarity_operators():
+    for op_text, op in [("::", "::"), ("~:", "~:"), ("!:", "!:"),
+                        ("<:", "<:"), (">:", ">:")]:
+        q = parse_query(
+            f"MATCH (n),(m) WHERE n.photo->face {op_text} m.photo->face "
+            "RETURN n.name")
+        assert q.where.op == op, op_text
+        assert is_semantic(q.where)
+
+
+def test_similarity_threshold_expression():
+    q = parse_query(
+        "MATCH (n),(m) WHERE n.photo->face :: m.photo->face > 0.7 "
+        "RETURN n.name")
+    # parses as (face :: face) > 0.7 via value-level chaining
+    assert q.where.op in ("::", ">")
+
+
+def test_literal_function_create_from_source():
+    q = parse_query(
+        "MATCH (n:Person) WHERE n.photo->face ~: "
+        "createFromSource('http://x/img.jpg')->face RETURN n.name")
+    right = q.where.right
+    assert isinstance(right, SubProp)
+    assert isinstance(right.base, FuncCall)
+    assert right.base.name == "createFromSource"
+
+
+def test_create_query():
+    q = parse_query(
+        "CREATE (jordan:Person {name: 'Michael Jordan'}) "
+        "CREATE (scott:Person {name: 'Scott Pippen'}) "
+        "CREATE (jordan)-[:teamMate]->(scott);")
+    assert isinstance(q, CreateQuery)
+    assert len(q.patterns) == 3
+    assert q.patterns[0].nodes[0].props[0] == ("name", Literal("Michael Jordan"))
+
+
+def test_bool_precedence():
+    q = parse_query(
+        "MATCH (n) WHERE n.age > 30 AND n.name='x' OR NOT n.age < 10 "
+        "RETURN n.name")
+    assert isinstance(q.where, BoolOp) and q.where.op == "OR"
+
+
+def test_limit_and_alias():
+    q = parse_query("MATCH (n) RETURN n.name AS who LIMIT 7")
+    assert q.limit == 7
+    assert q.returns[0].alias == "who"
+
+
+def test_expr_vars():
+    q = parse_query(
+        "MATCH (n),(m) WHERE n.photo->face ~: m.photo->face RETURN n.name")
+    assert expr_vars(q.where) == {"n", "m"}
+
+
+def test_multi_pattern_match():
+    q = parse_query(
+        "MATCH (a:Person)-[:knows]->(b:Person), (b)-[:workFor]->(t:Team) "
+        "RETURN a.name, t.name")
+    assert len(q.patterns) == 2
+    assert len(q.returns) == 2
+
+
+def test_bad_syntax_raises():
+    with pytest.raises(SyntaxError):
+        parse_query("MATCH (n RETURN n")
+    with pytest.raises(SyntaxError):
+        parse_query("FROB (n) RETURN n")

@@ -1,0 +1,139 @@
+"""GNN tests: message passing, sampler, equivariance, chunking."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.data.sampler import CSRGraph, NeighborSampler, random_graph
+from repro.models.gnn import build_gnn
+from repro.models.gnn.common import gather_scatter, segment_mean, segment_softmax
+from repro.models.gnn.wigner import edge_wigner, l_slices, real_sph_harm
+
+RNG = np.random.default_rng(0)
+
+
+def _small_graph(n=48, e=160, d=12):
+    feats = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    pos = jnp.asarray(RNG.standard_normal((n, 3)), jnp.float32)
+    src = jnp.asarray(RNG.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, n, e), jnp.int32)
+    return feats, pos, src, dst, jnp.ones(e)
+
+
+def test_gather_scatter_vs_dense():
+    n, e, d = 16, 64, 8
+    feats, _, src, dst, mask = _small_graph(n, e, d)
+    out = gather_scatter(feats, src, dst, n)
+    a = np.zeros((n, n), np.float32)
+    np.add.at(a, (np.asarray(dst), np.asarray(src)), 1.0)
+    np.testing.assert_allclose(np.asarray(out), a @ np.asarray(feats),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segment_softmax_sums_to_one():
+    scores = jnp.asarray(RNG.standard_normal(100), jnp.float32)
+    seg = jnp.asarray(RNG.integers(0, 10, 100), jnp.int32)
+    p = segment_softmax(scores, seg, 10)
+    sums = jax.ops.segment_sum(p, seg, 10)
+    present = np.asarray(jax.ops.segment_sum(jnp.ones(100), seg, 10)) > 0
+    np.testing.assert_allclose(np.asarray(sums)[present], 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind,extra", [
+    ("gcn", {}),
+    ("graphsage", {}),
+    ("schnet", dict(n_rbf=32, cutoff=8.0)),
+    ("equiformer_v2", dict(l_max=2, m_max=1, n_heads=2, n_rbf=8, cutoff=5.0)),
+])
+def test_gnn_train_step_decreases_loss(kind, extra):
+    cfg = GNNConfig(kind=kind, n_layers=2, d_hidden=16, n_classes=3, **extra)
+    m = build_gnn(cfg)
+    feats, pos, src, dst, mask = _small_graph()
+    labels = jnp.asarray(RNG.integers(0, 3, 48), jnp.int32)
+    params = m.init(jax.random.key(0), 12, 3)
+
+    def loss_fn(p):
+        lg = m.node_logits(p, feats, pos, src, dst, mask, 48)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - ll)
+
+    l0 = float(loss_fn(params))
+    g = jax.grad(loss_fn)(params)
+    params2 = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
+    l1 = float(loss_fn(params2))
+    assert np.isfinite(l0) and l1 < l0, (kind, l0, l1)
+
+
+def test_equiformer_invariance_under_rotation():
+    """Invariant head output must be unchanged by a global rotation."""
+    cfg = GNNConfig(kind="equiformer_v2", n_layers=2, d_hidden=8, l_max=3,
+                    m_max=2, n_heads=2, n_rbf=8, cutoff=5.0)
+    m = build_gnn(cfg)
+    feats, pos, src, dst, mask = _small_graph(24, 80, 6)
+    params = m.init(jax.random.key(1), 6, 3)
+    out1 = m.node_logits(params, feats, pos, src, dst, mask, 24)
+    # random rotation matrix
+    a = np.linalg.qr(RNG.standard_normal((3, 3)))[0]
+    if np.linalg.det(a) < 0:
+        a[:, 0] *= -1
+    pos_rot = pos @ jnp.asarray(a.T, jnp.float32)
+    out2 = m.node_logits(params, feats, pos_rot, src, dst, mask, 24)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_equiformer_chunked_equals_flat():
+    cfg = GNNConfig(kind="equiformer_v2", n_layers=2, d_hidden=8, l_max=2,
+                    m_max=1, n_heads=2, n_rbf=8, cutoff=5.0)
+    m = build_gnn(cfg)
+    feats, pos, src, dst, mask = _small_graph(32, 128, 6)
+    params = m.init(jax.random.key(2), 6, 3)
+    l1 = m.node_logits(params, feats, pos, src, dst, mask, 32)
+    l2 = m.node_logits(params, feats, pos, src, dst, mask, 32, chunk=32)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_wigner_rotation_consistency():
+    rhat = RNG.standard_normal((4, 3))
+    rhat /= np.linalg.norm(rhat, axis=1, keepdims=True)
+    rhat = jnp.asarray(rhat, jnp.float32)
+    y = real_sph_harm(3, rhat)
+    yz = real_sph_harm(3, jnp.asarray([[0.0, 0.0, 1.0]]))[0]
+    for l, sl in enumerate(l_slices(3)):
+        d = edge_wigner(l, rhat)
+        rot = jnp.einsum("eij,ej->ei", d, y[:, sl])
+        np.testing.assert_allclose(np.asarray(rot),
+                                   np.tile(np.asarray(yz[sl]), (4, 1)),
+                                   atol=1e-5)
+
+
+def test_neighbor_sampler_block_shapes():
+    g = random_graph(500, avg_degree=6, d_feat=10, n_classes=4, seed=1)
+    sampler = NeighborSampler(g, fanout=(5, 3))
+    block = sampler.sample_block(np.arange(8))
+    assert block["feats"].shape == (8 * (1 + 5 + 15), 10)
+    assert block["src"].shape == block["dst"].shape == (8 * 5 + 8 * 5 * 3,)
+    assert (block["labels"][:8] >= 0).all()
+    assert (block["labels"][8:] == -1).all()
+    # edges reference valid node rows
+    assert block["src"].max() < len(block["feats"])
+    # hop-1 edges land on seed rows
+    assert set(block["dst"][:40].tolist()) <= set(range(8))
+
+
+def test_sampler_respects_graph_structure():
+    # star graph: node 0 <- everyone
+    n = 20
+    src = np.arange(1, n)
+    dst = np.zeros(n - 1, np.int64)
+    g = CSRGraph.from_edges(n, src, dst,
+                            np.zeros((n, 2), np.float32),
+                            np.zeros(n, np.int64))
+    s = NeighborSampler(g, fanout=(4,))
+    block = s.sample_block(np.array([0]))
+    sampled = block["node_ids"][1:]
+    assert set(sampled.tolist()) <= set(range(1, n))

@@ -1,0 +1,73 @@
+"""HLO analyzer: trip-count-scaled flops/bytes/collectives on known programs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 256), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    an = analyze(c.as_text())
+    expected = 2 * 64 * 128 * 256
+    assert an.flops == pytest.approx(expected, rel=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    a = jnp.zeros((32, 32), jnp.float32)
+    w = jnp.zeros((10, 32, 32), jnp.float32)
+
+    def fn(x, ws):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    c = _compile(fn, a, w)
+    an = analyze(c.as_text())
+    per_layer = 2 * 32 * 32 * 32
+    assert an.flops == pytest.approx(10 * per_layer, rel=0.05)
+    assert 10 in an.trip_counts
+
+
+def test_nested_scan_trip_product():
+    a = jnp.zeros((16, 16), jnp.float32)
+
+    def fn(x):
+        def outer(h, _):
+            def inner(g, _):
+                return jnp.tanh(g @ g), None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h
+
+    c = _compile(fn, a)
+    an = analyze(c.as_text())
+    per = 2 * 16 * 16 * 16
+    assert an.flops == pytest.approx(12 * per, rel=0.1)
+
+
+def test_bytes_positive_and_bounded():
+    a = jnp.zeros((256, 256), jnp.float32)
+    c = _compile(lambda x: (x + 1.0) * 2.0, a)
+    an = analyze(c.as_text())
+    nbytes = 256 * 256 * 4
+    assert nbytes <= an.bytes_accessed <= 8 * nbytes
+
+
+def test_parse_module_structure():
+    a = jnp.zeros((8, 8), jnp.float32)
+    c = _compile(lambda x: x @ x, a)
+    comps = parse_module(c.as_text())
+    assert any(c_.is_entry for c_ in comps.values())
+    entry = next(c_ for c_ in comps.values() if c_.is_entry)
+    assert len(entry.instrs) >= 1

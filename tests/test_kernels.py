@@ -1,0 +1,139 @@
+"""Pallas kernel sweeps: shapes x dtypes vs ref.py oracles (interpret=True)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ivf_scan.ivf_scan import ivf_scan_topk_pallas
+from repro.kernels.ivf_scan.ops import ivf_scan_topk
+from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# -- ivf_scan ----------------------------------------------------------------
+
+@pytest.mark.parametrize("qn,n,d,k", [(1, 512, 32, 1), (4, 1024, 64, 8),
+                                      (16, 2048, 128, 16), (8, 512, 96, 32)])
+@pytest.mark.parametrize("metric", ["l2", "ip", "cosine"])
+def test_ivf_scan_shapes(qn, n, d, k, metric):
+    q = jnp.asarray(RNG.standard_normal((qn, d)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    v1, i1 = ivf_scan_topk_pallas(q, c, k, metric=metric, interpret=True)
+    v2, i2 = ivf_scan_topk_ref(q, c, k, metric)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ivf_scan_dtypes(dtype):
+    q = jnp.asarray(RNG.standard_normal((4, 64)), dtype)
+    c = jnp.asarray(RNG.standard_normal((1024, 64)), dtype)
+    v1, i1 = ivf_scan_topk_pallas(q, c, 8, metric="ip", interpret=True)
+    v2, i2 = ivf_scan_topk_ref(q, c, 8, "ip")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), **_tol(dtype))
+
+
+def test_ivf_ops_fallback_large_k():
+    q = jnp.asarray(RNG.standard_normal((2, 32)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((1024, 32)), jnp.float32)
+    v, i = ivf_scan_topk(q, c, k=500)          # falls back to XLA path
+    v2, i2 = ivf_scan_topk_ref(q, c, 500, "l2")
+    assert np.array_equal(np.asarray(i), np.asarray(i2))
+
+
+# -- flash attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,d,bq,bkv", [
+    (1, 128, 1, 32, 64, 64),
+    (2, 256, 4, 64, 128, 128),
+    (1, 512, 2, 128, 256, 128),
+    (2, 256, 2, 64, 64, 256),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(b, s, h, d, bq, bkv, causal):
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    o1 = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                block_kv=bkv, interpret=True)
+    o2 = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), dtype)
+    k = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), dtype)
+    v = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), dtype)
+    o1 = flash_attention_pallas(q, k, v, interpret=True)
+    o2 = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **_tol(dtype))
+
+
+def test_flash_matches_chunked_jnp():
+    from repro.models.attention import chunked_attention
+    q = jnp.asarray(RNG.standard_normal((2, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 256, 4, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 256, 4, 64)), jnp.float32)
+    o1 = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    o2 = chunked_attention(q, k, v, causal=True, block_kv=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- decode attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kvh,d,splits,bs", [
+    (1, 512, 4, 4, 64, 1, 512),
+    (2, 2048, 8, 2, 64, 4, 256),
+    (2, 1024, 16, 8, 128, 2, 512),
+    (4, 4096, 8, 1, 64, 8, 512),
+])
+def test_decode_attention_shapes(b, s, h, kvh, d, splits, bs):
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kvh, d)), jnp.float32)
+    pos = jnp.asarray(RNG.integers(1, s, b), jnp.int32)
+    o1 = decode_attention_pallas(q, k, v, pos, n_splits=splits, block_s=bs,
+                                 interpret=True)
+    o2 = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    q = jnp.asarray(RNG.standard_normal((2, 1, 4, 64)), dtype)
+    k = jnp.asarray(RNG.standard_normal((2, 1024, 2, 64)), dtype)
+    v = jnp.asarray(RNG.standard_normal((2, 1024, 2, 64)), dtype)
+    pos = jnp.asarray([100, 900], jnp.int32)
+    o1 = decode_attention_pallas(q, k, v, pos, n_splits=2, interpret=True)
+    o2 = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **_tol(dtype))
+
+
+def test_decode_matches_model_decode():
+    """Kernel ref == the model's grouped decode_attention (same math)."""
+    from repro.models.attention import decode_attention as model_decode
+    q = jnp.asarray(RNG.standard_normal((2, 1, 8, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 256, 4, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 256, 4, 32)), jnp.float32)
+    pos = jnp.asarray([77, 200], jnp.int32)
+    o1 = decode_attention_ref(q, k, v, pos)
+    o2 = model_decode(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
+                               atol=1e-5)

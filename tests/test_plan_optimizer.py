@@ -1,0 +1,121 @@
+"""Algorithm 1 (greedy cost-based optimization) behaviour tests.
+
+The paper's central claim (§V, Fig 3/4): when the semantic filter is much
+slower per row than structured operators, the optimized plan runs it LAST
+(fewest input rows); the naive planner that treats it as an ordinary filter
+runs it early and pays 10-100x.
+"""
+import numpy as np
+import pytest
+
+from repro.core import logical_plan as lp
+from repro.core.cost_model import StatisticsService, estimate_plan_cost
+from repro.core.cypherplus import parse_query
+from repro.core.plan_optimizer import QueryGraph, naive_plan, optimize
+
+
+def _qg(text):
+    return QueryGraph.from_query(parse_query(text))
+
+
+def _stats(n_nodes=1000, semantic_speed=0.3):
+    s = StatisticsService()
+    s.n_nodes = n_nodes
+    s.label_counts = {"Person": n_nodes // 2, "Pet": n_nodes // 10}
+    s.avg_degree = 3.0
+    s.speeds["semantic_filter:animal"] = semantic_speed
+    s.speeds["semantic_filter:face"] = semantic_speed
+    s.speeds["filter"] = 1e-7
+    s.structured_selectivity = 0.01   # name= is a point lookup
+    return s
+
+
+Q2 = ("MATCH (n:Person)-[:hasPet]->(p:Pet) "
+      "WHERE n.name='Michael Jordan' AND p.photo->animal='cat' "
+      "RETURN p.name")
+
+
+def _ops(plan):
+    return list(lp.plan_ops(plan))
+
+
+def test_plan_covers_all_vars():
+    qg = _qg(Q2)
+    plan = optimize(qg, _stats())
+    assert {"n", "p"} <= plan.vars
+
+
+def test_all_predicates_applied_exactly_once():
+    qg = _qg(Q2)
+    plan = optimize(qg, _stats())
+    filters = [o for o in _ops(plan) if isinstance(o, (lp.Filter, lp.SemanticFilter))]
+    assert sorted(f.pred_id for f in filters) == list(range(len(qg.predicates)))
+
+
+def test_semantic_filter_applied_last_when_slow():
+    """Fig 3(c): slow semantic filter sinks below structured work."""
+    qg = _qg(Q2)
+    plan = optimize(qg, _stats(semantic_speed=1.0))
+    sem = [o for o in _ops(plan) if isinstance(o, lp.SemanticFilter)]
+    assert len(sem) == 1
+    # the semantic filter's child must already include the structured filter
+    child_ops = _ops(sem[0].child)
+    assert any(isinstance(o, lp.Filter) for o in child_ops), \
+        f"semantic filter ran before structured work:\n{plan.describe()}"
+    assert any(isinstance(o, lp.Expand) for o in child_ops)
+
+
+def test_optimized_cheaper_than_naive():
+    qg = _qg(Q2)
+    stats = _stats(semantic_speed=1.0)
+    opt_cost = estimate_plan_cost(optimize(qg, stats), stats)
+    naive_cost = estimate_plan_cost(naive_plan(qg, stats), stats)
+    assert opt_cost < naive_cost
+    # the paper reports ~an order of magnitude (Fig 10)
+    assert naive_cost / opt_cost > 5.0
+
+
+def test_semantic_filter_early_when_fast():
+    """If the 'semantic' op is measured to be as cheap as structured ops, the
+    greedy order may run it early -- cost-driven, not type-driven."""
+    qg = _qg(Q2)
+    stats = _stats(semantic_speed=1e-8)
+    plan = optimize(qg, stats)
+    # still valid + all predicates applied
+    filters = [o for o in _ops(plan) if isinstance(o, (lp.Filter, lp.SemanticFilter))]
+    assert len(filters) == len(qg.predicates)
+
+
+def test_triangle_query_converges():
+    qg = _qg("MATCH (a:Person)-[:knows]->(b:Person), (b)-[:knows]->(c:Person),"
+             " (a)-[:knows]->(c) WHERE a.name='x' RETURN c.name")
+    plan = optimize(qg, _stats())
+    assert {"a", "b", "c"} <= plan.vars
+
+
+def test_disconnected_patterns_cross_join():
+    qg = _qg("MATCH (a:Person), (b:Pet) WHERE a.name='x' RETURN b.name")
+    plan = optimize(qg, _stats())
+    assert {"a", "b"} <= plan.vars
+
+
+def test_label_scan_beats_all_node_scan():
+    qg = _qg("MATCH (p:Pet) WHERE p.name='x' RETURN p.name")
+    plan = optimize(qg, _stats())
+    assert any(isinstance(o, lp.NodeByLabelScan) for o in _ops(plan))
+    assert not any(isinstance(o, lp.AllNodeScan) for o in _ops(plan))
+
+
+def test_estimate_rows_shrinks_through_filters():
+    stats = _stats()
+    scan = lp.NodeByLabelScan("n", "Person")
+    filt = lp.Filter(scan, None, 0)
+    assert stats.estimate_rows(filt) < stats.estimate_rows(scan)
+
+
+def test_speed_statistics_ewma():
+    s = StatisticsService()
+    s.record("semantic_filter:face", total_time=30.0, n_rows=100)  # 0.3 s/row
+    assert s.speeds["semantic_filter:face"] == pytest.approx(0.3)
+    s.record("semantic_filter:face", total_time=10.0, n_rows=100)  # 0.1 s/row
+    assert 0.1 < s.speeds["semantic_filter:face"] < 0.3

@@ -1,0 +1,172 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# -- distributed top-k == global top-k -----------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(32, 256),
+    k=st.integers(1, 8),
+    shards=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_distributed_topk_equals_global(n, k, shards, seed):
+    from repro.core.vector_index import distributed_knn, scan_topk
+    rng = np.random.default_rng(seed)
+    corpus = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    ids = jnp.arange(n)
+    q = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    v_g, _ = scan_topk(q, corpus, ids, k, "l2")
+    cs = [corpus[i::shards] for i in range(shards)]
+    iss = [ids[i::shards] for i in range(shards)]
+    v_d, _ = distributed_knn(q, cs, iss, k, "l2")
+    np.testing.assert_allclose(np.asarray(v_g), np.asarray(v_d), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -- IVF invariants --------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(64, 400), seed=st.integers(0, 1000))
+def test_ivf_partition_is_total(n, seed):
+    from repro.configs.pandadb import VectorIndexConfig
+    from repro.core.vector_index import IVFIndex
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, 8)).astype(np.float32)
+    idx = IVFIndex.build(vecs, cfg=VectorIndexConfig(
+        dim=8, vectors_per_bucket=50, min_buckets=2, kmeans_iters=2),
+        seed=seed)
+    # every vector exactly once; ids form a permutation
+    assert idx.vectors.shape[0] == n
+    assert sorted(idx.ids.tolist()) == list(range(n))
+    # bucket slices tile the array
+    m = idx.centroids.shape[0]
+    total = sum(idx.bucket_slice(b)[1] - idx.bucket_slice(b)[0]
+                for b in range(m))
+    assert total == n
+
+
+# -- EmbeddingBag ragged == dense --------------------------------------------------
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 6), h=st.integers(1, 4), seed=st.integers(0, 999))
+def test_embedding_bag_layout_equivalence(b, h, seed):
+    from repro.models.recsys.embedding_bag import (
+        embedding_bag_dense, embedding_bag_ragged)
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((30, 4)), jnp.float32)
+    ids2d = rng.integers(0, 30, (b, h))
+    ragged = embedding_bag_ragged(
+        table, jnp.asarray(ids2d.reshape(-1), jnp.int32),
+        jnp.asarray(np.arange(b) * h, jnp.int32), b, mode="sum")
+    dense = embedding_bag_dense(table[None],
+                                jnp.asarray(ids2d[:, None, :]),
+                                mode="sum")[:, 0]
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- plan optimizer: any well-formed query graph converges + covers -----------------
+
+_LABELS = ["A", "B", "C"]
+
+
+@settings(**SETTINGS)
+@given(
+    n_nodes=st.integers(1, 4),
+    n_edges=st.integers(0, 4),
+    n_preds=st.integers(0, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_optimizer_always_covers(n_nodes, n_edges, n_preds, seed):
+    from repro.core import logical_plan as lp
+    from repro.core.cost_model import StatisticsService
+    from repro.core.cypherplus import Compare, Literal, NodePattern, Prop, SubProp
+    from repro.core.plan_optimizer import QueryEdge, QueryGraph, optimize
+    rng = np.random.default_rng(seed)
+    names = [f"v{i}" for i in range(n_nodes)]
+    nodes = {v: NodePattern(v, _LABELS[i % 3]) for i, v in enumerate(names)}
+    edges = []
+    for _ in range(n_edges):
+        a, b = rng.choice(names, 2)
+        edges.append(QueryEdge(str(a), str(b), "knows", "out"))
+    preds = []
+    for i in range(n_preds):
+        v = str(rng.choice(names))
+        if i % 2:
+            preds.append(Compare("=", Prop(v, "name"), Literal("x")))
+        else:
+            preds.append(Compare("=", SubProp(Prop(v, "photo"), "face"),
+                                 Literal("y")))
+    qg = QueryGraph(nodes, edges, preds)
+    stats = StatisticsService()
+    stats.n_nodes = 100
+    stats.label_counts = {l: 30 for l in _LABELS}
+    plan = optimize(qg, stats)
+    assert set(names) <= set(plan.vars)
+    applied = plan.applied
+    assert applied == set(range(len(preds)))
+
+
+# -- WAL: catch-up is idempotent + complete -------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(0, 20), start=st.integers(0, 20))
+def test_wal_catchup_reaches_head(n, start):
+    from repro.graphstore.wal import WriteAheadLog
+    wal = WriteAheadLog()
+    for i in range(n):
+        wal.append(f"s{i}")
+    start = min(start, n)
+    executed = []
+    v = wal.catch_up(start, executed.append)
+    assert v == max(n, start) if start <= n else True
+    assert len(executed) == n - start
+    # second catch-up is a no-op
+    executed2 = []
+    v2 = wal.catch_up(v, executed2.append)
+    assert v2 == v and executed2 == []
+
+
+# -- gradient compression: error feedback is bounded ---------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500))
+def test_compression_error_feedback_unbiased(seed):
+    from repro.training.compression import compress, decompress, init_error_feedback
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)}
+    e = init_error_feedback(g)
+    total_true = jnp.zeros((16, 16))
+    total_deq = jnp.zeros((16, 16))
+    for _ in range(8):
+        q, s, e = compress(g, e)
+        deq = decompress(q, s)
+        total_true += g["w"]
+        total_deq += deq["w"]
+    # accumulated dequantized sum tracks the true sum within one quant step
+    resid = np.abs(np.asarray(total_true - total_deq - e["w"])).max()
+    assert resid < 1e-4
+
+
+# -- merge_topk: permutation invariance -------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), parts=st.integers(2, 5))
+def test_merge_topk_permutation_invariant(seed, parts):
+    from repro.core.vector_index import merge_topk
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal((parts, 3, 4)), jnp.float32)
+    i = jnp.asarray(rng.integers(0, 10_000, (parts, 3, 4)))
+    v1, _ = merge_topk(v, i, 4)
+    perm = rng.permutation(parts)
+    v2, _ = merge_topk(v[perm], i[perm], 4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)

@@ -1,0 +1,117 @@
+"""IVF-Flat index (Algorithm 2) + distributed kNN tests."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core.vector_index import (
+    IVFIndex,
+    distributed_knn,
+    merge_topk,
+    pairwise_scores,
+    recall_at_k,
+    scan_topk,
+)
+from repro.data.synthetic_graph import sift_like_vectors
+
+
+@pytest.fixture(scope="module")
+def index():
+    vecs = sift_like_vectors(4000, dim=32, n_clusters=16, seed=1)
+    cfg = VectorIndexConfig(dim=32, metric="l2", vectors_per_bucket=250,
+                            min_buckets=8, nprobe=4, kmeans_iters=4)
+    return IVFIndex.build(vecs, cfg=cfg, seed=0)
+
+
+def test_build_bucket_count(index):
+    m = index.centroids.shape[0]
+    assert m >= 8          # n // vectors_per_bucket = 16, min 8
+    assert index.vectors.shape[0] == 4000
+    assert np.all(np.diff(index.bucket_of) >= 0)   # sorted by bucket
+
+
+def test_every_vector_in_nearest_centroid(index):
+    """Algorithm-2 invariant: assignment = nearest core vector."""
+    s = np.asarray(pairwise_scores(jnp.asarray(index.vectors),
+                                   jnp.asarray(index.centroids), "l2"))
+    nearest = s.argmax(axis=1)
+    assert (nearest == index.bucket_of).mean() > 0.999
+
+
+def test_knn_recall(index):
+    """Paper Fig 11: average recall stable above 0.95."""
+    rng = np.random.default_rng(2)
+    queries = index.vectors[rng.choice(4000, 32)] + \
+        rng.standard_normal((32, 32)).astype(np.float32) * 0.01
+    for k in (1, 10, 100):
+        r = recall_at_k(index, queries, k, nprobe=6)
+        assert r >= 0.95, (k, r)
+
+
+def test_recall_increases_with_nprobe(index):
+    rng = np.random.default_rng(3)
+    queries = rng.standard_normal((16, 32)).astype(np.float32)
+    r_lo = recall_at_k(index, queries, 10, nprobe=1)
+    r_hi = recall_at_k(index, queries, 10, nprobe=index.centroids.shape[0])
+    assert r_hi >= r_lo
+    assert r_hi == pytest.approx(1.0)   # probing all buckets == exact
+
+
+def test_dynamic_insert(index):
+    # well-separated from the corpus (matmul-form L2 has ~1e-5 fp32 noise,
+    # so near-duplicates can tie; distance 0.5 is unambiguous)
+    v = index.vectors[7] + 0.5
+    n0 = index.vectors.shape[0]
+    b = index.insert(v, ext_id=999_999)
+    assert index.vectors.shape[0] == n0 + 1
+    vals, ids = index.search(v[None], k=1, nprobe=4)
+    assert ids[0, 0] == 999_999
+    # restore module-scoped index (remove inserted row)
+    keep = index.ids != 999_999
+    index.vectors = index.vectors[keep]
+    index.ids = index.ids[keep]
+    index.bucket_of = index.bucket_of[keep]
+
+
+def test_distributed_knn_equals_global():
+    rng = np.random.default_rng(4)
+    corpus = jnp.asarray(rng.standard_normal((1024, 16)), jnp.float32)
+    ids = jnp.arange(1024)
+    q = jnp.asarray(rng.standard_normal((5, 16)), jnp.float32)
+    v_g, i_g = scan_topk(q, corpus, ids, 8, "l2")
+    shards = [corpus[i::4] for i in range(4)]
+    id_shards = [ids[i::4] for i in range(4)]
+    v_d, i_d = distributed_knn(q, shards, id_shards, 8, "l2")
+    np.testing.assert_allclose(np.asarray(v_g), np.asarray(v_d), rtol=1e-5)
+    assert np.array_equal(np.asarray(i_g), np.asarray(i_d))
+
+
+def test_merge_topk_associative():
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.standard_normal((6, 3, 8)), jnp.float32)
+    i = jnp.asarray(rng.integers(0, 1000, (6, 3, 8)))
+    v_all, i_all = merge_topk(v, i, 8)
+    # split merge: (first 3) + (last 3) then merge again
+    v1, i1 = merge_topk(v[:3], i[:3], 8)
+    v2, i2 = merge_topk(v[3:], i[3:], 8)
+    v12, i12 = merge_topk(jnp.stack([v1, v2]), jnp.stack([i1, i2]), 8)
+    np.testing.assert_allclose(np.asarray(v_all), np.asarray(v12), rtol=1e-6)
+
+
+def test_index_shard_partition(index):
+    shards = index.shard(4)
+    assert sum(s.vectors.shape[0] for s in shards) == index.vectors.shape[0]
+    for s in shards:
+        assert s.centroids is index.centroids     # replicated
+
+
+def test_metrics():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((20, 8)), jnp.float32)
+    s_l2 = np.asarray(pairwise_scores(q, c, "l2"))
+    manual = -((np.asarray(q)[:, None] - np.asarray(c)[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(s_l2, manual, rtol=1e-4, atol=1e-4)
+    s_cos = np.asarray(pairwise_scores(q, c, "cosine"))
+    assert np.all(s_cos <= 1.0 + 1e-5)
