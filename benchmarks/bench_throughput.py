@@ -1,18 +1,35 @@
 """Paper Fig 8: throughput + response time under growing concurrency.
 
 Closed-loop clients (the JMeter pattern) against the QueryServer; reports
-QPS and p50/p99 latency at several client counts."""
+QPS and p50/p99 latency at several client counts.  Two server modes:
+
+* ``prepared``  -- driver path: per-worker sessions, ``$param`` statements
+  prepared once per skeleton, plans served from the shared cache.
+* ``per-call``  -- the seed's path: every request re-parses + re-optimizes
+  (sessions with the plan cache disabled).
+
+The derived column carries the plan-cache counters, proving the prepared
+path planned each skeleton once.
+"""
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import build_snb_db, emit
 
 
-def run() -> None:
-    from repro.serving.engine import QueryServer
-
-    db = build_snb_db(120)
-    db.build_index("face", "photo")
-    queries = [
+def make_queries(parameterized: bool):
+    if parameterized:
+        return [
+            ("MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name=$who "
+             "RETURN t.name", {"who": "person_3"}),
+            ("MATCH (n:Person)-[:knows]->(m:Person) WHERE n.name=$who "
+             "RETURN m.name", {"who": "person_1"}),
+            ("MATCH (n:Person), (m:Person) WHERE n.name=$who "
+             "AND n.photo->face ~: m.photo->face RETURN m.name",
+             {"who": "person_2"}),
+        ]
+    return [
         "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name='person_3' "
         "RETURN t.name",
         "MATCH (n:Person)-[:knows]->(m:Person) WHERE n.name='person_1' "
@@ -20,17 +37,47 @@ def run() -> None:
         "MATCH (n:Person), (m:Person) WHERE n.name='person_2' "
         "AND n.photo->face ~: m.photo->face RETURN m.name",
     ]
-    # warm the cache once (paper reports steady-state ~20 ms responses)
-    for q in queries:
+
+
+def run(n_persons: int = 120, duration_s: float = 1.5,
+        client_counts=(1, 4, 16)) -> dict:
+    from repro.serving.engine import QueryServer
+
+    db = build_snb_db(n_persons)
+    db.build_index("face", "photo")
+    # warm the semantic cache once (paper reports steady-state ~20 ms)
+    for q in make_queries(parameterized=False):
         db.query(q)
-    for n_clients in (1, 4, 16):
-        server = QueryServer(db, n_workers=2)
-        stats = server.run_closed_loop(queries, n_clients=n_clients,
-                                       duration_s=1.5)
-        s = stats.summary()
-        emit(f"fig8/clients_{n_clients}/latency", s["mean_ms"] * 1000,
-             f"qps={s['throughput_qps']:.0f};p99_ms={s['p99_ms']:.1f}")
+
+    results = {}
+    for mode, use_prepared in (("per-call", False), ("prepared", True)):
+        db.plan_cache.clear()
+        queries = make_queries(parameterized=use_prepared)
+        for n_clients in client_counts:
+            server = QueryServer(db, n_workers=2, use_prepared=use_prepared)
+            stats = server.run_closed_loop(queries, n_clients=n_clients,
+                                           duration_s=duration_s)
+            s = stats.summary()
+            pc = db.plan_cache.stats()
+            emit(f"fig8/{mode}/clients_{n_clients}/latency",
+                 s["mean_ms"] * 1000,
+                 f"qps={s['throughput_qps']:.0f};p99_ms={s['p99_ms']:.1f};"
+                 f"plan_hits={pc['hits']};plan_misses={pc['misses']}")
+            results[(mode, n_clients)] = s["throughput_qps"]
+    for n_clients in client_counts:
+        ratio = (results[("prepared", n_clients)]
+                 / max(results[("per-call", n_clients)], 1e-9))
+        emit(f"fig8/prepared_speedup/clients_{n_clients}", ratio * 100,
+             f"prepared/per-call qps ratio={ratio:.2f}x")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config for CI: tiny graph, short duration")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_persons=30, duration_s=0.4, client_counts=(1, 4))
+    else:
+        run()

@@ -33,10 +33,13 @@ def main() -> None:
     print(f"face index: {index.centroids.shape[0]} buckets, "
           f"{index.vectors.shape[0]} vectors")
 
-    # resolve duplicates for a query scholar
-    rows = db.query(
-        "MATCH (n:Person), (m:Person) WHERE n.name='person_3' "
+    # resolve duplicates for a query scholar: one prepared statement serves
+    # every disambiguation request (plan optimized once, $name bound per call)
+    session = db.session()
+    resolve = session.prepare(
+        "MATCH (n:Person), (m:Person) WHERE n.name=$name "
         "AND n.photo->face ~: m.photo->face RETURN m.name")
+    rows = resolve.run(name="person_3").fetchall()
     dup_names = sorted(r["m.name"] for r in rows)
     print(f"\nrecords matching person_3's face: {dup_names}")
     truth = {f"person_{i}" for i in range(90) if i % 30 == 3}
@@ -46,10 +49,13 @@ def main() -> None:
           f"recall={len(found & truth) / len(truth):.2f}")
 
     # the graph side: merge implied affiliations of the duplicates
-    rows = db.query(
-        "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name='person_3' "
-        "RETURN t.name")
+    rows = session.run(
+        "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name=$name "
+        "RETURN t.name", name="person_3").fetchall()
     print(f"\naffiliation via graph expand: {rows}")
+    print("plan cache:", session.explain(
+        "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name=$name "
+        "RETURN t.name")["plan_cache"])
     print("cache:", db.cache.stats())
     print("extractor speed stats feed the cost model:",
           {k: f"{db.registry.get(k).avg_speed * 1e6:.1f}us/row"

@@ -46,10 +46,14 @@ def main() -> None:
     with open("/tmp/viewer_snapshot.bin", "wb") as f:
         f.write(snapshot)
 
-    rows = db.query(
+    # driver session + prepared statement: the snapshot path arrives as a
+    # $param, so every viewer request reuses ONE optimized plan
+    session = db.session()
+    lookup = session.prepare(
         "MATCH (a:Actor)-[:participatedIn]->(m:Movie) "
-        "WHERE a.photo->face ~: createFromSource('/tmp/viewer_snapshot.bin')->face "
+        "WHERE a.photo->face ~: createFromSource($snapshot)->face "
         "RETURN a.name, m.title")
+    rows = lookup.run(snapshot="/tmp/viewer_snapshot.bin").fetchall()
     names = {r["a.name"] for r in rows}
     films = sorted({r["m.title"] for r in rows})
     print(f"matched actor(s): {sorted(names)}")

@@ -29,33 +29,44 @@ def main() -> None:
     db.graph.create_relationship(jordan, bulls, "workFor")
     db.graph.create_relationship(jordan, pet, "hasPet")
     db.graph.create_relationship(jordan, pippen, "teamMate")
+    db.graph.create_relationship(pippen, jordan, "teamMate")
     db.graph.create_relationship(jordan, kerr, "teamMate")
     db.graph.create_relationship(kerr, warriors, "coachOf")
 
-    print("Q: who are Michael Jordan's teammates?")
-    print(db.query("MATCH (n:Person)-[:teamMate]->(m:Person) "
-                   "WHERE n.name='Michael Jordan' RETURN m.name"))
+    # driver-style session: prepare once, bind $params per run
+    session = db.session()
+
+    print("Q: who are X's teammates?  (prepared statement, $param binding)")
+    teammates = session.prepare(
+        "MATCH (n:Person)-[:teamMate]->(m:Person) "
+        "WHERE n.name=$who RETURN m.name")
+    print([r["m.name"] for r in teammates.run(who="Michael Jordan")])
 
     print("\nQ1 (paper): what animal is Michael Jordan's pet?")
-    print(db.query("MATCH (n:Person)-[:hasPet]->(p:Pet) "
-                   "WHERE n.name='Michael Jordan' "
-                   "RETURN p.name, p.photo->animal"))
+    cur = session.run("MATCH (n:Person)-[:hasPet]->(p:Pet) "
+                      "WHERE n.name=$who RETURN p.name, p.photo->animal",
+                      who="Michael Jordan")
+    print(cur.fetchall())
 
     print("\nQ3 (paper): is Jordan's former teammate the Warriors' coach? "
           "(face similarity)")
-    print(db.query(
+    print(session.run(
         "MATCH (n:Person)-[:teamMate]->(m:Person), (c:Person)-[:coachOf]->(t:Team) "
-        "WHERE n.name='Michael Jordan' AND t.name='Golden State Warriors' "
-        "AND m.photo->face ~: c.photo->face RETURN m.name"))
+        "WHERE n.name=$who AND t.name=$team "
+        "AND m.photo->face ~: c.photo->face RETURN m.name",
+        who="Michael Jordan", team="Golden State Warriors").fetchall())
 
     print("\nOptimized vs naive plan (the cost-based greedy re-ordering):")
-    ex = db.explain("MATCH (n:Person)-[:hasPet]->(p:Pet) "
-                    "WHERE n.name='Michael Jordan' AND p.photo->animal='cat' "
-                    "RETURN p.name")
+    ex = session.explain("MATCH (n:Person)-[:hasPet]->(p:Pet) "
+                         "WHERE n.name='Michael Jordan' AND p.photo->animal='cat' "
+                         "RETURN p.name")
     print(ex["optimized"])
     print(f"est cost: optimized={ex['optimized_cost']:.4f} "
           f"naive={ex['naive_cost']:.4f}")
-    print("\ncache:", db.cache.stats())
+    print("\nre-running the prepared statement hits the plan cache:")
+    print([r["m.name"] for r in teammates.run(who="Scott Pippen")])
+    print("plan cache:", db.plan_cache.stats())
+    print("semantic cache:", db.cache.stats())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the full test suite plus a quick serving-benchmark smoke.
+#
+#   scripts/verify.sh            # tests + bench smoke
+#   scripts/verify.sh --fast     # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo
+  echo "== bench smoke: prepared-statement serving throughput =="
+  PYTHONPATH="src:.:${PYTHONPATH}" python benchmarks/bench_throughput.py --smoke
+fi
+
+echo
+echo "verify OK"

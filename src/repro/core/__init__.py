@@ -1,5 +1,11 @@
 """PandaDB core: data model, CypherPlus, cost-based optimizer, executor,
-semantic cache, vector index, AIPM extractor protocol."""
+driver-style sessions, semantic cache, vector index, AIPM extractor protocol."""
 from repro.core.property_graph import PandaGraph  # noqa: F401
 from repro.core.cypherplus import parse_query  # noqa: F401
 from repro.core.database import PandaDB  # noqa: F401
+from repro.core.session import (  # noqa: F401
+    Cursor,
+    PlanCache,
+    PreparedStatement,
+    Session,
+)

@@ -31,6 +31,10 @@ class StatisticsService:
         self.avg_degree: float = 4.0
         self.structured_selectivity: float = 0.1
         self.semantic_selectivity: float = 0.5
+        # epoch bumps whenever a refresh observes changed cardinalities; the
+        # plan cache keys on it so stale plans are re-optimized, not reused
+        self.epoch = 0
+        self._graph_sig: Optional[tuple] = None
 
     # -- speed statistics ------------------------------------------------------
 
@@ -47,6 +51,11 @@ class StatisticsService:
         speed = total_time / n_rows
         a = self.cfg.ewma_alpha
         old = self.speeds.get(key)
+        if old is None and key.startswith("semantic_filter:"):
+            # first real measurement of a φ family replaces the prior
+            # (paper-calibrated default, often off by orders of magnitude);
+            # bump the epoch so cached plans re-optimize with the truth
+            self.epoch += 1
         self.speeds[key] = speed if old is None else a * speed + (1 - a) * old
         self.counts[key] = self.counts.get(key, 0) + n_rows
 
@@ -69,6 +78,11 @@ class StatisticsService:
     # -- cardinality -----------------------------------------------------------
 
     def refresh_from_graph(self, graph) -> None:
+        sig = (graph.n_nodes, graph.n_relationships)
+        if sig == self._graph_sig:
+            return          # unchanged cardinalities: keep epoch stable
+        self._graph_sig = sig
+        self.epoch += 1
         self.n_nodes = max(1, graph.n_nodes)
         self.avg_degree = graph.n_relationships / self.n_nodes if self.n_nodes else 0
         labels = np.asarray(graph.store.node_labels)

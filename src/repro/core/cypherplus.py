@@ -17,6 +17,12 @@ Supported grammar (the subset the paper's examples exercise, plus CREATE):
      x '<:' y                x contained in y
      x '>:' y                y contained in x
   literal    := string | number | createFromSource('...') | param
+  param      := '$' name          late-bound placeholder (prepare/bind/execute)
+
+Parameters (`$name`) may appear anywhere a literal may (WHERE operands,
+node-pattern property values, createFromSource arguments) and after LIMIT.
+They are bound at execution time, so one parsed+optimized plan serves every
+binding of the same query skeleton.
 """
 from __future__ import annotations
 
@@ -68,6 +74,12 @@ class Literal:
 
 
 @dataclasses.dataclass(frozen=True)
+class Param:
+    """``$name`` placeholder, resolved from the bind-time parameter map."""
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
 class FuncCall:
     name: str
     args: Tuple[Any, ...]
@@ -97,7 +109,7 @@ class MatchQuery:
     patterns: Tuple[PathPattern, ...]
     where: Optional[Any]
     returns: Tuple[ReturnItem, ...]
-    limit: Optional[int] = None
+    limit: Optional[Union[int, "Param"]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +154,38 @@ def expr_vars(expr: Any) -> set:
     return set()
 
 
+def expr_params(expr: Any) -> set:
+    """Names of ``$param`` placeholders referenced by an expression."""
+    if isinstance(expr, Param):
+        return {expr.name}
+    if isinstance(expr, SubProp):
+        return expr_params(expr.base)
+    if isinstance(expr, Compare):
+        return expr_params(expr.left) | expr_params(expr.right)
+    if isinstance(expr, (BoolOp, FuncCall)):
+        s: set = set()
+        for a in expr.args:
+            s |= expr_params(a)
+        return s
+    return set()
+
+
+def query_params(q: Query) -> set:
+    """All ``$param`` names a parsed query needs bound before execution."""
+    names: set = set()
+    for pat in q.patterns:
+        for node in pat.nodes:
+            for _, v in node.props:
+                names |= expr_params(v)
+    if isinstance(q, MatchQuery):
+        names |= expr_params(q.where) if q.where is not None else set()
+        for item in q.returns:
+            names |= expr_params(item.expr)
+        if isinstance(q.limit, Param):
+            names.add(q.limit.name)
+    return names
+
+
 # ---------------------------------------------------------------------------
 # Lexer
 # ---------------------------------------------------------------------------
@@ -160,6 +204,7 @@ _TOKEN_RE = re.compile(r"""
   | (?P<cin><:)
   | (?P<cout>>:)
   | (?P<le><=) | (?P<ge>>=) | (?P<ne><>)
+  | (?P<param>\$[A-Za-z_][A-Za-z0-9_]*)
   | (?P<num>\d+\.\d+|\d+)
   | (?P<str>'[^']*'|"[^"]*")
   | (?P<name>[A-Za-z_][A-Za-z0-9_]*)
@@ -254,7 +299,8 @@ class Parser:
             items.append(self.parse_return_item())
         limit = None
         if self.accept("kw", "LIMIT"):
-            limit = int(self.expect("num").text)
+            p = self.accept("param")
+            limit = Param(p.text[1:]) if p else int(self.expect("num").text)
         self.accept("sym", ";")
         return MatchQuery(tuple(patterns), where, tuple(items), limit)
 
@@ -373,6 +419,8 @@ class Parser:
             return Literal(t.text == "TRUE")
         if t.kind == "kw" and t.text == "NULL":
             return Literal(None)
+        if t.kind == "param":
+            return Param(t.text[1:])
         if t.kind == "name":
             # function call?
             if self.peek().kind == "sym" and self.peek().text == "(":

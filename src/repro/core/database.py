@@ -12,10 +12,16 @@ from repro.core import logical_plan as lp
 from repro.core.aipm import AIPMService, ModelRegistry
 from repro.core.cost_model import StatisticsService, estimate_plan_cost
 from repro.core.cypherplus import CreateQuery, MatchQuery, parse_query
-from repro.core.executor import ExecutionContext, execute
 from repro.core.plan_optimizer import QueryGraph, naive_plan, optimize
 from repro.core.property_graph import PandaGraph
 from repro.core.semantic_cache import SemanticCache
+from repro.core.session import (
+    PlanCache,
+    RWLock,
+    Session,
+    bind_text,
+    plan_query,
+)
 from repro.core.vector_index import IVFIndex
 
 
@@ -30,6 +36,20 @@ class PandaDB:
         self.stats = StatisticsService(self.cfg.cost)
         self.indexes: Dict[str, IVFIndex] = {}
         self.scalar_indexes: Dict[str, Any] = {}   # NumericIndex | InvertedIndex
+        self.plan_cache = PlanCache()
+        self.rwlock = RWLock()          # leader write serialization
+        self._default_session: Optional[Session] = None
+
+    # -- driver surface (sessions / prepared statements / cursors) -------------
+
+    def session(self, batch_rows: Optional[int] = None,
+                use_cache: bool = True) -> Session:
+        """Open a driver session: ``prepare()``/``run()``/transactions.
+        Sessions share this db's plan cache; one session per worker thread."""
+        kwargs: Dict[str, Any] = {"use_cache": use_cache}
+        if batch_rows is not None:
+            kwargs["batch_rows"] = batch_rows
+        return Session(self, **kwargs)
 
     # -- model / φ management (paper §IV-B) -----------------------------------
 
@@ -135,24 +155,22 @@ class PandaDB:
         q = parse_query(text)
         if not isinstance(q, MatchQuery):
             raise TypeError("plan() expects a MATCH query")
-        qg = QueryGraph.from_query(q)
         self.stats.refresh_from_graph(self.graph)
-        plan = optimize(qg, self.stats) if optimized else naive_plan(qg, self.stats)
-        plan = lp.Projection(plan, q.returns)
-        if q.limit is not None:
-            plan = lp.Limit(plan, q.limit)
-        return plan
+        return plan_query(self, q, optimized)
 
-    def query(self, text: str, optimized: bool = True
-              ) -> List[Dict[str, Any]]:
-        q = parse_query(text)
-        if isinstance(q, CreateQuery):
-            self._execute_create(q, text)
-            return []
-        plan = self.plan(text, optimized)
-        ctx = ExecutionContext(self)
-        _, rows = execute(plan, ctx)
-        return rows
+    def query(self, text: str, parameters: Optional[Dict[str, Any]] = None,
+              optimized: bool = True, **params: Any) -> List[Dict[str, Any]]:
+        """Compatibility wrapper over the session API: one statement, all
+        rows materialized.  Prefer ``db.session()`` + ``run()``/``prepare()``
+        for anything latency- or memory-sensitive."""
+        if isinstance(parameters, bool):
+            # legacy positional call: query(text, optimized)
+            parameters, optimized = None, parameters
+        if self._default_session is None:
+            self._default_session = self.session()
+        return self._default_session.run(text, parameters,
+                                         optimized=optimized,
+                                         **params).fetchall()
 
     def explain(self, text: str) -> Dict[str, Any]:
         self.stats.refresh_from_graph(self.graph)
@@ -163,26 +181,75 @@ class PandaDB:
             "optimized_cost": estimate_plan_cost(opt, self.stats),
             "naive": naive.describe(),
             "naive_cost": estimate_plan_cost(naive, self.stats),
+            "plan_cache": self.plan_cache.stats(),
         }
 
     # -- CREATE ------------------------------------------------------------------
 
-    def _execute_create(self, q: CreateQuery, text: str) -> None:
-        from repro.core.cypherplus import FuncCall, Literal
-        env: Dict[str, int] = {}
+    def _execute_create(self, q: CreateQuery, text: str,
+                        params: Optional[Dict[str, Any]] = None) -> None:
+        """Apply a CREATE statement and log it.  ``params`` late-binds
+        ``$name`` prop values; scalar values are inlined into the logged
+        statement so followers can replay it (see session.bind_text).
+
+        Property resolution (including blob-source reads) happens *before*
+        the first graph mutation, and every bound param must have a
+        WAL-replayable literal form -- so a failing statement mutates
+        nothing, and whatever is applied is always also logged."""
+        from repro.core.cypherplus import FuncCall, Literal, Param
+        from repro.core.session import check_wal_renderable
+        params = params or {}
+        check_wal_renderable(q, params)
+
+        def resolve(v: Any) -> Any:
+            if isinstance(v, Literal):
+                return v.value
+            if isinstance(v, Param):
+                if v.name not in params:
+                    raise KeyError(f"missing query parameter ${v.name}")
+                return params[v.name]
+            return v
+
+        # phase 1: resolve every *new* node's props -- any failure (missing
+        # param, unreadable blob source) aborts before the graph OR blob
+        # store is touched.  Blob content is read here but registered only
+        # in phase 2.
+        pending_blob = object()     # marker: (pending_blob, content, mime)
+        resolved: List[List[Optional[Dict[str, Any]]]] = []
+        seen_vars: set = set()
         for pat in q.patterns:
+            plist: List[Optional[Dict[str, Any]]] = []
+            for np_ in pat.nodes:
+                if np_.var in seen_vars:
+                    plist.append(None)          # repeated var: reuse node
+                    continue
+                if np_.var:
+                    seen_vars.add(np_.var)
+                props: Dict[str, Any] = {}
+                for k, v in np_.props:
+                    if isinstance(v, (Literal, Param)):
+                        props[k] = resolve(v)
+                    elif isinstance(v, FuncCall) and v.name == "createFromSource":
+                        src = resolve(v.args[0])
+                        content, mime = self.graph.blobs.resolve_source(
+                            src if isinstance(src, (str, bytes)) else str(src))
+                        props[k] = (pending_blob, content, mime)
+                plist.append(props)
+            resolved.append(plist)
+
+        # phase 2: apply, then log
+        env: Dict[str, int] = {}
+        for pat, plist in zip(q.patterns, resolved):
             prev = None
             for i, np_ in enumerate(pat.nodes):
                 if np_.var in env:
                     nid = env[np_.var]
                 else:
-                    props = {}
-                    for k, v in np_.props:
-                        if isinstance(v, Literal):
-                            props[k] = v.value
-                        elif isinstance(v, FuncCall) and v.name == "createFromSource":
-                            src = v.args[0].value if isinstance(v.args[0], Literal) else str(v.args[0])
-                            props[k] = self.graph.blobs.create_from_source(src)
+                    props = plist[i] or {}
+                    for k, v in list(props.items()):
+                        if isinstance(v, tuple) and len(v) == 3 \
+                                and v[0] is pending_blob:
+                            props[k] = self.graph.blobs.create(v[1], v[2])
                     nid = self.graph.create_node(np_.label or "Node",
                                                  log=False, **props)
                     if np_.var:
@@ -194,4 +261,4 @@ class PandaDB:
                                                    rel.rel_type or "REL",
                                                    log=False)
                 prev = nid
-        self.graph.wal.append(text.strip())
+        self.graph.wal.append(bind_text(text, params))

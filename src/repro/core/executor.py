@@ -11,11 +11,24 @@ Index pushdown: a SemanticFilter of shape
 whose sub-property has a built vector index executes as an index kNN search
 instead of extracting φ for every row (paper §VI-B2: "the query plan
 generator pushes the semantic-information operator into the index").
+
+Two drive modes share the same operator kernels:
+
+* :func:`execute`       -- materializing: one full bindings table per op.
+* :func:`execute_iter`  -- streaming: scans emit bounded row chunks that
+  flow through filters/expands/joins (probe side) without ever building the
+  full table; ``LIMIT n`` stops pulling from the pipeline as soon as ``n``
+  projected rows exist (early exit).  This is what :class:`~repro.core.
+  session.Cursor` iterates.
+
+``$param`` placeholders (:class:`~repro.core.cypherplus.Param`) are resolved
+late, from ``ExecutionContext.params``, so one optimized plan serves every
+binding of the same query skeleton.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +38,7 @@ from repro.core.cypherplus import (
     Compare,
     FuncCall,
     Literal,
+    Param,
     Prop,
     SubProp,
 )
@@ -33,17 +47,24 @@ Bindings = Dict[str, np.ndarray]
 
 SIM_THRESHOLD = 0.80
 
+#: default cursor batch: bounds peak row-count per pipeline step
+DEFAULT_BATCH_ROWS = 256
+
 
 class ExecutionContext:
-    def __init__(self, db) -> None:
+    def __init__(self, db, params: Optional[Dict[str, Any]] = None) -> None:
         self.db = db
         self.graph = db.graph
         self.stats = db.stats
         self.cache = db.cache
         self.aipm = db.aipm
         self.registry = db.registry
+        self.params: Dict[str, Any] = dict(params or {})
         self.extract_count = 0      # φ invocations (cache misses), for benches
         self.index_hits = 0
+        self.scan_rows = 0          # rows emitted by leaf scans (LIMIT proof)
+        self._pushdown_memo: Dict[int, Any] = {}   # plan id -> index matches
+        self._func_memo: Dict[int, Any] = {}       # expr id -> blob tag
 
 
 def _rows(b: Bindings) -> int:
@@ -52,117 +73,277 @@ def _rows(b: Bindings) -> int:
     return 0
 
 
-def execute(plan: lp.PlanOp, ctx: ExecutionContext) -> Tuple[Bindings, List[Dict]]:
-    """Returns (bindings, projected rows if Projection at root)."""
-    t0 = time.perf_counter()
+def resolve_param(ctx: ExecutionContext, name: str) -> Any:
+    try:
+        return ctx.params[name]
+    except KeyError:
+        raise KeyError(f"missing query parameter ${name}; "
+                       f"bound: {sorted(ctx.params) or 'none'}") from None
+
+
+def _resolve_limit(n: Any, ctx: ExecutionContext) -> int:
+    if isinstance(n, Param):
+        n = resolve_param(ctx, n.name)
+    n = int(n)
+    if n < 0:
+        raise ValueError(f"LIMIT must be >= 0, got {n}")
+    return n
+
+
+# ---------------------------------------------------------------------------
+# operator kernels (shared by the materializing and streaming drivers)
+# ---------------------------------------------------------------------------
+
+
+def _scan_ids(plan: lp.PlanOp, ctx: ExecutionContext) -> np.ndarray:
     if isinstance(plan, lp.AllNodeScan):
-        out = {plan.var: ctx.graph.store.all_nodes()}
-        _record(ctx, plan, time.perf_counter() - t0, len(out[plan.var]))
-        return out, []
-    if isinstance(plan, lp.NodeByLabelScan):
-        out = {plan.var: ctx.graph.store.nodes_with_label(plan.label)}
-        _record(ctx, plan, time.perf_counter() - t0, len(out[plan.var]))
-        return out, []
-    if isinstance(plan, lp.Filter):
-        child, _ = execute(plan.child, ctx)
-        n_in = _rows(child)
-        t0 = time.perf_counter()
+        return ctx.graph.store.all_nodes()
+    return ctx.graph.store.nodes_with_label(plan.label)
+
+
+def _apply_filter(plan, child: Bindings, ctx: ExecutionContext) -> Bindings:
+    """Filter / SemanticFilter kernel (with index pushdown), timed."""
+    n_in = _rows(child)
+    t0 = time.perf_counter()
+    pushed = (_try_index_pushdown(plan, child, ctx)
+              if isinstance(plan, lp.SemanticFilter) else None)
+    if pushed is not None:
+        out = pushed
+    else:
         mask = np.asarray(eval_expr(plan.predicate, child, ctx), bool)
         out = {k: v[mask] for k, v in child.items()}
-        _record(ctx, plan, time.perf_counter() - t0, n_in)
-        return out, []
-    if isinstance(plan, lp.SemanticFilter):
-        child, _ = execute(plan.child, ctx)
-        n_in = _rows(child)
+    _record(ctx, plan, time.perf_counter() - t0, n_in)
+    return out
+
+
+def _apply_expand(plan: lp.Expand, child: Bindings,
+                  ctx: ExecutionContext) -> Bindings:
+    n_in = _rows(child)
+    t0 = time.perf_counter()
+    type_id = (ctx.graph.store.rel_types.id_of(plan.rel_type)
+               if plan.rel_type else None)
+    if plan.dst in child:   # expand-into: existence check between bound vars
+        row_idx, nbrs = ctx.graph.store.rels.expand_batch(
+            child[plan.src], type_id,
+            "out" if plan.direction != "in" else "in")
+        ok = np.zeros(n_in, bool)
+        match = child[plan.dst][row_idx] == nbrs
+        np.logical_or.at(ok, row_idx[match], True)
+        if plan.direction == "any":
+            row_idx2, nbrs2 = ctx.graph.store.rels.expand_batch(
+                child[plan.src], type_id, "in")
+            match2 = child[plan.dst][row_idx2] == nbrs2
+            np.logical_or.at(ok, row_idx2[match2], True)
+        out = {k: v[ok] for k, v in child.items()}
+    else:
+        direction = plan.direction if plan.direction != "any" else "out"
+        row_idx, nbrs = ctx.graph.store.rels.expand_batch(
+            child[plan.src], type_id, direction)
+        if plan.direction == "any":
+            r2, n2 = ctx.graph.store.rels.expand_batch(
+                child[plan.src], type_id, "in")
+            row_idx = np.concatenate([row_idx, r2])
+            nbrs = np.concatenate([nbrs, n2])
+        out = {k: v[row_idx] for k, v in child.items()}
+        out[plan.dst] = nbrs
+    _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
+    return out
+
+
+def _key_view(b: Bindings, shared: List[str]) -> np.ndarray:
+    key = np.stack([b[v] for v in shared], axis=1)
+    return np.ascontiguousarray(key).view(
+        [("", key.dtype)] * key.shape[1]).ravel()
+
+
+def _build_join_buckets(left: Bindings,
+                        shared: List[str]) -> Dict[bytes, List[int]]:
+    """Build-side hash table of a join; built once per execution even when
+    the probe side streams chunk-by-chunk."""
+    buckets: Dict[bytes, List[int]] = {}
+    for i, kv in enumerate(_key_view(left, shared)):
+        buckets.setdefault(kv.tobytes(), []).append(i)
+    return buckets
+
+
+def _join_tables(plan: lp.Join, left: Bindings, right: Bindings,
+                 ctx: ExecutionContext,
+                 buckets: Optional[Dict[bytes, List[int]]] = None,
+                 streamed: bool = False) -> Bindings:
+    t0 = time.perf_counter()
+    shared = sorted(set(left) & set(right))
+    # when the probe side streams chunk-by-chunk, only the probe rows are
+    # this call's input -- counting the materialized build side per chunk
+    # would skew the cost model's per-row speed EWMA
+    n_in = (_rows(right) if streamed or buckets is not None
+            else _rows(left) + _rows(right))
+    if not shared:  # cross product
+        nl, nr = _rows(left), _rows(right)
+        li = np.repeat(np.arange(nl), nr)
+        ri = np.tile(np.arange(nr), nl)
+    else:
+        if buckets is None:
+            buckets = _build_join_buckets(left, shared)
+        li_list, ri_list = [], []
+        for j, kv in enumerate(_key_view(right, shared)):
+            for i in buckets.get(kv.tobytes(), ()):
+                li_list.append(i)
+                ri_list.append(j)
+        li = np.asarray(li_list, np.int64)
+        ri = np.asarray(ri_list, np.int64)
+    out = {k: v[li] for k, v in left.items()}
+    for k, v in right.items():
+        if k not in out:
+            out[k] = v[ri]
+    _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
+    return out
+
+
+def _project_rows(plan: lp.Projection, child: Bindings,
+                  ctx: ExecutionContext) -> List[Dict]:
+    t0 = time.perf_counter()
+    cols = []
+    for item in plan.items:
+        vals = eval_expr(item.expr, child, ctx)
+        cols.append((item.alias or _name_of(item.expr), vals))
+    n = _rows(child)
+
+    def cell(vals: Any, i: int) -> Any:
+        # str/bytes have __len__ but are scalars (e.g. a $param in RETURN),
+        # not per-row columns
+        if hasattr(vals, "__len__") and not isinstance(vals, (str, bytes)):
+            return vals[i]
+        return vals
+
+    rows = [{name: cell(vals, i) for name, vals in cols} for i in range(n)]
+    _record(ctx, plan, time.perf_counter() - t0, max(n, 1))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# materializing driver
+# ---------------------------------------------------------------------------
+
+
+def execute(plan: lp.PlanOp, ctx: ExecutionContext) -> Tuple[Bindings, List[Dict]]:
+    """Returns (bindings, projected rows if Projection at root)."""
+    if isinstance(plan, (lp.AllNodeScan, lp.NodeByLabelScan)):
         t0 = time.perf_counter()
-        pushed = _try_index_pushdown(plan, child, ctx)
-        if pushed is not None:
-            out = pushed
-        else:
-            mask = np.asarray(eval_expr(plan.predicate, child, ctx), bool)
-            out = {k: v[mask] for k, v in child.items()}
-        _record(ctx, plan, time.perf_counter() - t0, n_in)
-        return out, []
+        ids = _scan_ids(plan, ctx)
+        ctx.scan_rows += len(ids)
+        _record(ctx, plan, time.perf_counter() - t0, len(ids))
+        return {plan.var: ids}, []
+    if isinstance(plan, (lp.Filter, lp.SemanticFilter)):
+        child, _ = execute(plan.child, ctx)
+        return _apply_filter(plan, child, ctx), []
     if isinstance(plan, lp.Expand):
         child, _ = execute(plan.child, ctx)
-        n_in = _rows(child)
-        t0 = time.perf_counter()
-        type_id = (ctx.graph.store.rel_types.id_of(plan.rel_type)
-                   if plan.rel_type else None)
-        if plan.dst in child:   # expand-into: existence check between bound vars
-            row_idx, nbrs = ctx.graph.store.rels.expand_batch(
-                child[plan.src], type_id,
-                "out" if plan.direction != "in" else "in")
-            ok = np.zeros(n_in, bool)
-            match = child[plan.dst][row_idx] == nbrs
-            np.logical_or.at(ok, row_idx[match], True)
-            if plan.direction == "any":
-                row_idx2, nbrs2 = ctx.graph.store.rels.expand_batch(
-                    child[plan.src], type_id, "in")
-                match2 = child[plan.dst][row_idx2] == nbrs2
-                np.logical_or.at(ok, row_idx2[match2], True)
-            out = {k: v[ok] for k, v in child.items()}
-        else:
-            direction = plan.direction if plan.direction != "any" else "out"
-            row_idx, nbrs = ctx.graph.store.rels.expand_batch(
-                child[plan.src], type_id, direction)
-            if plan.direction == "any":
-                r2, n2 = ctx.graph.store.rels.expand_batch(
-                    child[plan.src], type_id, "in")
-                row_idx = np.concatenate([row_idx, r2])
-                nbrs = np.concatenate([nbrs, n2])
-            out = {k: v[row_idx] for k, v in child.items()}
-            out[plan.dst] = nbrs
-        _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
-        return out, []
+        return _apply_expand(plan, child, ctx), []
     if isinstance(plan, lp.Join):
         left, _ = execute(plan.left, ctx)
         right, _ = execute(plan.right, ctx)
-        t0 = time.perf_counter()
-        shared = sorted(set(left) & set(right))
-        n_in = _rows(left) + _rows(right)
-        if not shared:  # cross product
-            nl, nr = _rows(left), _rows(right)
-            li = np.repeat(np.arange(nl), nr)
-            ri = np.tile(np.arange(nr), nl)
-        else:
-            lkey = np.stack([left[v] for v in shared], axis=1)
-            rkey = np.stack([right[v] for v in shared], axis=1)
-            # hash join via void view
-            lview = np.ascontiguousarray(lkey).view([("", lkey.dtype)] * lkey.shape[1]).ravel()
-            rview = np.ascontiguousarray(rkey).view([("", rkey.dtype)] * rkey.shape[1]).ravel()
-            buckets: Dict[Any, List[int]] = {}
-            for i, kv in enumerate(lview):
-                buckets.setdefault(kv.tobytes(), []).append(i)
-            li_list, ri_list = [], []
-            for j, kv in enumerate(rview):
-                for i in buckets.get(kv.tobytes(), ()):
-                    li_list.append(i)
-                    ri_list.append(j)
-            li = np.asarray(li_list, np.int64)
-            ri = np.asarray(ri_list, np.int64)
-        out = {k: v[li] for k, v in left.items()}
-        for k, v in right.items():
-            if k not in out:
-                out[k] = v[ri]
-        _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
-        return out, []
+        return _join_tables(plan, left, right, ctx), []
     if isinstance(plan, lp.Limit):
+        n = _resolve_limit(plan.n, ctx)
         child, rows = execute(plan.child, ctx)
-        return {k: v[:plan.n] for k, v in child.items()}, rows[:plan.n]
+        return {k: v[:n] for k, v in child.items()}, rows[:n]
     if isinstance(plan, lp.Projection):
         child, _ = execute(plan.child, ctx)
-        t0 = time.perf_counter()
-        cols = []
-        for item in plan.items:
-            vals = eval_expr(item.expr, child, ctx)
-            cols.append((item.alias or _name_of(item.expr), vals))
-        n = _rows(child)
-        rows = [{name: (vals[i] if hasattr(vals, "__len__") else vals)
-                 for name, vals in cols} for i in range(n)]
-        _record(ctx, plan, time.perf_counter() - t0, max(n, 1))
-        return child, rows
+        return child, _project_rows(plan, child, ctx)
     raise TypeError(f"unknown plan op {type(plan)}")
+
+
+# ---------------------------------------------------------------------------
+# streaming driver (Cursor backend)
+# ---------------------------------------------------------------------------
+
+
+def _concat_bindings(chunks: List[Bindings], vars_: Any) -> Bindings:
+    if not chunks:
+        return {v: np.empty(0, np.int64) for v in vars_}
+    return {k: np.concatenate([c[k] for c in chunks]) for k in chunks[0]}
+
+
+def _iter_bindings(plan: lp.PlanOp, ctx: ExecutionContext,
+                   batch_rows: int) -> Iterator[Bindings]:
+    """Yield bindings tables in bounded chunks, leaf-to-root."""
+    if isinstance(plan, (lp.AllNodeScan, lp.NodeByLabelScan)):
+        t0 = time.perf_counter()
+        ids = _scan_ids(plan, ctx)
+        _record(ctx, plan, time.perf_counter() - t0, len(ids))
+        for i in range(0, len(ids), batch_rows):
+            chunk = ids[i:i + batch_rows]
+            ctx.scan_rows += len(chunk)
+            yield {plan.var: chunk}
+        return
+    if isinstance(plan, (lp.Filter, lp.SemanticFilter)):
+        for chunk in _iter_bindings(plan.child, ctx, batch_rows):
+            out = _apply_filter(plan, chunk, ctx)
+            if _rows(out):
+                yield out
+        return
+    if isinstance(plan, lp.Expand):
+        for chunk in _iter_bindings(plan.child, ctx, batch_rows):
+            out = _apply_expand(plan, chunk, ctx)
+            if _rows(out):
+                yield out
+        return
+    if isinstance(plan, lp.Join):
+        # hash join: build side materialized + hashed once, probe streamed
+        left = _concat_bindings(list(_iter_bindings(plan.left, ctx, batch_rows)),
+                                plan.left.vars)
+        shared = sorted(set(left) & set(plan.right.vars))
+        if shared:
+            t0 = time.perf_counter()
+            buckets = _build_join_buckets(left, shared)
+            _record(ctx, plan, time.perf_counter() - t0, max(_rows(left), 1))
+        else:
+            buckets = None
+        for rchunk in _iter_bindings(plan.right, ctx, batch_rows):
+            out = _join_tables(plan, left, rchunk, ctx, buckets=buckets,
+                               streamed=True)
+            if _rows(out):
+                yield out
+        return
+    # anything else (mid-tree Limit/Projection): materialize, then chunk
+    bindings, _ = execute(plan, ctx)
+    n = _rows(bindings)
+    for i in range(0, n, batch_rows):
+        yield {k: v[i:i + batch_rows] for k, v in bindings.items()}
+
+
+def execute_iter(plan: lp.PlanOp, ctx: ExecutionContext,
+                 batch_rows: int = DEFAULT_BATCH_ROWS) -> Iterator[List[Dict]]:
+    """Stream projected rows in bounded batches (each a list of dicts).
+
+    ``Limit`` at the root exits early: once ``n`` rows have been yielded the
+    upstream generators are closed and no further scan chunk is pulled, so a
+    ``LIMIT 5`` over a million-node scan touches ~``batch_rows`` rows.
+    """
+    limit: Optional[int] = None
+    if isinstance(plan, lp.Limit):
+        limit = _resolve_limit(plan.n, ctx)
+        plan = plan.child
+    proj: Optional[lp.Projection] = None
+    if isinstance(plan, lp.Projection):
+        proj, plan = plan, plan.child
+    if limit == 0:
+        return
+    produced = 0
+    for chunk in _iter_bindings(plan, ctx, batch_rows):
+        if proj is not None:
+            rows = _project_rows(proj, chunk, ctx)
+        else:
+            n = _rows(chunk)
+            rows = [{k: int(v[i]) for k, v in chunk.items()}
+                    for i in range(n)]
+        if not rows:
+            continue
+        if limit is not None and produced + len(rows) >= limit:
+            yield rows[:limit - produced]
+            return
+        produced += len(rows)
+        yield rows
 
 
 def _record(ctx: ExecutionContext, op: lp.PlanOp, dt: float, rows: int) -> None:
@@ -186,6 +367,8 @@ def eval_expr(expr: Any, b: Bindings, ctx: ExecutionContext):
     n = _rows(b)
     if isinstance(expr, Literal):
         return expr.value
+    if isinstance(expr, Param):
+        return resolve_param(ctx, expr.name)
     if isinstance(expr, Prop):
         if expr.key == "__self__":
             return b[expr.var]
@@ -208,10 +391,17 @@ def eval_expr(expr: Any, b: Bindings, ctx: ExecutionContext):
         return eval_subprop(expr, b, ctx)
     if isinstance(expr, FuncCall):
         if expr.name == "createFromSource":
-            src = eval_expr(expr.args[0], b, ctx)
-            blob = ctx.graph.blobs.create_from_source(
-                src if isinstance(src, (str, bytes)) else str(src))
-            return ("__blob__", blob.blob_id)
+            # memoized per execution: the streaming driver evaluates the
+            # predicate once per chunk, and the source/params are fixed for
+            # the whole statement -- one blob per request, not per chunk
+            tag = ctx._func_memo.get(id(expr))
+            if tag is None:
+                src = eval_expr(expr.args[0], b, ctx)
+                blob = ctx.graph.blobs.create_from_source(
+                    src if isinstance(src, (str, bytes)) else str(src))
+                tag = ("__blob__", blob.blob_id)
+                ctx._func_memo[id(expr)] = tag
+            return tag
         raise KeyError(f"unknown function {expr.name!r}")
     if isinstance(expr, BoolOp):
         if expr.op == "AND":
@@ -383,7 +573,7 @@ def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
     if not isinstance(pred, Compare):
         return None
     if pred.op in ("=", "<", ">", "<=", ">="):
-        return _try_scalar_pushdown(pred, child, ctx)
+        return _try_scalar_pushdown(plan, pred, child, ctx)
     if pred.op not in ("~:", "::"):
         return None
     # normalize: var-side on the left, literal/query side on the right
@@ -407,13 +597,26 @@ def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
         return None
     if pred.op == "::":
         return None  # raw similarity values requested; cannot prefilter
-    # extract the query vector (1 item), search the index
-    qvec = eval_subprop(query_expr, {v: a[:1] for v, a in child.items()}, ctx)
-    qvec = np.asarray(qvec, np.float32).reshape(1, -1)
-    k = min(max(64, len(child[var_expr.base.var]) // 10 + 1), len(index.ids))
-    vals, ids = index.search(qvec, k)
-    sim_ok = ids[0][vals[0] >= _index_threshold(index)]
-    ctx.index_hits += 1
+    # extract the query vector (1 item), search the index; memoized per plan
+    # node so the streaming driver searches once, not once per chunk
+    if id(plan) in ctx._pushdown_memo:
+        sim_ok = ctx._pushdown_memo[id(plan)]
+    else:
+        qvec = eval_subprop(query_expr, {v: a[:1] for v, a in child.items()}, ctx)
+        qvec = np.asarray(qvec, np.float32).reshape(1, -1)
+        # size k from the whole graph, not the current chunk (the streaming
+        # driver hands this 256-row chunks); if every returned neighbor
+        # passes the threshold the match set may be truncated, so expand k
+        # until the tail falls below the threshold or the index is exhausted
+        k = min(max(64, ctx.graph.n_nodes // 10 + 1), len(index.ids))
+        while True:
+            vals, ids = index.search(qvec, k)
+            sim_ok = ids[0][vals[0] >= _index_threshold(index)]
+            if len(sim_ok) < k or k >= len(index.ids):
+                break
+            k = min(2 * k, len(index.ids))
+        ctx._pushdown_memo[id(plan)] = sim_ok
+        ctx.index_hits += 1
     # index returns *blob ids*; map rows whose blob id matched
     col = ctx.graph.store.node_props.column(var_expr.base.key)
     blob_vals = np.asarray(col.values, np.int64)[child[var_expr.base.var]]
@@ -421,41 +624,48 @@ def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
     return {kk: vv[keep] for kk, vv in child.items()}
 
 
-def _try_scalar_pushdown(pred: Compare, child: Bindings,
+def _try_scalar_pushdown(plan: lp.SemanticFilter, pred: Compare,
+                         child: Bindings,
                          ctx: ExecutionContext) -> Optional[Bindings]:
     """Numeric (B-tree) / inverted-index pushdown (paper §VI-B2): the query
     plan generator pushes the semantic-information operator into the index
-    instead of extracting φ per row."""
+    instead of extracting φ per row.  The matching blob-id set is memoized
+    per plan node so the streaming driver looks up once, not per chunk."""
     from repro.core.scalar_index import InvertedIndex, NumericIndex
 
-    # normalize: SubProp(var.prop)->sk  <op>  Literal
+    # normalize: SubProp(var.prop)->sk  <op>  Literal-or-Param
     left, right, op = pred.left, pred.right, pred.op
-    if isinstance(right, SubProp) and isinstance(left, Literal):
+    if isinstance(right, SubProp) and isinstance(left, (Literal, Param)):
         left, right = right, left
         op = {"<": ">", ">": "<", "<=": ">=", ">=": "<="}.get(op, op)
     if not (isinstance(left, SubProp) and isinstance(left.base, Prop)
-            and isinstance(right, Literal)):
+            and isinstance(right, (Literal, Param))):
         return None
-    index = ctx.db.scalar_indexes.get(left.sub_key)
-    if index is None or index.serial != ctx.registry.serial(left.sub_key):
-        return None
-    val = right.value
-    if isinstance(index, NumericIndex):
-        if not isinstance(val, (int, float)):
-            return None
-        if op == "=":
-            ok_ids = index.eq(float(val))
-        elif op in ("<", "<="):
-            ok_ids = index.range(hi=float(val), inclusive=(op == "<="))
-        else:
-            ok_ids = index.range(lo=float(val), inclusive=(op == ">="))
-    elif isinstance(index, InvertedIndex):
-        if op != "=":
-            return None
-        ok_ids = index.lookup(str(val))
+    if id(plan) in ctx._pushdown_memo:
+        ok_ids = ctx._pushdown_memo[id(plan)]
     else:
-        return None
-    ctx.index_hits += 1
+        index = ctx.db.scalar_indexes.get(left.sub_key)
+        if index is None or index.serial != ctx.registry.serial(left.sub_key):
+            return None
+        val = (right.value if isinstance(right, Literal)
+               else resolve_param(ctx, right.name))
+        if isinstance(index, NumericIndex):
+            if not isinstance(val, (int, float)):
+                return None
+            if op == "=":
+                ok_ids = index.eq(float(val))
+            elif op in ("<", "<="):
+                ok_ids = index.range(hi=float(val), inclusive=(op == "<="))
+            else:
+                ok_ids = index.range(lo=float(val), inclusive=(op == ">="))
+        elif isinstance(index, InvertedIndex):
+            if op != "=":
+                return None
+            ok_ids = index.lookup(str(val))
+        else:
+            return None
+        ctx._pushdown_memo[id(plan)] = ok_ids
+        ctx.index_hits += 1
     col = ctx.graph.store.node_props.column(left.base.key)
     if col is None or col.kind != "blob":
         return None

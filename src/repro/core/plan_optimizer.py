@@ -76,10 +76,12 @@ class QueryGraph:
 
         flatten(q.where)
         # inline node-pattern property equalities as predicates
-        from repro.core.cypherplus import Literal, Prop
+        from repro.core.cypherplus import FuncCall, Literal, Param, Prop
         for var, np_ in nodes.items():
             for key, val in np_.props:
-                preds.append(Compare("=", Prop(var, key), val if isinstance(val, Literal) else Literal(val)))
+                if not isinstance(val, (Literal, Param, FuncCall)):
+                    val = Literal(val)
+                preds.append(Compare("=", Prop(var, key), val))
         return QueryGraph(nodes, edges, preds)
 
 

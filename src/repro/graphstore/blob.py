@@ -84,22 +84,30 @@ class BlobStore:
             self.manager.put(blob_id, content)
         return blob
 
-    def create_from_source(self, source, mime: Optional[str] = None) -> Blob:
-        """The CypherPlus *literal function* ``createFromSource``: URL, file
-        path, bytes, or ndarray."""
+    def resolve_source(self, source,
+                       mime: Optional[str] = None) -> Tuple[bytes, str]:
+        """Fetch a source's content without registering a blob -- lets
+        callers validate/read everything up front and defer registration
+        until the whole statement is known to succeed."""
         if isinstance(source, bytes):
-            return self.create(source, mime or "application/octet-stream")
+            return source, mime or "application/octet-stream"
         if isinstance(source, np.ndarray):
-            return self.create(source.tobytes(), mime or "application/x-ndarray")
+            return source.tobytes(), mime or "application/x-ndarray"
         if isinstance(source, str):
             if source.startswith(("http://", "https://")):
                 # offline container: content-addressed synthetic payload
                 seed = int(hashlib.sha256(source.encode()).hexdigest()[:8], 16)
                 rng = np.random.default_rng(seed)
-                return self.create(rng.bytes(2048), mime or "application/x-url")
+                return rng.bytes(2048), mime or "application/x-url"
             with open(source, "rb") as f:
-                return self.create(f.read(), mime or "application/octet-stream")
+                return f.read(), mime or "application/octet-stream"
         raise TypeError(f"unsupported blob source: {type(source)}")
+
+    def create_from_source(self, source, mime: Optional[str] = None) -> Blob:
+        """The CypherPlus *literal function* ``createFromSource``: URL, file
+        path, bytes, or ndarray."""
+        content, mime = self.resolve_source(source, mime)
+        return self.create(content, mime)
 
     def read(self, blob_id: int) -> Optional[bytes]:
         if blob_id in self._inline:

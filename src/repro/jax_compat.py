@@ -1,0 +1,77 @@
+"""Compatibility shims for older jax releases.
+
+The codebase targets the modern mesh API (``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``).  Older jax
+(< 0.6, e.g. the 0.4.x line) lacks all three.  Importing this module
+installs equivalents into the jax namespace so the rest of the code — and
+the tests that call ``jax.set_mesh`` directly — run unchanged:
+
+* ``AxisType``       -> a stand-in enum (Auto / Explicit / Manual).  Old jax
+                        has no sharding-in-types, so the value is accepted
+                        and ignored.
+* ``make_mesh``      -> wrapped to swallow the ``axis_types`` keyword.
+* ``set_mesh``       -> a context manager entering the mesh as the ambient
+                        resource env (``with mesh:``), which is what the
+                        explicit-mesh code paths need on 0.4.x.
+
+Import order does not matter for callers that go through repro modules:
+``repro.launch.mesh`` (and the test conftest) import this module first.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+
+import jax
+import jax.sharding as _jsh
+
+
+def install() -> None:
+    """Idempotently install the shims onto the running jax."""
+    if not hasattr(_jsh, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        _jsh.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            from jax.experimental import mesh_utils
+            devs = mesh_utils.create_device_mesh(
+                tuple(axis_shapes), devices=devices)
+            return _jsh.Mesh(devs, tuple(axis_names))
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+    else:
+        try:
+            params = inspect.signature(jax.make_mesh).parameters
+            needs_wrap = "axis_types" not in params
+        except (TypeError, ValueError):  # pragma: no cover - exotic builds
+            needs_wrap = True
+        if needs_wrap and not getattr(jax.make_mesh, "_repro_compat", False):
+            _orig_make_mesh = jax.make_mesh
+
+            def make_mesh(axis_shapes, axis_names, *, devices=None,
+                          axis_types=None):
+                return _orig_make_mesh(axis_shapes, axis_names,
+                                       devices=devices)
+
+            make_mesh._repro_compat = True
+            jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        set_mesh._repro_compat = True
+        jax.set_mesh = set_mesh
+
+
+install()

@@ -1,9 +1,12 @@
 """Query serving engine: concurrent CypherPlus requests against PandaDB.
 
 Reproduces the paper's Fig 8 setup: a request queue, worker(s) executing
-queries through the full parse -> optimize -> execute path, measured
-throughput + response-time percentiles.  Reading-queries go to any worker;
-writing-queries are serialized through the leader WAL (paper §VII-A).
+queries, measured throughput + response-time percentiles.  Each worker owns
+a driver :class:`~repro.core.session.Session`; prepared statements are
+reused per query skeleton (the shared plan cache means parse+optimize run
+once per skeleton across the whole server, not once per request).
+Reading-queries go to any worker; writing-queries serialize through the
+db-level write lock + leader WAL (paper §VII-A).
 """
 from __future__ import annotations
 
@@ -11,9 +14,12 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
+
+#: a request: query text, or (text, params dict)
+Request = Union[str, Tuple[str, Dict[str, Any]]]
 
 
 @dataclasses.dataclass
@@ -43,13 +49,14 @@ class ServeStats:
 
 
 class QueryServer:
-    def __init__(self, db, n_workers: int = 1) -> None:
+    def __init__(self, db, n_workers: int = 1,
+                 use_prepared: bool = True) -> None:
         self.db = db
         self.n_workers = n_workers
+        self.use_prepared = use_prepared
         self._queue: "queue.Queue" = queue.Queue()
         self._stats = ServeStats()
         self._lock = threading.Lock()
-        self._write_lock = threading.Lock()   # leader serialization
         self._workers: List[threading.Thread] = []
         self._stop = False
 
@@ -61,6 +68,12 @@ class QueryServer:
             self._workers.append(t)
 
     def _worker(self) -> None:
+        # one session per worker.  Statement reuse needs no worker-local
+        # cache: session.run() resolves parse+optimize through the db-level
+        # PlanCache by query skeleton, so any worker's prepared skeleton
+        # serves every worker (use_prepared=False disables the cache to
+        # reproduce the seed's parse-per-request behavior).
+        session = self.db.session(use_cache=self.use_prepared)
         while not self._stop:
             try:
                 item = self._queue.get(timeout=0.2)
@@ -68,15 +81,11 @@ class QueryServer:
                 continue
             if item is None:
                 return
-            text, optimized, done = item
+            text, params, optimized, done = item
             t0 = time.perf_counter()
             try:
-                is_write = text.lstrip().upper().startswith("CREATE")
-                if is_write:
-                    with self._write_lock:      # writing-query -> leader
-                        rows = self.db.query(text, optimized=optimized)
-                else:
-                    rows = self.db.query(text, optimized=optimized)
+                rows = session.run(text, params,
+                                   optimized=optimized).fetchall()
                 err = None
             except Exception as e:  # noqa: BLE001
                 rows, err = [], e
@@ -85,12 +94,13 @@ class QueryServer:
                 self._stats.latencies_ms.append(dt)
             done((rows, err))
 
-    def submit(self, text: str, optimized: bool = True) -> "queue.Queue":
+    def submit(self, text: str, optimized: bool = True,
+               params: Optional[Dict[str, Any]] = None) -> "queue.Queue":
         out: "queue.Queue" = queue.Queue(maxsize=1)
-        self._queue.put((text, optimized, out.put))
+        self._queue.put((text, params or {}, optimized, out.put))
         return out
 
-    def run_closed_loop(self, queries: List[str], n_clients: int,
+    def run_closed_loop(self, queries: List[Request], n_clients: int,
                         duration_s: float = 2.0,
                         optimized: bool = True) -> ServeStats:
         """Closed-loop load: each client resubmits on completion (the JMeter
@@ -103,7 +113,8 @@ class QueryServer:
             i = 0
             while time.perf_counter() < stop_at:
                 q = queries[(cid + i) % len(queries)]
-                self.submit(q, optimized).get()
+                text, params = q if isinstance(q, tuple) else (q, None)
+                self.submit(text, optimized, params).get()
                 i += 1
 
         threads = [threading.Thread(target=client, args=(c,))

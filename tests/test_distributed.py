@@ -1,12 +1,18 @@
 """Distributed tests: sharding rules, shard_map collectives on 8 fake devices
 (subprocess -- the main test process must keep seeing 1 CPU device)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
 
 import numpy as np
 import pytest
+
+# Forcing N host devices on a machine with far fewer cores makes XLA
+# compilation exceed the subprocess budget (observed: >300s on 2 cores), so
+# the emulated-mesh tests gate on a minimum core count.
+_HOST_CPUS = os.cpu_count() or 1
 
 from jax.sharding import PartitionSpec as P
 
@@ -40,6 +46,7 @@ _SUBPROCESS_SNIPPET = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import numpy as np
+    import repro.jax_compat  # AxisType/set_mesh shims for old jax
     import jax, jax.numpy as jnp
     from jax.sharding import AxisType
     from repro.core.vector_index import scan_topk
@@ -68,6 +75,9 @@ _SUBPROCESS_SNIPPET = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(_HOST_CPUS < 4,
+                    reason="needs >=4 cores to emulate 8 XLA host devices "
+                           "within the subprocess time budget")
 def test_shardmap_collectives_8dev():
     res = subprocess.run([sys.executable, "-c", _SUBPROCESS_SNIPPET],
                          capture_output=True, text=True, timeout=300,
@@ -79,12 +89,16 @@ def test_shardmap_collectives_8dev():
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(_HOST_CPUS < 8,
+                    reason="needs >=8 cores to emulate 16 XLA host devices "
+                           "within the subprocess time budget")
 def test_reduced_model_lowering_on_16dev():
     """A reduced LM lowers + compiles on a 4x4 mesh (mini dry-run)."""
     snippet = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
         import json
+        import repro.jax_compat  # AxisType/set_mesh shims for old jax
         import jax, jax.numpy as jnp
         from jax.sharding import AxisType
         from repro.configs.base import TransformerConfig

@@ -1,7 +1,11 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests are optional extras")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp

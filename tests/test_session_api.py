@@ -1,0 +1,528 @@
+"""Driver-style API: sessions, prepared statements ($params), plan cache,
+streaming cursors, transactions over the WAL."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor
+from repro.core.cypherplus import Param, parse_query, query_params
+from repro.core.session import PlanCache, bind_text, skeleton_of
+
+
+@pytest.fixture()
+def db():
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=32))
+    rng = np.random.default_rng(0)
+    ids = []
+    for i in range(64):
+        ids.append(db.graph.create_node(
+            "Person", name=f"p{i}", age=20 + i % 30, photo=rng.bytes(128)))
+    for i in range(63):
+        db.graph.create_relationship(ids[i], ids[i + 1], "knows")
+    return db
+
+
+# -- parsing ------------------------------------------------------------------
+
+
+def test_param_parses_and_collects():
+    q = parse_query("MATCH (n:Person {city: $city}) WHERE n.name=$who "
+                    "AND n.age > $min RETURN n.name LIMIT $k")
+    assert query_params(q) == {"city", "who", "min", "k"}
+    assert q.limit == Param("k")
+
+
+def test_skeleton_normalizes_whitespace():
+    a = skeleton_of("MATCH (n:Person)\n  WHERE n.name=$w RETURN n.age")
+    b = skeleton_of("MATCH (n:Person) WHERE n.name=$w   RETURN n.age")
+    assert a == b
+
+
+def test_skeleton_preserves_quoted_whitespace():
+    a = skeleton_of("MATCH (n) WHERE n.name='a  b' RETURN n.name")
+    b = skeleton_of("MATCH (n) WHERE n.name='a b' RETURN n.name")
+    assert a != b, "literals with different whitespace are different queries"
+
+
+# -- param binding ------------------------------------------------------------
+
+
+def test_param_binding_matches_literal(db):
+    lit = db.query("MATCH (n:Person) WHERE n.name='p7' RETURN n.age")
+    with db.session() as s:
+        bound = s.run("MATCH (n:Person) WHERE n.name=$who RETURN n.age",
+                      who="p7").fetchall()
+    assert lit == bound and len(bound) == 1
+
+
+def test_param_binding_numeric_comparison(db):
+    lit = db.query("MATCH (n:Person) WHERE n.age >= 45 RETURN n.name")
+    s = db.session()
+    bound = s.run("MATCH (n:Person) WHERE n.age >= $min RETURN n.name",
+                  min=45).fetchall()
+    assert sorted(r["n.name"] for r in lit) == sorted(r["n.name"] for r in bound)
+
+
+def test_unbound_param_raises(db):
+    s = db.session()
+    with pytest.raises(KeyError, match=r"\$who"):
+        s.run("MATCH (n:Person) WHERE n.name=$who RETURN n.age")
+
+
+def test_string_param_in_return_is_scalar_per_row(db):
+    s = db.session()
+    rows = s.run("MATCH (n:Person) RETURN n.name, $tag LIMIT 3",
+                 tag="cohort-A").fetchall()
+    assert [r["expr"] for r in rows] == ["cohort-A"] * 3
+
+
+def test_server_request_with_colliding_param_name(db):
+    from repro.serving.engine import QueryServer
+
+    server = QueryServer(db, n_workers=1)
+    server.start()
+    rows, err = server.submit(
+        "MATCH (n:Person) WHERE n.name=$text RETURN n.age",
+        params={"text": "p6"}).get(timeout=10)
+    server.shutdown()
+    assert err is None
+    assert rows == [{"n.age": 26}]
+
+
+def test_parameters_dict_avoids_kwarg_collisions(db):
+    s = db.session()
+    rows = s.run("MATCH (n:Person) WHERE n.name=$text RETURN n.age",
+                 {"text": "p4"}).fetchall()
+    assert rows == [{"n.age": 24}]
+    # kwargs still work and win on overlap
+    rows = s.run("MATCH (n:Person) WHERE n.name=$w RETURN n.age",
+                 {"w": "p1"}, w="p2").fetchall()
+    assert rows == [{"n.age": 22}]
+
+
+def test_numpy_scalar_params_are_wal_renderable(db):
+    s = db.session()
+    s.run("CREATE (x:Person {name: $n, age: $a})",
+          n="np", a=np.int64(7))
+    assert "age: 7" in db.graph.wal.entries[-1][1]
+    assert db.query("MATCH (n:Person) WHERE n.name='np' RETURN n.age") == \
+        [{"n.age": 7}]
+
+
+def test_prepared_statement_rebinds(db):
+    s = db.session()
+    stmt = s.prepare("MATCH (n:Person) WHERE n.name=$who RETURN n.age")
+    assert stmt.param_names == {"who"}
+    a = stmt.run(who="p3").fetchall()
+    b = stmt.run(who="p9").fetchall()
+    assert a[0]["n.age"] == 23 and b[0]["n.age"] == 29
+
+
+# -- plan cache ---------------------------------------------------------------
+
+
+def test_plan_cache_hit_on_rerun(db):
+    db.plan_cache.clear()
+    s = db.session()
+    stmt = s.prepare("MATCH (n:Person) WHERE n.name=$who RETURN n.age")
+    stmt.run(who="p1").fetchall()
+    stmt.run(who="p2").fetchall()
+    stmt.run(who="p3").fetchall()
+    pc = db.plan_cache.stats()
+    assert pc["misses"] == 1, "parse/optimize must run exactly once"
+    assert pc["hits"] == 2
+
+
+def test_plan_cache_shared_across_sessions(db):
+    db.plan_cache.clear()
+    q = "MATCH (n:Person) WHERE n.name=$who RETURN n.age"
+    db.session().run(q, who="p1").fetchall()
+    db.session().run(q, who="p2").fetchall()
+    pc = db.plan_cache.stats()
+    assert pc["misses"] == 1 and pc["hits"] == 1
+
+
+def test_plan_cache_miss_after_statistics_refresh(db):
+    db.plan_cache.clear()
+    s = db.session()
+    q = "MATCH (n:Person) WHERE n.name=$who RETURN n.age"
+    s.run(q, who="p1").fetchall()
+    epoch0 = db.stats.epoch
+    # graph mutation changes cardinalities -> next refresh bumps the epoch
+    db.graph.create_node("Person", name="extra")
+    s.run(q, who="p1").fetchall()
+    assert db.stats.epoch == epoch0 + 1
+    pc = db.plan_cache.stats()
+    assert pc["misses"] == 2, "stale-epoch plan must not be reused"
+    # stable graph again: third run hits
+    s.run(q, who="p1").fetchall()
+    assert db.plan_cache.stats()["hits"] == 1
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(capacity=2)
+    for i in range(3):
+        cache.get_or_build(("q%d" % i, True, 0), lambda: (None, None))
+    assert cache.stats()["size"] == 2
+
+
+def test_explain_surfaces_plan_cache_counters(db):
+    s = db.session()
+    out = s.explain("MATCH (n:Person) WHERE n.name=$who RETURN n.age")
+    assert {"hits", "misses", "size"} <= set(out["plan_cache"])
+    assert "optimized" in out and "naive" in out
+
+
+# -- cursor streaming ---------------------------------------------------------
+
+
+def test_cursor_batches_are_bounded(db):
+    s = db.session(batch_rows=16)
+    batches = list(s.run("MATCH (n:Person) RETURN n.name").batches())
+    assert all(len(b) <= 16 for b in batches)
+    assert sum(len(b) for b in batches) == 64
+
+
+def test_limit_early_exit_stops_scanning(db):
+    s = db.session(batch_rows=8)
+    cur = s.run("MATCH (n:Person) RETURN n.name LIMIT 5")
+    rows = cur.fetchall()
+    assert len(rows) == 5
+    # only the first scan chunk was pulled, not all 64 nodes
+    assert cur.context.scan_rows <= 8 < db.graph.n_nodes
+
+
+def test_limit_param_binding(db):
+    s = db.session()
+    assert len(s.run("MATCH (n:Person) RETURN n.name LIMIT $k",
+                     k=3).fetchall()) == 3
+
+
+def test_cursor_iteration_protocol(db):
+    s = db.session()
+    cur = s.run("MATCH (n:Person) RETURN n.name, n.age AS years")
+    assert cur.keys() == ("n.name", "years")
+    first = cur.fetchone()
+    assert set(first) == {"n.name", "years"}
+    some = cur.fetchmany(10)
+    rest = cur.fetchall()
+    assert 1 + len(some) + len(rest) == 64
+    assert cur.fetchone() is None
+
+
+def test_streaming_index_pushdown_not_capped_by_chunk_size():
+    """kNN k must come from graph size, not the 256-row chunk the streaming
+    driver hands the filter -- otherwise large match sets get truncated."""
+    from repro.configs.pandadb import VectorIndexConfig
+    from repro.data.synthetic_graph import identity_photo
+
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=32))
+    rng = np.random.default_rng(5)
+    ident = rng.standard_normal(32)
+    n = 600   # > 2 chunks and > the old min-k of 64
+    for i in range(n):
+        db.graph.create_node("Person", name=f"p{i}",
+                             photo=identity_photo(rng, ident, 512, noise=0.02))
+    db.build_index("face", "photo",
+                   cfg=VectorIndexConfig(dim=32, vectors_per_bucket=64,
+                                         min_buckets=4, nprobe=4))
+    probe = identity_photo(rng, ident, 512, noise=0.02)
+    with open("/tmp/pushdown_probe.bin", "wb") as f:
+        f.write(probe)
+    s = db.session(batch_rows=256)
+    cur = s.run("MATCH (p:Person) WHERE p.photo->face ~: "
+                "createFromSource($q)->face RETURN p.name",
+                q="/tmp/pushdown_probe.bin")
+    rows = cur.fetchall()
+    assert cur.context.index_hits >= 1, "pushdown must fire"
+    assert len(rows) > 64, f"match set truncated to {len(rows)}"
+
+
+def test_cursor_lazy_semantic_extraction(db):
+    """LIMIT + streaming: φ runs only for rows the cursor actually touched."""
+    s = db.session(batch_rows=8)
+    cur = s.run("MATCH (n:Person) WHERE n.photo->face ~: n.photo->face "
+                "RETURN n.name LIMIT 4")
+    assert len(cur.fetchall()) == 4
+    assert cur.context.extract_count <= 16 < db.graph.n_nodes
+
+
+def test_closed_session_refuses_run_and_prepared(db):
+    s = db.session()
+    stmt = s.prepare("MATCH (n:Person) WHERE n.name=$w RETURN n.age")
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.run("MATCH (n:Person) RETURN n.name")
+    with pytest.raises(RuntimeError, match="closed"):
+        stmt.run(w="p1")
+
+
+def test_semantic_speed_warmup_reoptimizes_cached_plan(db):
+    """First real φ measurement replaces the default-prior speed and bumps
+    the stats epoch, so the cached plan is re-optimized with the truth
+    instead of being pinned forever on a static graph."""
+    s = db.session()
+    s.run("MATCH (n:Person) RETURN n.name LIMIT 1").fetchall()  # settle epoch
+    db.plan_cache.clear()
+    q = ("MATCH (n:Person) WHERE n.photo->face ~: n.photo->face "
+         "AND n.age > $min RETURN n.name")
+    e0 = db.stats.epoch
+    s.run(q, min=0).fetchall()      # records semantic_filter:face first time
+    assert db.stats.epoch == e0 + 1
+    s.run(q, min=0).fetchall()      # replanned once with measured speed
+    s.run(q, min=0).fetchall()      # then cached again
+    pc = db.plan_cache.stats()
+    assert pc["misses"] == 2 and pc["hits"] == 1
+
+
+# -- backward compatibility ---------------------------------------------------
+
+
+def test_db_query_wrapper_unchanged(db):
+    rows = db.query("MATCH (n:Person)-[:knows]->(m:Person) "
+                    "WHERE n.name='p0' RETURN m.name")
+    assert rows == [{"m.name": "p1"}]
+
+
+def test_db_query_accepts_params(db):
+    rows = db.query("MATCH (n:Person) WHERE n.name=$who RETURN n.age",
+                    who="p5")
+    assert rows == [{"n.age": 25}]
+
+
+def test_db_query_legacy_positional_optimized(db):
+    """Seed signature was query(text, optimized); positional bools must
+    keep meaning the optimizer flag."""
+    q = "MATCH (n:Person) WHERE n.name='p5' RETURN n.age"
+    assert db.query(q, False) == db.query(q, True) == [{"n.age": 25}]
+
+
+def test_fetchmany_zero_returns_nothing(db):
+    s = db.session()
+    cur = s.run("MATCH (n:Person) RETURN n.name")
+    assert cur.fetchmany(0) == []
+    assert len(cur.fetchall()) == 64, "fetchmany(0) must not consume a row"
+
+
+def test_db_query_create_still_works(db):
+    n0 = db.graph.n_nodes
+    db.query("CREATE (x:Team {name: 'T'})")
+    assert db.graph.n_nodes == n0 + 1
+
+
+# -- writes / transactions ----------------------------------------------------
+
+
+def test_create_with_params(db):
+    s = db.session()
+    s.run("CREATE (x:Person {name: $name, age: $age})", name="neo", age=1)
+    rows = s.run("MATCH (n:Person) WHERE n.name=$n RETURN n.age",
+                 n="neo").fetchall()
+    assert rows == [{"n.age": 1}]
+    # WAL logged the *bound* statement (scalar params inlined for replay)
+    assert "CREATE (x:Person {name: 'neo', age: 1})" in \
+        [stmt for _, stmt in db.graph.wal.entries]
+
+
+def test_write_transaction_group_commit(db):
+    s = db.session()
+    v0 = db.graph.wal.version
+    n0 = db.graph.n_nodes
+    with s.write_transaction() as tx:
+        tx.run("CREATE (a:Team {name: 'A'})")
+        assert db.graph.wal.version == v0, "WAL append deferred to commit"
+        assert db.graph.n_nodes == n0, "graph mutation deferred to commit"
+        tx.run("CREATE (b:Team {name: 'B'})")
+    assert db.graph.wal.version == v0 + 2
+    assert db.graph.n_nodes == n0 + 2
+
+
+def test_write_transaction_abort_changes_nothing(db):
+    s = db.session()
+    v0 = db.graph.wal.version
+    n0 = db.graph.n_nodes
+    with pytest.raises(RuntimeError):
+        with s.write_transaction() as tx:
+            tx.run("CREATE (a:Team {name: 'A'})")
+            raise RuntimeError("boom")
+    assert db.graph.wal.version == v0, "aborted scope must not reach the WAL"
+    assert db.graph.n_nodes == n0, "aborted scope must not mutate the graph"
+
+
+def test_create_rejects_params_without_wal_literal_form(db):
+    """Values bind_text cannot inline would leave a $placeholder in the WAL
+    (followers could never replay) -- the write must be refused up front."""
+    s = db.session()
+    n0 = db.graph.n_nodes
+    for bad in ("O'Brien", -3, b"\x00"):
+        with pytest.raises(ValueError, match="WAL-replayable"):
+            s.run("CREATE (x:Person {name: $v})", v=bad)
+    assert db.graph.n_nodes == n0
+
+
+def test_failing_create_mutates_nothing(db, tmp_path):
+    """Blob sources resolve before the first graph mutation, so a bad path
+    leaves graph, WAL, and blob store all untouched."""
+    ok = tmp_path / "ok.bin"
+    ok.write_bytes(b"\x01" * 32)
+    s = db.session()
+    n0, v0 = db.graph.n_nodes, db.graph.wal.version
+    b0 = len(db.graph.blobs.meta)
+    with pytest.raises(FileNotFoundError):
+        s.run("CREATE (a:Person {photo: createFromSource($good)}) "
+              "CREATE (b:Person {photo: createFromSource($bad)})",
+              good=str(ok), bad="/nonexistent/file.bin")
+    assert db.graph.n_nodes == n0
+    assert db.graph.wal.version == v0
+    assert len(db.graph.blobs.meta) == b0, "no orphaned blob from the abort"
+
+
+def test_write_tx_validates_renderability_at_defer_time(db):
+    """A bad value must fail the scope when the statement is submitted, so
+    no earlier statement of the 'atomic' scope gets applied at commit."""
+    s = db.session()
+    n0, v0 = db.graph.n_nodes, db.graph.wal.version
+    with pytest.raises(ValueError, match="WAL-replayable"):
+        with s.write_transaction() as tx:
+            tx.run("CREATE (a:Team {name: $good})", good="ok")
+            tx.run("CREATE (b:Team {name: $bad})", bad="o'hara")
+    assert db.graph.n_nodes == n0 and db.graph.wal.version == v0
+
+
+def test_write_through_second_session_inside_write_tx_raises(db):
+    """The write lock is not reentrant -- a same-thread write outside the
+    active transaction fails loudly instead of deadlocking."""
+    s = db.session()
+    with s.write_transaction() as tx:
+        tx.run("CREATE (t:Team {name: 'a'})")
+        with pytest.raises(RuntimeError, match="not reentrant"):
+            db.query("CREATE (u:Team {name: 'b'})")
+
+
+def test_nested_transaction_raises(db):
+    s = db.session()
+    with s.read_transaction():
+        with pytest.raises(RuntimeError, match="nested"):
+            with s.read_transaction():
+                pass
+    # the outer scope exited cleanly; the session is usable again
+    with s.write_transaction() as tx:
+        tx.run("CREATE (t:Team {name: 'after'})")
+    assert db.query("MATCH (t:Team) RETURN t.name") == [{"t.name": "after"}]
+
+
+def test_streaming_join_matches_materialized(db):
+    """The chunked probe path of the hash join (prebuilt build side) must
+    produce the same rows as the one-shot execute() path."""
+    from repro.core.executor import ExecutionContext, execute
+
+    q = ("MATCH (n:Person)-[:knows]->(m:Person), (k:Person) "
+         "WHERE k.name=m.name RETURN n.name, k.name LIMIT 1000")
+    plan = db.plan(q)
+    _, rows_mat = execute(plan, ExecutionContext(db))
+    rows_stream = db.session(batch_rows=7).run(q).fetchall()
+    key = lambda r: (r["n.name"], r["k.name"])  # noqa: E731
+    assert sorted(rows_stream, key=key) == sorted(rows_mat, key=key)
+    assert len(rows_mat) == 63
+
+
+def test_read_lock_upgrade_raises(db):
+    s = db.session()
+    with s.read_transaction():
+        with pytest.raises(RuntimeError, match="upgrade"):
+            db.query("CREATE (t:Team {name: 'x'})")
+
+
+def test_read_transaction_rejects_writes(db):
+    s = db.session()
+    with pytest.raises(RuntimeError):
+        with s.read_transaction() as tx:
+            tx.run("CREATE (a:Team {name: 'A'})")
+
+
+def test_write_lock_serializes_concurrent_writers(db):
+    sessions = [db.session() for _ in range(4)]
+    errs = []
+
+    def writer(s, i):
+        try:
+            for j in range(10):
+                s.run("CREATE (x:Item {name: $n})", n=f"i{i}_{j}")
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(s, i))
+               for i, s in enumerate(sessions)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(db.query("MATCH (n:Item) RETURN n.name")) == 40
+
+
+# -- helpers ------------------------------------------------------------------
+
+
+def test_bind_text_scalars_only():
+    out = bind_text("CREATE (n:P {a: $s, b: $i, c: $blob})",
+                    {"s": "xy", "i": 7, "blob": b"\x00"})
+    assert out == "CREATE (n:P {a: 'xy', b: 7, c: $blob})"
+
+
+def test_bind_text_keeps_unrepresentable_values_as_placeholders():
+    out = bind_text("CREATE (n:P {a: $q, b: $neg, c: $exp, d: $f})",
+                    {"q": "O'Brien", "neg": -3, "exp": 1e20, "f": 2.5})
+    assert out == "CREATE (n:P {a: $q, b: $neg, c: $exp, d: 2.5})"
+
+
+def test_bind_text_ignores_dollar_inside_string_literals():
+    out = bind_text("CREATE (n:P {body: 'price is $amount', amount: $amount})",
+                    {"amount": 5})
+    assert out == "CREATE (n:P {body: 'price is $amount', amount: 5})"
+
+
+def test_read_transaction_cursor_materialized_inside_scope(db):
+    s = db.session()
+    with s.read_transaction() as tx:
+        cur = tx.run("MATCH (n:Person) RETURN n.name")
+        cur2 = s.run("MATCH (n:Person) RETURN n.age")   # direct session.run
+    # rows were captured under the read lock; consuming after the scope is
+    # safe and complete (for both the tx.run and session.run spellings)
+    assert len(cur.fetchall()) == 64
+    assert len(cur2.fetchall()) == 64
+
+
+def test_read_inside_write_transaction_does_not_deadlock(db):
+    """db.query() through a second session inside a write scope must not
+    block on the write lock the same thread already holds."""
+    s = db.session()
+    result = {}
+
+    def scoped_read():
+        with s.write_transaction() as tx:
+            tx.run("CREATE (t:Team {name: 'locked'})")
+            result["rows"] = db.query(
+                "MATCH (n:Person) WHERE n.name='p1' RETURN n.age")
+
+    t = threading.Thread(target=scoped_read, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive(), "read inside write transaction deadlocked"
+    assert result["rows"] == [{"n.age": 21}]
+    assert db.query("MATCH (t:Team) RETURN t.name") == [{"t.name": "locked"}]
+
+
+def test_streaming_create_from_source_one_blob_per_request(db, tmp_path):
+    src = tmp_path / "probe.bin"
+    src.write_bytes(np.random.default_rng(3).bytes(128))
+    s = db.session(batch_rows=8)   # 64 nodes -> 8 chunks
+    n_blobs0 = len(db.graph.blobs.meta)
+    s.run("MATCH (n:Person) WHERE n.photo->face ~: "
+          "createFromSource($p)->face RETURN n.name", p=str(src)).fetchall()
+    assert len(db.graph.blobs.meta) == n_blobs0 + 1, \
+        "the query source must be registered once, not once per chunk"
