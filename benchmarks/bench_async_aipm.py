@@ -1,0 +1,108 @@
+"""Async AIPM extraction: overlap φ batches with structured operators.
+
+The paper's §IV-B/§V performance claim: sub-property extraction is
+dispatched asynchronously in batches so unstructured-data processing
+overlaps with structured query work.  This bench runs the same query --
+one structured predicate + one semantic predicate -- through the streaming
+executor twice:
+
+* ``sync``   -- ``prefetch_depth=0``: every cursor pull blocks on its
+  chunk's φ round-trip (the pre-PR-2 behavior).
+* ``async``  -- φ for the next ``prefetch_depth`` chunks is in flight on
+  the AIPM worker pool while structured scan/filter work and similarity
+  evaluation proceed on the session thread.
+
+The extractor simulates a remote model service (fixed per-call latency on
+top of the deterministic feature hash), which is exactly the regime the
+paper optimizes for.  Result sets must be byte-identical; the speedup and
+raw timings land in ``BENCH_async_aipm.json`` so the perf trajectory is
+tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit
+
+QUERY = ("MATCH (n:Person) WHERE n.age < $max_age "
+         "AND n.photo->slowface ~: n.photo->slowface RETURN n.name")
+
+
+def slow_extractor(dim: int, latency_s: float):
+    """feature_hash with a simulated model-service round-trip per batch."""
+    from repro.core.aipm import feature_hash_extractor
+    inner = feature_hash_extractor(dim)
+
+    def fn(raws: List[np.ndarray]) -> np.ndarray:
+        time.sleep(latency_s)
+        return inner(raws)
+
+    return fn
+
+
+def build_db(n_persons: int, latency_s: float, workers: int):
+    from repro.configs.pandadb import AIPMConfig, PandaDBConfig
+    from repro.core import PandaDB
+
+    cfg = PandaDBConfig(aipm=AIPMConfig(workers=workers, max_inflight=16))
+    db = PandaDB(cfg)
+    db.register_extractor("slowface", slow_extractor(32, latency_s),
+                          batch_size=64)
+    rng = np.random.default_rng(7)
+    for i in range(n_persons):
+        db.graph.create_node("Person", name=f"person_{i}",
+                             age=float(rng.integers(18, 80)),
+                             photo=rng.bytes(256))
+    return db
+
+
+def run(n_persons: int = 480, latency_s: float = 0.02,
+        batch_rows: int = 32, prefetch_depth: int = 6,
+        workers: int = 4) -> Dict[str, float]:
+    db = build_db(n_persons, latency_s, workers)
+    results = {}
+    timings = {}
+    for mode, depth in (("sync", 0), ("async", prefetch_depth)):
+        db.cache.clear()
+        session = db.session(batch_rows=batch_rows, prefetch_depth=depth)
+        t0 = time.perf_counter()
+        cur = session.run(QUERY, max_age=60)
+        rows = cur.fetchall()
+        timings[mode] = time.perf_counter() - t0
+        results[mode] = rows
+        emit(f"async_aipm/{mode}", timings[mode] * 1e6,
+             f"rows={len(rows)};extracted={cur.context.extract_count};"
+             f"depth={depth}")
+    identical = results["sync"] == results["async"]
+    speedup = timings["sync"] / max(timings["async"], 1e-9)
+    emit("async_aipm/speedup", speedup * 100,
+         f"async/sync={speedup:.2f}x;identical={identical}")
+    payload = {
+        "n_persons": n_persons,
+        "latency_s": latency_s,
+        "batch_rows": batch_rows,
+        "prefetch_depth": prefetch_depth,
+        "aipm_workers": workers,
+        "t_sync_s": timings["sync"],
+        "t_async_s": timings["async"],
+        "speedup": speedup,
+        "identical_results": identical,
+        "rows": len(results["sync"]),
+    }
+    out = Path(__file__).resolve().parent.parent / "BENCH_async_aipm.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    db.aipm.shutdown()
+    if not identical:
+        raise SystemExit("async path diverged from sync result set")
+    return payload
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -13,6 +13,7 @@ import traceback
 from benchmarks.common import header
 
 SUITES = {
+    "async_aipm": "benchmarks.bench_async_aipm",
     "fig8": "benchmarks.bench_throughput",
     "fig9": "benchmarks.bench_vs_pipeline",
     "fig10": "benchmarks.bench_optimizer",

@@ -1,21 +1,28 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the full test suite plus a quick serving-benchmark smoke.
 #
-#   scripts/verify.sh            # tests + bench smoke
-#   scripts/verify.sh --fast     # tests only
+#   scripts/verify.sh            # full tests + bench smoke
+#   scripts/verify.sh --fast     # full tests only
+#   scripts/verify.sh --quick    # tier-1 minus `slow` markers, no bench
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+MODE="${1:-}"
 
-if [[ "${1:-}" != "--fast" ]]; then
+echo "== tier-1: pytest =="
+if [[ "$MODE" == "--quick" ]]; then
+  python -m pytest -x -q -m "not slow"
+else
+  python -m pytest -x -q
+fi
+
+if [[ -z "$MODE" ]]; then
   echo
   echo "== bench smoke: prepared-statement serving throughput =="
   PYTHONPATH="src:.:${PYTHONPATH}" python benchmarks/bench_throughput.py --smoke
 fi
 
 echo
-echo "verify OK"
+echo "verify OK${MODE:+ (${MODE#--})}"

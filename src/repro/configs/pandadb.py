@@ -39,8 +39,13 @@ class AIPMConfig:
     """AI-model interactive protocol: async batched extractor dispatch."""
 
     max_batch: int = 256
-    max_inflight: int = 4          # bounded async queue depth
+    max_inflight: int = 4          # bounded async queue depth (backpressure)
     timeout_ms: int = 30_000
+    workers: int = 2               # model-service parallelism (φ batches in flight)
+    prefetch_depth: int = 2        # chunks of φ work submitted ahead of the
+    #                                semantic filter's consumption point; 0 = sync
+    auto_batch: bool = True        # size φ slices from observed avg_speed
+    target_batch_s: float = 0.05   # auto_batch aims one slice ≈ this long
 
 
 @dataclass(frozen=True)

@@ -79,9 +79,17 @@ class ModelRegistry:
 class AIPMService:
     """Bounded async request queue in front of the registry.
 
-    ``submit`` returns a Future (the AIPM-request); a worker drains the queue
-    in extractor-sized batches.  ``extract_sync`` is the blocking convenience
-    used by the executor when it wants the result immediately.
+    ``submit`` returns a Future (the AIPM-request); a pool of ``cfg.workers``
+    threads drains the queue in extractor-sized batches, so several φ batches
+    can be in flight at once (the paper's model service has its own
+    parallelism, away from the database kernel).  The queue is bounded at
+    ``cfg.max_inflight`` -- a submitter that outruns the service blocks and
+    eventually gets ``queue.Full`` (backpressure), so prefetching can never
+    grow memory without bound.  A queued request whose future is cancelled
+    before a worker picks it up is skipped entirely (``LIMIT`` early exit).
+
+    ``extract_sync`` is the blocking convenience used by the executor when it
+    wants the result immediately.
     """
 
     def __init__(self, registry: ModelRegistry,
@@ -90,33 +98,52 @@ class AIPMService:
         self.cfg = cfg or AIPMConfig()
         self._queue: "queue.Queue[Optional[AIPMRequest]]" = queue.Queue(
             maxsize=self.cfg.max_inflight)
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
+        self.cancelled_requests = 0
+        self._stats_lock = threading.Lock()   # spec counters, multi-worker
+        self._workers = [threading.Thread(target=self._run, daemon=True)
+                         for _ in range(max(1, self.cfg.workers))]
+        for w in self._workers:
+            w.start()
 
     def _run(self) -> None:
         while True:
             req = self._queue.get()
             if req is None:
                 return
+            if not req.future.set_running_or_notify_cancel():
+                with self._stats_lock:
+                    self.cancelled_requests += 1    # cancelled while queued
+                continue
             try:
                 req.future.set_result(self._execute(req))
             except Exception as e:  # noqa: BLE001
                 req.future.set_exception(e)
 
+    def _slice_rows(self, spec: ExtractorSpec) -> int:
+        """φ slice size: observed per-row speed targets ~target_batch_s per
+        model call (cost-model feedback), clamped to the protocol maximum."""
+        if not self.cfg.auto_batch:
+            return spec.batch_size
+        from repro.core.cost_model import suggest_phi_batch
+        return suggest_phi_batch(spec.avg_speed, spec.batch_size,
+                                 self.cfg.max_batch, self.cfg.target_batch_s)
+
     def _execute(self, req: AIPMRequest) -> Dict[int, np.ndarray]:
         spec = self.registry.get(req.sub_key)
+        batch_rows = self._slice_rows(spec)
         out: Dict[int, np.ndarray] = {}
         t0 = time.perf_counter()
-        for off in range(0, len(req.items), spec.batch_size):
-            chunk = req.items[off:off + spec.batch_size]
+        for off in range(0, len(req.items), batch_rows):
+            chunk = req.items[off:off + batch_rows]
             raws = [r for (_i, r) in chunk]
             vecs = np.asarray(spec.fn(raws))
             for (item_id, _r), v in zip(chunk, vecs):
                 out[item_id] = v
         dt = time.perf_counter() - t0
-        spec.calls += 1
-        spec.rows += len(req.items)
-        spec.total_time += dt
+        with self._stats_lock:
+            spec.calls += 1
+            spec.rows += len(req.items)
+            spec.total_time += dt
         return out
 
     def submit(self, sub_key: str,
@@ -130,8 +157,13 @@ class AIPMService:
         return self.submit(sub_key, items).result(
             timeout=self.cfg.timeout_ms / 1000)
 
+    def pending(self) -> int:
+        """Requests queued but not yet picked up (approximate)."""
+        return self._queue.qsize()
+
     def shutdown(self) -> None:
-        self._queue.put(None)
+        for _ in self._workers:
+            self._queue.put(None)
 
 
 # ---------------------------------------------------------------------------

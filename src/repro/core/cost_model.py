@@ -31,10 +31,12 @@ class StatisticsService:
         self.avg_degree: float = 4.0
         self.structured_selectivity: float = 0.1
         self.semantic_selectivity: float = 0.5
-        # epoch bumps whenever a refresh observes changed cardinalities; the
-        # plan cache keys on it so stale plans are re-optimized, not reused
+        # epoch bumps whenever a refresh observes changed cardinalities or a
+        # changed extractor serial; the plan cache keys on it so stale plans
+        # are re-optimized, not reused
         self.epoch = 0
         self._graph_sig: Optional[tuple] = None
+        self._extractor_serials: Dict[str, int] = {}
 
     # -- speed statistics ------------------------------------------------------
 
@@ -74,6 +76,30 @@ class StatisticsService:
         if isinstance(op, lp.Join):
             return 3 * self.cfg.default_structured_speed
         return self.cfg.default_structured_speed
+
+    def refresh_extractor_stats(self, registry) -> None:
+        """Fold the AIPM registry's observed per-extractor ``avg_speed`` into
+        the semantic-filter speed table and track model serials.
+
+        * A changed (or first-seen) serial bumps the epoch, so every cached
+          plan keyed on the old epoch is re-optimized -- a model update can
+          change φ cost by orders of magnitude (paper Fig 6 invalidation,
+          extended to plans).
+        * The observed extraction speed seeds the speed table only when the
+          executor has no measurement of its own yet: it is a far better
+          prior than the paper-calibrated 0.3 s/row default, but the
+          executor's EWMA (which sees cache hits and index pushdown) stays
+          authoritative once it exists.
+        """
+        for sub_key in registry.known():
+            spec = registry.get(sub_key)
+            if self._extractor_serials.get(sub_key) != spec.serial:
+                self._extractor_serials[sub_key] = spec.serial
+                self.epoch += 1
+            key = f"semantic_filter:{sub_key}"
+            if spec.rows and key not in self.speeds:
+                self.speeds[key] = spec.avg_speed
+                self.epoch += 1
 
     # -- cardinality -----------------------------------------------------------
 
@@ -125,6 +151,18 @@ def _sem_key(expr: Any) -> str:
             if k:
                 return k
     return ""
+
+
+def suggest_phi_batch(avg_speed: float, default: int, max_batch: int,
+                      target_s: float) -> int:
+    """Pick the φ slice size from the observed per-row speed: one model call
+    should take ~``target_s`` so slow extractors keep batches small (bounded
+    latency per AIPM round-trip) while fast ones amortize dispatch overhead
+    over bigger slices.  Falls back to the registered default until a speed
+    has been observed."""
+    if avg_speed <= 0:
+        return max(1, min(default, max_batch))
+    return max(1, min(max_batch, int(target_s / avg_speed)))
 
 
 def estimate_cost(op: lp.PlanOp, stats: StatisticsService) -> float:

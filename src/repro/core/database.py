@@ -14,7 +14,7 @@ from repro.core.cost_model import StatisticsService, estimate_plan_cost
 from repro.core.cypherplus import CreateQuery, MatchQuery, parse_query
 from repro.core.plan_optimizer import QueryGraph, naive_plan, optimize
 from repro.core.property_graph import PandaGraph
-from repro.core.semantic_cache import SemanticCache
+from repro.core.semantic_cache import InflightTable, SemanticCache
 from repro.core.session import (
     PlanCache,
     RWLock,
@@ -33,6 +33,7 @@ class PandaDB:
         self.registry = ModelRegistry()
         self.aipm = AIPMService(self.registry, self.cfg.aipm)
         self.cache = SemanticCache(self.cfg.cache)
+        self.inflight = InflightTable()   # cross-session φ request dedup
         self.stats = StatisticsService(self.cfg.cost)
         self.indexes: Dict[str, IVFIndex] = {}
         self.scalar_indexes: Dict[str, Any] = {}   # NumericIndex | InvertedIndex
@@ -43,10 +44,15 @@ class PandaDB:
     # -- driver surface (sessions / prepared statements / cursors) -------------
 
     def session(self, batch_rows: Optional[int] = None,
-                use_cache: bool = True) -> Session:
+                use_cache: bool = True,
+                prefetch_depth: Optional[int] = None) -> Session:
         """Open a driver session: ``prepare()``/``run()``/transactions.
-        Sessions share this db's plan cache; one session per worker thread."""
-        kwargs: Dict[str, Any] = {"use_cache": use_cache}
+        Sessions share this db's plan cache; one session per worker thread.
+        ``prefetch_depth`` overrides the AIPMConfig default for how many
+        chunks of φ extraction are kept in flight ahead of the semantic
+        filter (0 = fully synchronous extraction)."""
+        kwargs: Dict[str, Any] = {"use_cache": use_cache,
+                                  "prefetch_depth": prefetch_depth}
         if batch_rows is not None:
             kwargs["batch_rows"] = batch_rows
         return Session(self, **kwargs)

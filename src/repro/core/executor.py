@@ -24,10 +24,21 @@ Two drive modes share the same operator kernels:
 ``$param`` placeholders (:class:`~repro.core.cypherplus.Param`) are resolved
 late, from ``ExecutionContext.params``, so one optimized plan serves every
 binding of the same query skeleton.
+
+Async φ pipeline (paper §IV-B): in the streaming driver a ``SemanticFilter``
+dispatches AIPM extraction for up to ``prefetch_depth`` upcoming chunks and
+keeps pulling structured work from its child while those batches resolve on
+the model-service workers; it joins a chunk's futures only when the semantic
+predicate actually needs the values.  In-flight requests are deduplicated
+across concurrent executions through :class:`~repro.core.semantic_cache.
+InflightTable`, and ``LIMIT`` early exit cancels every batch no worker has
+picked up yet.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
+from concurrent.futures import CancelledError, Future
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -52,15 +63,22 @@ DEFAULT_BATCH_ROWS = 256
 
 
 class ExecutionContext:
-    def __init__(self, db, params: Optional[Dict[str, Any]] = None) -> None:
+    def __init__(self, db, params: Optional[Dict[str, Any]] = None,
+                 prefetch_depth: Optional[int] = None) -> None:
         self.db = db
         self.graph = db.graph
         self.stats = db.stats
         self.cache = db.cache
         self.aipm = db.aipm
         self.registry = db.registry
+        self.inflight = db.inflight
+        #: chunks of φ work kept in flight ahead of the semantic filter's
+        #: consumption point (0 disables overlap; None = AIPMConfig default)
+        self.prefetch_depth = (db.cfg.aipm.prefetch_depth
+                               if prefetch_depth is None else prefetch_depth)
         self.params: Dict[str, Any] = dict(params or {})
-        self.extract_count = 0      # φ invocations (cache misses), for benches
+        self.extract_count = 0      # φ items dispatched by *this* execution
+        self.dedup_borrows = 0      # φ items shared with another execution
         self.index_hits = 0
         self.scan_rows = 0          # rows emitted by leaf scans (LIMIT proof)
         self._pushdown_memo: Dict[int, Any] = {}   # plan id -> index matches
@@ -91,6 +109,142 @@ def _resolve_limit(n: Any, ctx: ExecutionContext) -> int:
 
 
 # ---------------------------------------------------------------------------
+# asynchronous φ extraction (AIPM futures + cross-session in-flight dedup)
+# ---------------------------------------------------------------------------
+
+
+class PhiBatch:
+    """Handle for one in-flight φ extraction round over a set of blob ids.
+
+    *Owned* keys were claimed in the in-flight table by this execution and
+    dispatched as one AIPM request; *borrowed* keys are being extracted by a
+    concurrent execution whose futures we wait on instead of re-submitting.
+    ``join`` blocks until every value is in the semantic cache; ``cancel``
+    withdraws the AIPM request if no worker picked it up yet (``LIMIT`` early
+    exit), releasing the owned claims so nothing waits on an orphan."""
+
+    def __init__(self, ctx: "ExecutionContext", sub_key: str, serial: int,
+                 bids: List[int], owned: List[Tuple[Tuple, Future]],
+                 borrowed: Dict[Tuple, Future],
+                 aipm_future: Optional[Future]) -> None:
+        self.ctx = ctx
+        self.sub_key = sub_key
+        self.serial = serial
+        self.bids = bids
+        self.owned = owned
+        self.borrowed = borrowed
+        self.aipm_future = aipm_future
+
+    def join(self) -> None:
+        ctx, timeout = self.ctx, self.ctx.aipm.cfg.timeout_ms / 1000
+        if self.aipm_future is not None:
+            try:
+                out = self.aipm_future.result(timeout=timeout)
+            except CancelledError:
+                pass                        # fall through to the sync retry
+            else:
+                # consume the result directly: Future.result() can return
+                # before the done-callback has filled the cache (waiters are
+                # notified first), and waiting on the callback would re-extract
+                for key, _f in self.owned:
+                    ctx.cache.put(key[0], self.sub_key, self.serial,
+                                  out.get(key[0]))
+        for f in self.borrowed.values():
+            try:
+                f.result(timeout=timeout)   # owner's callback fills the cache
+            except (CancelledError, Exception):  # noqa: BLE001
+                pass                        # owner bailed/failed: retry below
+        retry = [b for b in self.bids
+                 if ctx.cache.peek(b, self.sub_key, self.serial) is None]
+        if retry:
+            items = [(b, ctx.graph.blobs.as_array(b)) for b in retry]
+            ctx.extract_count += len(items)
+            for bid, vec in ctx.aipm.extract_sync(self.sub_key, items).items():
+                ctx.cache.put(bid, self.sub_key, self.serial, vec)
+
+    def cancel(self) -> None:
+        if self.aipm_future is not None:
+            # success -> the done-callback discards the owned claims, and
+            # borrowers of those keys re-extract for themselves; failure
+            # means a worker already took it -- the callback will resolve
+            # the claims normally, so nothing is ever orphaned either way
+            self.aipm_future.cancel()
+
+
+def _begin_extraction(ctx: ExecutionContext, sub_key: str,
+                      blob_ids: np.ndarray) -> Optional[PhiBatch]:
+    """Dispatch φ for every not-yet-cached blob id; returns a joinable handle
+    or None when the cache already covers everything."""
+    serial = ctx.registry.serial(sub_key)
+    missing: List[int] = []
+    seen = set()
+    for bid in blob_ids:
+        bid = int(bid)
+        if bid < 0 or bid in seen:
+            continue
+        seen.add(bid)
+        if ctx.cache.peek(bid, sub_key, serial) is None:
+            missing.append(bid)
+    ctx.cache.note_misses(len(missing))
+    if not missing:
+        return None
+    owned, borrowed = ctx.inflight.claim(
+        [(b, sub_key, serial) for b in missing])
+    ctx.dedup_borrows += len(borrowed)
+    aipm_future = None
+    if owned:
+        items = [(key[0], ctx.graph.blobs.as_array(key[0]))
+                 for key, _f in owned]
+        ctx.extract_count += len(items)
+        try:
+            aipm_future = ctx.aipm.submit(sub_key, items)
+        except Exception:
+            for key, _f in owned:
+                ctx.inflight.discard(key)
+            raise
+        inflight, cache = ctx.inflight, ctx.cache
+
+        def _on_done(fut: Future, owned=owned) -> None:
+            if fut.cancelled():
+                for key, _f in owned:
+                    inflight.discard(key)
+                return
+            exc = fut.exception()
+            if exc is not None:
+                for key, _f in owned:
+                    inflight.fail(key, exc)
+                return
+            out = fut.result()
+            for key, _f in owned:
+                val = out.get(key[0])
+                cache.put(key[0], sub_key, serial, val)
+                inflight.resolve(key, val)
+
+        aipm_future.add_done_callback(_on_done)
+    return PhiBatch(ctx, sub_key, serial, missing, owned, borrowed,
+                    aipm_future)
+
+
+def _collect_subprops(expr: Any) -> List[SubProp]:
+    """Per-row sub-property extractions a predicate will evaluate (prefetch
+    targets).  Query-side extractions (``createFromSource(...)->k``) are one
+    item, memoized through the cache -- not worth prefetching per chunk."""
+    out: List[SubProp] = []
+    if isinstance(expr, SubProp):
+        if isinstance(expr.base, Prop):
+            out.append(expr)
+    elif isinstance(expr, Compare):
+        out += _collect_subprops(expr.left) + _collect_subprops(expr.right)
+    elif isinstance(expr, BoolOp):
+        for a in expr.args:
+            out += _collect_subprops(a)
+    elif isinstance(expr, FuncCall):
+        for a in expr.args:
+            out += _collect_subprops(a)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # operator kernels (shared by the materializing and streaming drivers)
 # ---------------------------------------------------------------------------
 
@@ -101,8 +255,11 @@ def _scan_ids(plan: lp.PlanOp, ctx: ExecutionContext) -> np.ndarray:
     return ctx.graph.store.nodes_with_label(plan.label)
 
 
-def _apply_filter(plan, child: Bindings, ctx: ExecutionContext) -> Bindings:
-    """Filter / SemanticFilter kernel (with index pushdown), timed."""
+def _apply_filter(plan, child: Bindings, ctx: ExecutionContext,
+                  extra_time: float = 0.0) -> Bindings:
+    """Filter / SemanticFilter kernel (with index pushdown), timed.
+    ``extra_time`` folds upstream φ wait (prefetch join) into the one
+    record per chunk, so the EWMA sees the operator's full pipelined cost."""
     n_in = _rows(child)
     t0 = time.perf_counter()
     pushed = (_try_index_pushdown(plan, child, ctx)
@@ -112,7 +269,7 @@ def _apply_filter(plan, child: Bindings, ctx: ExecutionContext) -> Bindings:
     else:
         mask = np.asarray(eval_expr(plan.predicate, child, ctx), bool)
         out = {k: v[mask] for k, v in child.items()}
-    _record(ctx, plan, time.perf_counter() - t0, n_in)
+    _record(ctx, plan, time.perf_counter() - t0 + extra_time, n_in)
     return out
 
 
@@ -276,7 +433,10 @@ def _iter_bindings(plan: lp.PlanOp, ctx: ExecutionContext,
             ctx.scan_rows += len(chunk)
             yield {plan.var: chunk}
         return
-    if isinstance(plan, (lp.Filter, lp.SemanticFilter)):
+    if isinstance(plan, lp.SemanticFilter):
+        yield from _iter_semantic_filter(plan, ctx, batch_rows)
+        return
+    if isinstance(plan, lp.Filter):
         for chunk in _iter_bindings(plan.child, ctx, batch_rows):
             out = _apply_filter(plan, chunk, ctx)
             if _rows(out):
@@ -312,6 +472,82 @@ def _iter_bindings(plan: lp.PlanOp, ctx: ExecutionContext,
         yield {k: v[i:i + batch_rows] for k, v in bindings.items()}
 
 
+def _index_may_cover(plan: lp.SemanticFilter, ctx: ExecutionContext) -> bool:
+    """Cheap static check: could index pushdown replace extraction for this
+    filter?  Conservative (a True that later falls through to φ just loses
+    prefetch); used to avoid dispatching φ work an index would make moot."""
+    pred = plan.predicate
+    if not isinstance(pred, Compare):
+        return False
+    for side in (pred.left, pred.right):
+        if not (isinstance(side, SubProp) and isinstance(side.base, Prop)):
+            continue
+        if pred.op == "~:":
+            index = ctx.db.indexes.get(side.sub_key)
+        elif pred.op in ("=", "<", ">", "<=", ">="):
+            index = ctx.db.scalar_indexes.get(side.sub_key)
+        else:
+            index = None
+        if index is not None and \
+                index.serial == ctx.registry.serial(side.sub_key):
+            return True
+    return False
+
+
+def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
+                          batch_rows: int) -> Iterator[Bindings]:
+    """SemanticFilter stage of the streaming driver: φ for up to
+    ``ctx.prefetch_depth`` upcoming chunks is dispatched to the AIPM service
+    while earlier chunks are being similarity-tested and while the child
+    pipeline (scans, cheap structured filters) produces the next chunks --
+    extraction latency overlaps structured query work instead of serializing
+    into every cursor pull.  Chunks are joined and yielded strictly in child
+    order, so results are byte-identical to the synchronous path.  Closing
+    the generator (``LIMIT`` early exit, cursor close) cancels every φ batch
+    not yet picked up by a worker."""
+    depth = ctx.prefetch_depth
+    # dedupe: `x ~: x` style predicates name the same extraction twice
+    subprops = list(dict.fromkeys(_collect_subprops(plan.predicate)))
+    if depth <= 0 or not subprops or _index_may_cover(plan, ctx):
+        for chunk in _iter_bindings(plan.child, ctx, batch_rows):
+            out = _apply_filter(plan, chunk, ctx)
+            if _rows(out):
+                yield out
+        return
+    child_it = _iter_bindings(plan.child, ctx, batch_rows)
+    pending: "deque[Tuple[Bindings, List[PhiBatch]]]" = deque()
+    exhausted = False
+    try:
+        while True:
+            while not exhausted and len(pending) < depth:
+                chunk = next(child_it, None)
+                if chunk is None:
+                    exhausted = True
+                    break
+                handles = []
+                for sp in subprops:
+                    h = _begin_extraction(ctx, sp.sub_key,
+                                          _blob_ids_for(sp.base, chunk, ctx))
+                    if h is not None:
+                        handles.append(h)
+                pending.append((chunk, handles))
+            if not pending:
+                return
+            chunk, handles = pending.popleft()
+            t0 = time.perf_counter()
+            for h in handles:
+                h.join()
+            out = _apply_filter(plan, chunk, ctx,
+                                extra_time=time.perf_counter() - t0)
+            if _rows(out):
+                yield out
+    finally:
+        for _chunk, handles in pending:
+            for h in handles:
+                h.cancel()
+        child_it.close()
+
+
 def execute_iter(plan: lp.PlanOp, ctx: ExecutionContext,
                  batch_rows: int = DEFAULT_BATCH_ROWS) -> Iterator[List[Dict]]:
     """Stream projected rows in bounded batches (each a list of dicts).
@@ -330,20 +566,26 @@ def execute_iter(plan: lp.PlanOp, ctx: ExecutionContext,
     if limit == 0:
         return
     produced = 0
-    for chunk in _iter_bindings(plan, ctx, batch_rows):
-        if proj is not None:
-            rows = _project_rows(proj, chunk, ctx)
-        else:
-            n = _rows(chunk)
-            rows = [{k: int(v[i]) for k, v in chunk.items()}
-                    for i in range(n)]
-        if not rows:
-            continue
-        if limit is not None and produced + len(rows) >= limit:
-            yield rows[:limit - produced]
-            return
-        produced += len(rows)
-        yield rows
+    it = _iter_bindings(plan, ctx, batch_rows)
+    try:
+        for chunk in it:
+            if proj is not None:
+                rows = _project_rows(proj, chunk, ctx)
+            else:
+                n = _rows(chunk)
+                rows = [{k: int(v[i]) for k, v in chunk.items()}
+                        for i in range(n)]
+            if not rows:
+                continue
+            if limit is not None and produced + len(rows) >= limit:
+                yield rows[:limit - produced]
+                return
+            produced += len(rows)
+            yield rows
+    finally:
+        # deterministic teardown on LIMIT early exit / cursor close: closing
+        # the pipeline cancels any φ batches still in the prefetch window
+        it.close()
 
 
 def _record(ctx: ExecutionContext, op: lp.PlanOp, dt: float, rows: int) -> None:
@@ -436,25 +678,15 @@ def _blob_ids_for(expr: Any, b: Bindings, ctx: ExecutionContext) -> np.ndarray:
 
 
 def eval_subprop(expr: SubProp, b: Bindings, ctx: ExecutionContext):
-    """φ(item, key, sub_key) with cache -> AIPM batch extraction."""
+    """φ(item, key, sub_key) with cache -> in-flight dedup -> AIPM batch
+    extraction.  When the streaming driver prefetched this chunk the values
+    are already cached (or in flight) and this degenerates to a gather."""
     blob_ids = _blob_ids_for(expr.base, b, ctx)
     sub_key = expr.sub_key
     serial = ctx.registry.serial(sub_key)
-    missing: List[Tuple[int, np.ndarray]] = []
-    seen = set()
-    for bid in blob_ids:
-        bid = int(bid)
-        if bid < 0 or bid in seen:
-            continue
-        if ctx.cache.get(bid, sub_key, serial) is None:
-            raw = ctx.graph.blobs.as_array(bid)
-            missing.append((bid, raw))
-            seen.add(bid)
-    if missing:
-        extracted = ctx.aipm.extract_sync(sub_key, missing)
-        ctx.extract_count += len(missing)
-        for bid, vec in extracted.items():
-            ctx.cache.put(bid, sub_key, serial, vec)
+    batch = _begin_extraction(ctx, sub_key, blob_ids)
+    if batch is not None:
+        batch.join()
     out = [ctx.cache.get(int(bid), sub_key, serial) if bid >= 0 else None
            for bid in blob_ids]
     if out and isinstance(out[0], np.ndarray):

@@ -492,9 +492,13 @@ class Session:
 
     def __init__(self, db, batch_rows: int = DEFAULT_BATCH_ROWS,
                  plan_cache: Optional[PlanCache] = None,
-                 use_cache: bool = True) -> None:
+                 use_cache: bool = True,
+                 prefetch_depth: Optional[int] = None) -> None:
         self.db = db
         self.batch_rows = batch_rows
+        #: per-session φ prefetch window (None = AIPMConfig default); serving
+        #: workers tune this per workload without touching the shared config
+        self.prefetch_depth = prefetch_depth
         self.cache: Optional[PlanCache] = (
             plan_cache if plan_cache is not None
             else (db.plan_cache if use_cache else None))
@@ -534,6 +538,7 @@ class Session:
                                     optimized=optimized, text=text)
         # fast path: resolve through the plan cache without parsing
         self.db.stats.refresh_from_graph(self.db.graph)
+        self.db.stats.refresh_extractor_stats(self.db.registry)
         key = (skeleton, optimized, self.db.stats.epoch)
         q, plan = self.cache.get_or_build(
             key, lambda: self._parse_and_plan(text, optimized))
@@ -548,6 +553,7 @@ class Session:
         if isinstance(q, CreateQuery):
             return self._execute(q, None, params, text)
         self.db.stats.refresh_from_graph(self.db.graph)
+        self.db.stats.refresh_extractor_stats(self.db.registry)
         if self.cache is None:
             return self._execute(q, plan_query(self.db, q, optimized),
                                  params, text)
@@ -569,7 +575,8 @@ class Session:
         if missing:
             raise KeyError(f"unbound parameters: "
                            f"{', '.join('$' + m for m in sorted(missing))}")
-        ctx = ExecutionContext(self.db, params)
+        ctx = ExecutionContext(self.db, params,
+                               prefetch_depth=self.prefetch_depth)
         if isinstance(q, CreateQuery):
             self._execute_write(q, text, params)
             return Cursor(ctx, None)

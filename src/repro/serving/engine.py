@@ -50,10 +50,13 @@ class ServeStats:
 
 class QueryServer:
     def __init__(self, db, n_workers: int = 1,
-                 use_prepared: bool = True) -> None:
+                 use_prepared: bool = True,
+                 prefetch_depth: Optional[int] = None) -> None:
         self.db = db
         self.n_workers = n_workers
         self.use_prepared = use_prepared
+        #: per-worker φ prefetch window (None = AIPMConfig default, 0 = sync)
+        self.prefetch_depth = prefetch_depth
         self._queue: "queue.Queue" = queue.Queue()
         self._stats = ServeStats()
         self._lock = threading.Lock()
@@ -73,7 +76,8 @@ class QueryServer:
         # PlanCache by query skeleton, so any worker's prepared skeleton
         # serves every worker (use_prepared=False disables the cache to
         # reproduce the seed's parse-per-request behavior).
-        session = self.db.session(use_cache=self.use_prepared)
+        session = self.db.session(use_cache=self.use_prepared,
+                                  prefetch_depth=self.prefetch_depth)
         while not self._stop:
             try:
                 item = self._queue.get(timeout=0.2)

@@ -1,0 +1,270 @@
+"""Async AIPM extraction pipeline (PR 2): overlap, dedup, cancellation,
+backpressure.
+
+The streaming executor dispatches φ for upcoming chunks while structured
+work proceeds; these tests pin the contracts that make that safe:
+
+* results are identical to the synchronous path (ordering included),
+* concurrent sessions share one φ call per (item, sub-property, serial),
+* ``LIMIT`` early exit cancels in-flight batches and leaves no orphaned
+  futures in the dedup table or the AIPM queue,
+* the bounded AIPM queue applies backpressure instead of growing.
+"""
+import queue as queue_mod
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import AIPMConfig, PandaDBConfig
+from repro.core import PandaDB
+from repro.core.aipm import (
+    AIPMService,
+    ModelRegistry,
+    feature_hash_extractor,
+    label_extractor,
+)
+from repro.core.semantic_cache import InflightTable
+
+
+def wait_until(pred, timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return pred()
+
+
+class Gate:
+    """Extractor throttle: signals entry, blocks until released."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def wrap(self, inner):
+        def fn(raws):
+            self.entered.set()
+            assert self.release.wait(10), "gate never released"
+            return inner(raws)
+        return fn
+
+
+def latency_extractor(dim, latency_s):
+    inner = feature_hash_extractor(dim)
+
+    def fn(raws):
+        time.sleep(latency_s)
+        return inner(raws)
+
+    return fn
+
+
+def make_pet_db(n=48, extractor=None, seed=3, **aipm_kw):
+    cfg = PandaDBConfig(aipm=AIPMConfig(**aipm_kw)) if aipm_kw else None
+    db = PandaDB(cfg)
+    db.register_extractor("face", extractor or feature_hash_extractor(dim=32))
+    db.register_extractor("animal", label_extractor(["cat", "dog", "bird"]))
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        db.graph.create_node("Pet", name=f"pet_{i}", idx=float(i),
+                             photo=rng.bytes(256))
+    return db
+
+
+# ---------------------------------------------------------------------------
+# overlap correctness
+# ---------------------------------------------------------------------------
+
+
+def test_async_results_identical_to_sync():
+    """Same rows, same order, for a structured+semantic mix (fixed seed)."""
+    db = make_pet_db(60)
+    text = ("MATCH (p:Pet) WHERE p.idx < 40 "
+            "AND p.photo->animal = 'cat' RETURN p.name")
+    sync_rows = db.session(batch_rows=8, prefetch_depth=0).run(text).fetchall()
+    db.cache.clear()
+    async_rows = db.session(batch_rows=8, prefetch_depth=3).run(text).fetchall()
+    assert async_rows == sync_rows
+    assert len(sync_rows) > 0
+
+
+def test_async_identical_with_similarity_and_limit():
+    db = make_pet_db(40)
+    text = ("MATCH (p:Pet) WHERE p.photo->face ~: p.photo->face "
+            "RETURN p.name LIMIT 11")
+    sync_rows = db.session(batch_rows=4, prefetch_depth=0).run(text).fetchall()
+    db.cache.clear()
+    async_rows = db.session(batch_rows=4, prefetch_depth=2).run(text).fetchall()
+    assert async_rows == sync_rows
+    assert len(async_rows) == 11
+
+
+def test_prefetch_skipped_when_index_covers():
+    """A matching scalar index makes pushdown moot φ work: no prefetch."""
+    db = make_pet_db(30)
+    db.build_scalar_index("animal", "photo")
+    db.cache.clear()
+    s = db.session(batch_rows=8, prefetch_depth=4)
+    cur = s.run("MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name")
+    cur.fetchall()
+    assert cur.context.index_hits >= 1
+    assert cur.context.extract_count == 0
+
+
+def test_prefetch_depth_defaults_from_config():
+    db = make_pet_db(4, prefetch_depth=5)
+    from repro.core.executor import ExecutionContext
+    assert ExecutionContext(db).prefetch_depth == 5
+    assert ExecutionContext(db, prefetch_depth=0).prefetch_depth == 0
+    assert db.session(prefetch_depth=1)._closed is False
+
+
+# ---------------------------------------------------------------------------
+# in-flight dedup across sessions
+# ---------------------------------------------------------------------------
+
+
+def test_inflight_dedup_across_two_sessions():
+    """Two sessions needing the same φ values produce ONE extraction each."""
+    gate = Gate()
+    db = make_pet_db(20, extractor=gate.wrap(feature_hash_extractor(dim=16)))
+    spec = db.registry.get("face")
+    text = "MATCH (p:Pet) WHERE p.photo->face ~: p.photo->face RETURN p.name"
+    out = {}
+
+    def client(name):
+        out[name] = db.session(prefetch_depth=2).run(text).fetchall()
+
+    ta = threading.Thread(target=client, args=("a",))
+    ta.start()
+    # session A has claimed every blob and its batch is on a worker
+    assert gate.entered.wait(5)
+    assert db.inflight.size() > 0
+    tb = threading.Thread(target=client, args=("b",))
+    tb.start()
+    # hold the gate until B has demonstrably reached the claim point and
+    # borrowed A's in-flight futures (a fixed sleep would be timing-flaky)
+    assert wait_until(lambda: db.inflight.dedup_hits > 0)
+    gate.release.set()
+    ta.join(10)
+    tb.join(10)
+    assert out["a"] == out["b"] and len(out["a"]) == 20
+    assert spec.rows == 20, "each blob extracted exactly once across sessions"
+    assert db.inflight.dedup_hits >= 1
+    assert db.inflight.size() == 0
+
+
+def test_inflight_table_claim_borrow_resolve():
+    t = InflightTable()
+    owned, borrowed = t.claim([(1, "face", 1), (2, "face", 1)])
+    assert len(owned) == 2 and not borrowed
+    owned2, borrowed2 = t.claim([(1, "face", 1), (3, "face", 1)])
+    assert [k for k, _ in owned2] == [(3, "face", 1)]
+    assert set(borrowed2) == {(1, "face", 1)}
+    assert t.dedup_hits == 1
+    t.resolve((1, "face", 1), "v")
+    assert borrowed2[(1, "face", 1)].result(1) == "v"
+    # resolved keys leave the table; a new claim re-owns them
+    owned3, borrowed3 = t.claim([(1, "face", 1)])
+    assert len(owned3) == 1 and not borrowed3
+    for key in [(1, "face", 1), (2, "face", 1), (3, "face", 1)]:
+        t.discard(key)
+    assert t.size() == 0
+
+
+def test_borrower_recovers_from_owner_cancellation():
+    t = InflightTable()
+    owned, _ = t.claim([(7, "face", 1)])
+    key, _fut = owned[0]
+    _, borrowed = t.claim([(7, "face", 1)])
+    t.discard(key)           # owner bails (LIMIT early exit)
+    with pytest.raises(Exception):
+        borrowed[key].result(1)
+    assert t.size() == 0     # nothing orphaned; borrower re-extracts
+
+
+# ---------------------------------------------------------------------------
+# cancellation on LIMIT early exit
+# ---------------------------------------------------------------------------
+
+
+def test_limit_early_exit_leaves_no_orphaned_futures():
+    db = make_pet_db(64, extractor=latency_extractor(16, 0.03))
+    s = db.session(batch_rows=8, prefetch_depth=3)
+    cur = s.run("MATCH (p:Pet) WHERE p.photo->face ~: p.photo->face "
+                "RETURN p.name LIMIT 2")
+    assert len(cur.fetchall()) == 2
+    cur.close()
+    # in-flight table and AIPM queue must fully drain: every claimed key was
+    # resolved (worker finished it) or discarded (request cancelled in queue)
+    assert wait_until(lambda: db.inflight.size() == 0
+                      and db.aipm.pending() == 0), \
+        f"orphans: inflight={db.inflight.size()} queued={db.aipm.pending()}"
+    # only the prefetch window was ever dispatched, not the whole scan
+    assert cur.context.extract_count <= 3 * 8 < db.graph.n_nodes
+    assert db.registry.get("face").rows <= cur.context.extract_count
+
+
+def test_aipm_cancel_skips_queued_request():
+    gate = Gate()
+    r = ModelRegistry()
+    spec = r.register("face", gate.wrap(feature_hash_extractor(8)))
+    svc = AIPMService(r, AIPMConfig(max_inflight=4, workers=1))
+    try:
+        items = [(0, np.zeros(8, np.uint8))]
+        f1 = svc.submit("face", items)
+        assert gate.entered.wait(5)          # worker busy on f1
+        f2 = svc.submit("face", [(1, np.ones(8, np.uint8))])
+        assert f2.cancel()                   # still queued -> cancellable
+        gate.release.set()
+        assert set(f1.result(5)) == {0}
+        assert wait_until(lambda: svc.cancelled_requests == 1)
+        assert f2.cancelled()
+        assert spec.calls == 1               # φ never ran for the cancelled one
+    finally:
+        gate.release.set()
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_bounds_queue_memory():
+    gate = Gate()
+    r = ModelRegistry()
+    r.register("face", gate.wrap(feature_hash_extractor(8)))
+    svc = AIPMService(r, AIPMConfig(max_inflight=2, workers=1,
+                                    timeout_ms=200))
+    try:
+        futs = [svc.submit("face", [(0, np.zeros(8, np.uint8))])]
+        assert gate.entered.wait(5)          # worker occupied
+        for i in (1, 2):                     # queue fills to max_inflight
+            futs.append(svc.submit("face", [(i, np.zeros(8, np.uint8))]))
+        assert svc.pending() == 2
+        with pytest.raises(queue_mod.Full):  # submit blocks, then refuses
+            svc.submit("face", [(9, np.zeros(8, np.uint8))])
+        gate.release.set()
+        for f in futs:
+            assert f.result(5)
+        assert wait_until(lambda: svc.pending() == 0)
+    finally:
+        gate.release.set()
+        svc.shutdown()
+
+
+def test_failed_extraction_propagates_and_clears_inflight():
+    def boom(raws):
+        raise RuntimeError("model service down")
+
+    db = make_pet_db(12)
+    db.register_extractor("face", boom)
+    s = db.session(batch_rows=4, prefetch_depth=2)
+    with pytest.raises(RuntimeError, match="model service down"):
+        s.run("MATCH (p:Pet) WHERE p.photo->face ~: p.photo->face "
+              "RETURN p.name").fetchall()
+    assert wait_until(lambda: db.inflight.size() == 0)

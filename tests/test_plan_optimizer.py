@@ -119,3 +119,106 @@ def test_speed_statistics_ewma():
     assert s.speeds["semantic_filter:face"] == pytest.approx(0.3)
     s.record("semantic_filter:face", total_time=10.0, n_rows=100)  # 0.1 s/row
     assert 0.1 < s.speeds["semantic_filter:face"] < 0.3
+
+
+# ---------------------------------------------------------------------------
+# extractor avg_speed feedback (PR 2: async AIPM pipeline)
+# ---------------------------------------------------------------------------
+
+
+def _registry_with_observed(sub_key, rows, total_time):
+    from repro.core.aipm import ModelRegistry, label_extractor
+    registry = ModelRegistry()
+    spec = registry.register(sub_key, label_extractor(["cat", "dog"]))
+    spec.rows = rows
+    spec.total_time = total_time
+    return registry, spec
+
+
+def test_observed_avg_speed_places_semantic_after_structured():
+    """avg_speed from the AIPM registry says φ is slow -> the semantic
+    predicate lands above the cheap structured filter and the expand."""
+    registry, spec = _registry_with_observed("animal", 100, 100.0)  # 1 s/row
+    assert spec.avg_speed == pytest.approx(1.0)
+    stats = StatisticsService()
+    stats.n_nodes = 1000
+    stats.label_counts = {"Person": 500, "Pet": 100}
+    stats.avg_degree = 3.0
+    stats.speeds["filter"] = 1e-7
+    stats.structured_selectivity = 0.01
+    epoch0 = stats.epoch
+    stats.refresh_extractor_stats(registry)
+    assert stats.speeds["semantic_filter:animal"] == pytest.approx(1.0)
+    assert stats.epoch > epoch0          # first sight of this serial
+    plan = optimize(_qg(Q2), stats)
+    sem = [o for o in _ops(plan) if isinstance(o, lp.SemanticFilter)]
+    assert len(sem) == 1
+    child_ops = _ops(sem[0].child)
+    assert any(isinstance(o, lp.Filter) for o in child_ops), \
+        f"semantic filter ran before structured work:\n{plan.describe()}"
+    assert any(isinstance(o, lp.Expand) for o in child_ops)
+    # refresh with nothing changed keeps the epoch (and cached plans) stable
+    e = stats.epoch
+    stats.refresh_extractor_stats(registry)
+    assert stats.epoch == e
+
+
+def test_executor_ewma_not_clobbered_by_registry_refresh():
+    """Once the executor has measured the filter (cache hits, pushdown), the
+    registry's raw φ speed must not overwrite that EWMA."""
+    registry, _spec = _registry_with_observed("animal", 10, 10.0)
+    stats = StatisticsService()
+    stats.speeds["semantic_filter:animal"] = 5e-7   # learned: cache-hot
+    stats.refresh_extractor_stats(registry)
+    assert stats.speeds["semantic_filter:animal"] == pytest.approx(5e-7)
+
+
+def test_refresh_bumps_epoch_on_serial_change():
+    from repro.core.aipm import ModelRegistry, label_extractor
+    registry = ModelRegistry()
+    registry.register("animal", label_extractor(["cat"]))
+    stats = StatisticsService()
+    stats.refresh_extractor_stats(registry)
+    e = stats.epoch
+    stats.refresh_extractor_stats(registry)
+    assert stats.epoch == e              # no change, no bump
+    registry.register("animal", label_extractor(["cat"], seed=9))  # serial 2
+    stats.refresh_extractor_stats(registry)
+    assert stats.epoch == e + 1
+
+
+def test_plan_cache_invalidates_on_extractor_serial_bump():
+    """db-level: a model update (serial bump) re-plans the query instead of
+    reusing the stale cached plan."""
+    import numpy as np
+    from repro.core import PandaDB
+    from repro.core.aipm import label_extractor
+    db = PandaDB()
+    db.register_extractor("animal", label_extractor(["cat", "dog"]))
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(64))
+    s = db.session()
+    text = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    s.run(text).fetchall()      # plan + first φ measurement (epoch settles)
+    s.run(text).fetchall()
+    stats0 = db.plan_cache.stats()
+    s.run(text).fetchall()
+    stats1 = db.plan_cache.stats()
+    assert stats1["hits"] == stats0["hits"] + 1
+    assert stats1["misses"] == stats0["misses"]
+    db.register_extractor("animal", label_extractor(["cat", "dog"], seed=9))
+    s.run(text).fetchall()      # serial bump -> new epoch -> new cache key
+    stats2 = db.plan_cache.stats()
+    assert stats2["misses"] == stats1["misses"] + 1
+
+
+def test_suggest_phi_batch_scales_with_speed():
+    from repro.core.cost_model import suggest_phi_batch
+    # no observation yet: keep the registered default
+    assert suggest_phi_batch(0.0, 64, 256, 0.05) == 64
+    # slow extractor: small slices bound per-call latency
+    assert suggest_phi_batch(0.05, 64, 256, 0.05) == 1
+    # fast extractor: amortize dispatch, clamped at the protocol max
+    assert suggest_phi_batch(1e-6, 64, 256, 0.05) == 256
+    assert suggest_phi_batch(1e-3, 64, 256, 0.05) == 50

@@ -161,6 +161,72 @@ def test_compression_error_feedback_unbiased(seed):
     assert resid < 1e-4
 
 
+# -- $param binding + plan-cache skeleton keys (PR 2) -------------------------------
+
+_PARAM_DB = None
+
+
+def _param_db():
+    """Lazily built tiny db shared across hypothesis examples."""
+    global _PARAM_DB
+    if _PARAM_DB is None:
+        from repro.core import PandaDB
+        db = PandaDB()
+        for i in range(20):
+            db.graph.create_node("Item", name=f"item_{i}", x=float(i))
+        _PARAM_DB = db
+    return _PARAM_DB
+
+
+_SAFE_STR = st.text(
+    alphabet=st.characters(whitelist_categories=("Ll", "Lu", "Nd"),
+                           max_codepoint=127),
+    min_size=0, max_size=8)
+
+
+@settings(**SETTINGS)
+@given(v=st.one_of(st.integers(-10**6, 10**6),
+                   st.floats(min_value=0, max_value=1e6, allow_nan=False),
+                   _SAFE_STR, st.booleans()))
+def test_param_render_roundtrip(v):
+    """Any scalar render_scalar claims to represent faithfully must re-parse
+    to an equal literal (WAL replay = bind-time execution)."""
+    from repro.core.cypherplus import Literal, parse_query
+    from repro.core.session import render_scalar
+    r = render_scalar(v)
+    if r is None:
+        return          # unrepresentable values keep their placeholder
+    q = parse_query(f"MATCH (n:Item) WHERE n.x = {r} RETURN n.x")
+    lit = q.where.right
+    assert isinstance(lit, Literal)
+    if isinstance(v, bool):
+        assert lit.value is v
+    elif isinstance(v, (int, float)):
+        assert float(lit.value) == pytest.approx(float(v))
+    else:
+        assert lit.value == v
+
+
+@settings(**SETTINGS)
+@given(vals=st.lists(st.integers(0, 50), min_size=1, max_size=4),
+       pad=st.integers(1, 4))
+def test_same_skeleton_different_bindings_share_one_plan(vals, pad):
+    """Whitespace variants of a $param query collapse to one skeleton, one
+    plan-cache entry serves every binding, and each binding still filters
+    correctly (late binding, not plan-time substitution)."""
+    from repro.core.session import skeleton_of
+    db = _param_db()
+    base = "MATCH (n:Item) WHERE n.x < $lim RETURN n.name"
+    spaced = base.replace(" ", " " * pad)
+    assert skeleton_of(spaced) == skeleton_of(base)
+    s = db.session()
+    size0 = db.plan_cache.stats()["size"]
+    for v in vals:
+        rows = s.run(spaced, lim=v).fetchall()
+        assert len(rows) == min(v, 20)      # binding applied per execution
+    assert db.plan_cache.stats()["size"] - size0 <= 1
+
+
 # -- merge_topk: permutation invariance -------------------------------------------------
 
 @settings(**SETTINGS)
