@@ -19,6 +19,7 @@ SUITES = {
     "fig10": "benchmarks.bench_optimizer",
     "fig11": "benchmarks.bench_index_recall",
     "fig12": "benchmarks.bench_index_perf",
+    "index_knn": "benchmarks.bench_index_perf",
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.roofline",
 }
@@ -28,11 +29,15 @@ def main() -> None:
     wanted = sys.argv[1:] or list(SUITES)
     header()
     failures = []
+    ran = set()
     for key in wanted:
         mod_name = SUITES.get(key)
         if mod_name is None:
             print(f"unknown suite {key!r}; known: {sorted(SUITES)}")
             continue
+        if mod_name in ran:     # aliases (fig12 / index_knn) run once
+            continue
+        ran.add(mod_name)
         try:
             mod = __import__(mod_name, fromlist=["run"])
             mod.run()

@@ -15,6 +15,11 @@ class VectorIndexConfig:
     min_buckets: int = 4
     nprobe: int = 8               # buckets scanned per query
     kmeans_iters: int = 8         # batch-build refinement steps
+    block_n: int = 512            # ivf_scan kernel tile; gathered corpora are
+    #                               padded to a multiple for stable shapes
+    pending_compact_frac: float = 0.1   # compact append buffers once pending
+    #                                     rows exceed this fraction of N
+    pending_compact_min: int = 1024     # ... but never before this many
 
 
 @dataclass(frozen=True)
@@ -55,6 +60,8 @@ class CostModelConfig:
     ewma_alpha: float = 0.3
     default_structured_speed: float = 1e-7   # s/row prior
     default_semantic_speed: float = 0.3      # s/row prior (paper: 0.3s/face)
+    default_knn_scan_speed: float = 2e-9     # s per corpus row scanned (prior;
+    #                                          replaced by observed throughput)
 
 
 @dataclass(frozen=True)

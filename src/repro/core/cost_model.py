@@ -77,6 +77,55 @@ class StatisticsService:
             return 3 * self.cfg.default_structured_speed
         return self.cfg.default_structured_speed
 
+    # -- kNN scan throughput (index pushdown) ----------------------------------
+
+    _KNN_KEY = "knn_scan"
+
+    def record_knn_scan(self, total_time: float, rows_scanned: int) -> None:
+        """Observed index-scan throughput (s per corpus row x query), EWMA'd
+        like any operator speed.  The first real measurement replaces the
+        config prior and bumps the epoch so cached plans re-optimize with
+        the truth -- same contract as the semantic-filter speeds."""
+        if rows_scanned <= 0:
+            return
+        speed = total_time / rows_scanned
+        a = self.cfg.ewma_alpha
+        old = self.speeds.get(self._KNN_KEY)
+        if old is None:
+            self.epoch += 1
+        self.speeds[self._KNN_KEY] = (speed if old is None
+                                      else a * speed + (1 - a) * old)
+        self.counts[self._KNN_KEY] = \
+            self.counts.get(self._KNN_KEY, 0) + rows_scanned
+
+    def knn_scan_speed(self) -> float:
+        return self.speeds.get(self._KNN_KEY, self.cfg.default_knn_scan_speed)
+
+    def knn_cost(self, n_total: int, m: int, nprobe: int, q: int = 1) -> float:
+        """Estimated cost of a kNN over ``q`` queries: centroid probe
+        (m rows) + exact scan of the probed fraction (nprobe/m of the
+        corpus), both priced at the observed scan throughput."""
+        nprobe = min(max(1, nprobe), max(1, m))
+        probed = n_total * nprobe / max(1, m)
+        return self.knn_scan_speed() * q * (m + probed)
+
+    def choose_knn_nprobe(self, index, q: int = 1) -> int:
+        """Pick exact scan vs IVF probe for this query batch: when probing
+        ``cfg.nprobe`` buckets is estimated no cheaper than scanning the
+        whole corpus (small index, nprobe ~ m), probe every bucket -- the
+        batched path then degenerates to one exact fused scan and recall is
+        free.  Otherwise keep the configured probe width."""
+        m = index.centroids.shape[0]
+        nprobe = min(index.cfg.nprobe, m)
+        cost_ivf = self.knn_cost(index.n_total, m, nprobe, q)
+        cost_exact = self.knn_cost(index.n_total, m, m, q)
+        return m if cost_exact <= cost_ivf else nprobe
+
+    def note_index_rebuild(self, sub_key: str) -> None:
+        """A (re)built index changes which plans are optimal (pushdown
+        becomes available / index stats change): invalidate cached plans."""
+        self.epoch += 1
+
     def refresh_extractor_stats(self, registry) -> None:
         """Fold the AIPM registry's observed per-extractor ``avg_speed`` into
         the semantic-filter speed table and track model serials.

@@ -109,6 +109,9 @@ class PandaDB:
                                        kmeans_iters=self.cfg.index.kmeans_iters)
         index = IVFIndex.build(vecs, ids=blob_ids, cfg=cfg, serial=serial)
         self.indexes[sub_key] = index
+        # a fresh index changes which plans are optimal (pushdown becomes
+        # available): bump the stats epoch so the plan cache re-optimizes
+        self.stats.note_index_rebuild(sub_key)
         return index
 
     def build_scalar_index(self, sub_key: str, prop_key: str):

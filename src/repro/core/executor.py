@@ -79,6 +79,8 @@ class ExecutionContext:
         self.params: Dict[str, Any] = dict(params or {})
         self.extract_count = 0      # φ items dispatched by *this* execution
         self.dedup_borrows = 0      # φ items shared with another execution
+        self.phi_coalesced = 0      # chunks whose φ rode a merged AIPM request
+        self.row_limit: Optional[int] = None   # root LIMIT (set by execute_iter)
         self.index_hits = 0
         self.scan_rows = 0          # rows emitted by leaf scans (LIMIT proof)
         self._pushdown_memo: Dict[int, Any] = {}   # plan id -> index matches
@@ -472,13 +474,18 @@ def _iter_bindings(plan: lp.PlanOp, ctx: ExecutionContext,
         yield {k: v[i:i + batch_rows] for k, v in bindings.items()}
 
 
-def _index_may_cover(plan: lp.SemanticFilter, ctx: ExecutionContext) -> bool:
-    """Cheap static check: could index pushdown replace extraction for this
-    filter?  Conservative (a True that later falls through to φ just loses
-    prefetch); used to avoid dispatching φ work an index would make moot."""
+def _pushdown_covered(plan: lp.SemanticFilter,
+                      ctx: ExecutionContext) -> List[SubProp]:
+    """Cheap static check: which per-row extractions would index pushdown
+    make moot for this filter?  Returns the covered SubProp expressions --
+    prefetch skips exactly these and still dispatches φ for the rest (e.g.
+    the query side of a var-var similarity whose other side is indexed).
+    Conservative: a covered entry that later falls through just loses
+    prefetch."""
     pred = plan.predicate
     if not isinstance(pred, Compare):
-        return False
+        return []
+    covered: List[SubProp] = []
     for side in (pred.left, pred.right):
         if not (isinstance(side, SubProp) and isinstance(side.base, Prop)):
             continue
@@ -490,8 +497,10 @@ def _index_may_cover(plan: lp.SemanticFilter, ctx: ExecutionContext) -> bool:
             index = None
         if index is not None and \
                 index.serial == ctx.registry.serial(side.sub_key):
-            return True
-    return False
+            covered.append(side)
+            break   # one indexed side carries the pushdown; the other
+            #         side (if any) still needs its φ extracted
+    return covered
 
 
 def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
@@ -506,9 +515,13 @@ def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
     the generator (``LIMIT`` early exit, cursor close) cancels every φ batch
     not yet picked up by a worker."""
     depth = ctx.prefetch_depth
-    # dedupe: `x ~: x` style predicates name the same extraction twice
+    # dedupe: `x ~: x` style predicates name the same extraction twice;
+    # skip extractions an index pushdown will cover (the rest -- e.g. the
+    # query side of a var-var similarity -- still prefetch normally)
     subprops = list(dict.fromkeys(_collect_subprops(plan.predicate)))
-    if depth <= 0 or not subprops or _index_may_cover(plan, ctx):
+    covered = _pushdown_covered(plan, ctx)
+    subprops = [sp for sp in subprops if sp not in covered]
+    if depth <= 0 or not subprops:
         for chunk in _iter_bindings(plan.child, ctx, batch_rows):
             out = _apply_filter(plan, chunk, ctx)
             if _rows(out):
@@ -517,20 +530,49 @@ def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
     child_it = _iter_bindings(plan.child, ctx, batch_rows)
     pending: "deque[Tuple[Bindings, List[PhiBatch]]]" = deque()
     exhausted = False
+
+    def dispatch(chunks: List[Bindings]) -> None:
+        """φ for a window refill.  When the AIPM queue is idle and several
+        chunks arrived together, their blob ids merge into ONE request per
+        sub-property (cross-chunk coalescing: fewer, larger model-service
+        calls); the shared handle is joinable/cancellable from every chunk.
+        Otherwise each chunk dispatches its own batch as before.  A root
+        ``LIMIT`` disables coalescing: a merged request is picked up whole
+        by the first free worker, which would defeat early-exit
+        cancellation exactly where it matters."""
+        if len(chunks) > 1 and ctx.row_limit is None \
+                and ctx.aipm.pending() == 0:
+            handles = []
+            for sp in subprops:
+                bids = np.concatenate(
+                    [_blob_ids_for(sp.base, c, ctx) for c in chunks])
+                h = _begin_extraction(ctx, sp.sub_key, bids)
+                if h is not None:
+                    handles.append(h)
+            ctx.phi_coalesced += len(chunks)
+            for chunk in chunks:
+                pending.append((chunk, list(handles)))
+            return
+        for chunk in chunks:
+            handles = []
+            for sp in subprops:
+                h = _begin_extraction(ctx, sp.sub_key,
+                                      _blob_ids_for(sp.base, chunk, ctx))
+                if h is not None:
+                    handles.append(h)
+            pending.append((chunk, handles))
+
     try:
         while True:
-            while not exhausted and len(pending) < depth:
+            fresh: List[Bindings] = []
+            while not exhausted and len(pending) + len(fresh) < depth:
                 chunk = next(child_it, None)
                 if chunk is None:
                     exhausted = True
                     break
-                handles = []
-                for sp in subprops:
-                    h = _begin_extraction(ctx, sp.sub_key,
-                                          _blob_ids_for(sp.base, chunk, ctx))
-                    if h is not None:
-                        handles.append(h)
-                pending.append((chunk, handles))
+                fresh.append(chunk)
+            if fresh:
+                dispatch(fresh)
             if not pending:
                 return
             chunk, handles = pending.popleft()
@@ -560,6 +602,7 @@ def execute_iter(plan: lp.PlanOp, ctx: ExecutionContext,
     if isinstance(plan, lp.Limit):
         limit = _resolve_limit(plan.n, ctx)
         plan = plan.child
+    ctx.row_limit = limit
     proj: Optional[lp.Projection] = None
     if isinstance(plan, lp.Projection):
         proj, plan = plan, plan.child
@@ -818,17 +861,19 @@ def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
 
     lk, le = side_info(pred.left)
     rk, re_ = side_info(pred.right)
+    if pred.op == "::":
+        return None  # raw similarity values requested; cannot prefilter
     if lk == "var" and rk == "query":
         var_expr, query_expr = le, re_
     elif rk == "var" and lk == "query":
         var_expr, query_expr = re_, le
+    elif lk == "var" and rk == "var":
+        return _try_var_var_pushdown(plan, le, re_, child, ctx)
     else:
         return None
     index = ctx.db.indexes.get(var_expr.sub_key)
     if index is None or index.serial != ctx.registry.serial(var_expr.sub_key):
         return None
-    if pred.op == "::":
-        return None  # raw similarity values requested; cannot prefilter
     # extract the query vector (1 item), search the index; memoized per plan
     # node so the streaming driver searches once, not once per chunk
     if id(plan) in ctx._pushdown_memo:
@@ -836,17 +881,7 @@ def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
     else:
         qvec = eval_subprop(query_expr, {v: a[:1] for v, a in child.items()}, ctx)
         qvec = np.asarray(qvec, np.float32).reshape(1, -1)
-        # size k from the whole graph, not the current chunk (the streaming
-        # driver hands this 256-row chunks); if every returned neighbor
-        # passes the threshold the match set may be truncated, so expand k
-        # until the tail falls below the threshold or the index is exhausted
-        k = min(max(64, ctx.graph.n_nodes // 10 + 1), len(index.ids))
-        while True:
-            vals, ids = index.search(qvec, k)
-            sim_ok = ids[0][vals[0] >= _index_threshold(index)]
-            if len(sim_ok) < k or k >= len(index.ids):
-                break
-            k = min(2 * k, len(index.ids))
+        sim_ok = _index_matches(index, qvec, ctx)[0]
         ctx._pushdown_memo[id(plan)] = sim_ok
         ctx.index_hits += 1
     # index returns *blob ids*; map rows whose blob id matched
@@ -854,6 +889,72 @@ def _try_index_pushdown(plan: lp.SemanticFilter, child: Bindings,
     blob_vals = np.asarray(col.values, np.int64)[child[var_expr.base.var]]
     keep = np.isin(blob_vals, sim_ok)
     return {kk: vv[keep] for kk, vv in child.items()}
+
+
+def _index_matches(index, qvecs: np.ndarray,
+                   ctx: ExecutionContext) -> List[np.ndarray]:
+    """Above-threshold blob ids for every query row, via ONE batched
+    ``search_many`` per round.  k is sized from the whole graph, not the
+    current chunk; if any query's matches saturate k the whole batch
+    re-searches with doubled k until every tail falls below the threshold or
+    the index is exhausted.  Probe width (exact scan vs IVF probe) comes
+    from the cost model, and observed scan throughput flows back into it."""
+    thr = _index_threshold(index)
+    n_index = index.n_total
+    nprobe = ctx.stats.choose_knn_nprobe(index, q=qvecs.shape[0])
+    k = min(max(64, ctx.graph.n_nodes // 10 + 1), n_index)
+    while True:
+        vals, ids = index.search_many(qvecs, k, nprobe=nprobe,
+                                      stats=ctx.stats)
+        ok = vals >= thr
+        if int(ok.sum(axis=1).max(initial=0)) < k or k >= n_index:
+            break
+        k = min(2 * k, n_index)
+    return [ids[i][ok[i]] for i in range(qvecs.shape[0])]
+
+
+def _try_var_var_pushdown(plan: lp.SemanticFilter, le: SubProp, re_: SubProp,
+                          child: Bindings,
+                          ctx: ExecutionContext) -> Optional[Bindings]:
+    """Similarity between two bound variables' sub-properties, one of which
+    is indexed: extract φ only for the *query* side (deduped by blob id),
+    run ONE batched ``search_many`` over the chunk's distinct query vectors,
+    and keep rows whose indexed-side blob lands in its query's
+    above-threshold neighbor set.  Replaces per-row extraction of the
+    indexed side with index scans (paper §VI-B2 pushdown, batched)."""
+    n = _rows(child)
+    idx_expr = query_expr = None
+    for a, b in ((le, re_), (re_, le)):
+        cand = ctx.db.indexes.get(a.sub_key)
+        if cand is not None and cand.serial == ctx.registry.serial(a.sub_key):
+            index, idx_expr, query_expr = cand, a, b
+            break
+    if idx_expr is None:
+        return None
+    try:
+        corp_bids = _blob_ids_for(idx_expr.base, child, ctx)
+        q_bids = _blob_ids_for(query_expr.base, child, ctx)
+    except TypeError:
+        return None
+    ctx.index_hits += 1
+    # self-similarity (`x ~: x`): sim(φ, φ) = 1 -- rows with a blob pass
+    if idx_expr == query_expr:
+        keep = corp_bids >= 0
+        return {k: v[keep] for k, v in child.items()}
+    keep = np.zeros(n, bool)
+    valid = (q_bids >= 0) & (corp_bids >= 0)
+    uniq, rep, inv = np.unique(q_bids, return_index=True, return_inverse=True)
+    live = uniq >= 0
+    if live.any():
+        rep_rows = {k: v[rep[live]] for k, v in child.items()}
+        qvecs = np.asarray(eval_subprop(query_expr, rep_rows, ctx),
+                           np.float32).reshape(int(live.sum()), -1)
+        matches = _index_matches(index, qvecs, ctx)
+        for u, match in zip(np.nonzero(live)[0], matches):
+            sel = (inv == u) & valid
+            if sel.any():
+                keep[sel] = np.isin(corp_bids[sel], match)
+    return {k: v[keep] for k, v in child.items()}
 
 
 def _try_scalar_pushdown(plan: lp.SemanticFilter, pred: Compare,

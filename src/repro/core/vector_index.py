@@ -2,9 +2,15 @@
 
 BatchIndexing: m = |S| / 100_000 buckets (empirical value from the paper),
 random core vectors refined by a few k-means iterations, every vector
-assigned to its nearest core.  DynamicIndexing: new vectors appended to the
-nearest bucket.  kNN: score the ``nprobe`` nearest buckets, exact scan inside
-(the Pallas ``ivf_scan`` kernel on TPU; fused jnp on the XLA path).
+assigned to its nearest core.  DynamicIndexing: new vectors land in
+per-bucket append buffers (amortized O(1) per insert) and are folded into
+the sorted bucket layout by a deferred compaction pass; searches always see
+the uncompacted rows.  kNN: queries are batched -- one centroid probe for
+the whole query set, then queries sharing a probe signature are scanned
+together through ``kernels.ivf_scan.ops.ivf_scan_topk`` (the Pallas kernel
+on TPU, the fused XLA oracle elsewhere) over a gathered, block-padded
+corpus, followed by the ``merge_topk``-shaped epilogue inside the kernel
+dispatch.  There is no per-query Python loop.
 
 Distributed layout (paper §VII-A: property data sharded): centroids are
 replicated, bucket contents are sharded over the ``data`` axis; a query does
@@ -14,6 +20,7 @@ a local scan per shard + per-shard top-k + a tiny all-gather merge --
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
@@ -23,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.pandadb import VectorIndexConfig
+from repro.kernels.ivf_scan.ops import ivf_scan_topk
 
 
 # ---------------------------------------------------------------------------
@@ -44,6 +52,22 @@ def pairwise_scores(q: jnp.ndarray, c: jnp.ndarray, metric: str) -> jnp.ndarray:
     return -(q2 - 2.0 * (q @ c.T) + c2[None, :])
 
 
+def _pairwise_scores_np(q: np.ndarray, c: np.ndarray, metric: str) -> np.ndarray:
+    """Host-side twin of :func:`pairwise_scores` for tiny shapes (insert's
+    centroid pick), where one device dispatch would dominate the work."""
+    q = np.asarray(q, np.float32)
+    c = np.asarray(c, np.float32)
+    if metric == "ip":
+        return q @ c.T
+    if metric == "cosine":
+        qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        cn = c / np.maximum(np.linalg.norm(c, axis=-1, keepdims=True), 1e-9)
+        return qn @ cn.T
+    q2 = np.sum(q * q, axis=-1, keepdims=True)
+    c2 = np.sum(c * c, axis=-1)
+    return -(q2 - 2.0 * (q @ c.T) + c2[None, :])
+
+
 @partial(jax.jit, static_argnames=("k", "metric"))
 def scan_topk(q: jnp.ndarray, corpus: jnp.ndarray, ids: jnp.ndarray,
               k: int, metric: str = "l2") -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -53,9 +77,33 @@ def scan_topk(q: jnp.ndarray, corpus: jnp.ndarray, ids: jnp.ndarray,
     return vals, ids[idx]
 
 
+@partial(jax.jit, static_argnames=("k", "metric"))
+def masked_scan_topk(q: jnp.ndarray, corpus: jnp.ndarray,
+                     row_bucket: jnp.ndarray, probe_mask: jnp.ndarray,
+                     k: int, metric: str
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense probe scan: ONE fused [Q, N] score matmul with each query's
+    non-probed buckets masked to -inf before the top-k.
+
+    ``row_bucket[N]`` is each corpus row's bucket id (padding rows use an
+    out-of-range id), ``probe_mask[Q, m+1]`` is True at the buckets a query
+    probes (column m, the padding bucket, is always False).  Scans the whole
+    table, so it only wins when the batch's probe signatures are scattered
+    enough that per-signature gathers would touch >= the table anyway --
+    ``IVFIndex.search_many`` makes that call."""
+    s = pairwise_scores(q, corpus, metric)              # [Q, N]
+    s = jnp.where(probe_mask[:, row_bucket], s, -jnp.inf)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx
+
+
 def merge_topk(vals_parts: jnp.ndarray, ids_parts: jnp.ndarray, k: int
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Merge per-shard top-k: [P, Q, k] -> [Q, k] (associative)."""
+    """Merge per-shard top-k: [P, Q, k] -> [Q, k] (associative).
+
+    Padding entries (val=-inf, id=-1) sink to the tail of the merge; callers
+    that may hold fewer than ``k`` real candidates in total should truncate
+    or mask afterwards (see :func:`distributed_knn`)."""
     p, qn, kk = vals_parts.shape
     flat_v = jnp.transpose(vals_parts, (1, 0, 2)).reshape(qn, p * kk)
     flat_i = jnp.transpose(ids_parts, (1, 0, 2)).reshape(qn, p * kk)
@@ -68,7 +116,10 @@ def distributed_knn(q: jnp.ndarray, corpus_shards: List[jnp.ndarray],
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Reference collective schedule: local scan -> local top-k -> merge.
     (On a real mesh the shard loop is the data axis and the merge is one
-    all_gather of [k] pairs per shard; see distributed/collectives.py.)"""
+    all_gather of [k] pairs per shard; see distributed/collectives.py.)
+
+    The output is truncated to min(k, total rows), so the -1/-inf padding a
+    small shard contributes can never leak into caller-visible results."""
     parts_v, parts_i = [], []
     for shard, ids in zip(corpus_shards, id_shards):
         v, i = scan_topk(q, shard, ids, k, metric)
@@ -78,7 +129,11 @@ def distributed_knn(q: jnp.ndarray, corpus_shards: List[jnp.ndarray],
             i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
         parts_v.append(v)
         parts_i.append(i)
-    return merge_topk(jnp.stack(parts_v), jnp.stack(parts_i), k)
+    v, i = merge_topk(jnp.stack(parts_v), jnp.stack(parts_i), k)
+    total = sum(int(s.shape[0]) for s in corpus_shards)
+    if total < k:
+        v, i = v[:, :total], i[:, :total]
+    return v, i
 
 
 # ---------------------------------------------------------------------------
@@ -90,10 +145,25 @@ def distributed_knn(q: jnp.ndarray, corpus_shards: List[jnp.ndarray],
 class IVFIndex:
     cfg: VectorIndexConfig
     centroids: np.ndarray                 # [m, d]
-    bucket_of: np.ndarray                 # [N] bucket id per vector
-    vectors: np.ndarray                   # [N, d]
+    bucket_of: np.ndarray                 # [N] bucket id per vector (sorted)
+    vectors: np.ndarray                   # [N, d] compacted rows
     ids: np.ndarray                       # [N] external ids
     serial: int = 1                       # model serial this index was built for
+    # dynamic-insert append buffers (bucket -> uncompacted rows); searches
+    # always include these, compaction folds them into the sorted layout
+    _pend_vecs: Dict[int, List[np.ndarray]] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _pend_ids: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict, repr=False)
+    pending_count: int = 0
+    # observed scan throughput (feeds the cost model's kNN term)
+    scan_rows: int = 0
+    scan_time: float = 0.0
+
+    @property
+    def n_total(self) -> int:
+        """Indexed vectors, compacted + pending."""
+        return int(self.ids.shape[0]) + self.pending_count
 
     # -- Algorithm 2: BatchIndexing -------------------------------------------
 
@@ -128,16 +198,64 @@ class IVFIndex:
     # -- Algorithm 2: DynamicIndexing ------------------------------------------
 
     def insert(self, vec: np.ndarray, ext_id: int) -> int:
-        """PickBucket + append (dynamic build for newly added items)."""
-        scores = np.asarray(pairwise_scores(
-            jnp.asarray(vec[None], jnp.float32),
-            jnp.asarray(self.centroids), self.cfg.metric))[0]
+        """PickBucket + buffered append (dynamic build for new items).
+
+        Amortized O(1) array work per insert: the vector joins its bucket's
+        append buffer and the sorted layout is rebuilt only when the pending
+        set crosses the compaction threshold (``pending_compact_frac``)."""
+        vec = np.asarray(vec, np.float32)
+        scores = _pairwise_scores_np(vec[None], self.centroids,
+                                     self.cfg.metric)[0]
         b = int(scores.argmax())
-        pos = np.searchsorted(self.bucket_of, b, side="right")
-        self.bucket_of = np.insert(self.bucket_of, pos, b)
-        self.vectors = np.insert(self.vectors, pos, vec.astype(np.float32), axis=0)
-        self.ids = np.insert(self.ids, pos, ext_id)
+        self._pend_vecs.setdefault(b, []).append(vec)
+        self._pend_ids.setdefault(b, []).append(int(ext_id))
+        self.pending_count += 1
+        if self.pending_count >= self._compact_threshold():
+            self.compact()
         return b
+
+    def insert_many(self, vecs: np.ndarray, ext_ids: np.ndarray) -> np.ndarray:
+        """Batched DynamicIndexing: one centroid scoring for all vectors."""
+        vecs = np.asarray(vecs, np.float32)
+        assign = np.asarray(jnp.argmax(pairwise_scores(
+            jnp.asarray(vecs), jnp.asarray(self.centroids), self.cfg.metric),
+            axis=1))
+        for v, b, eid in zip(vecs, assign, np.asarray(ext_ids)):
+            b = int(b)
+            self._pend_vecs.setdefault(b, []).append(v)
+            self._pend_ids.setdefault(b, []).append(int(eid))
+        self.pending_count += len(vecs)
+        if self.pending_count >= self._compact_threshold():
+            self.compact()
+        return assign
+
+    def _compact_threshold(self) -> int:
+        return max(self.cfg.pending_compact_min,
+                   int(self.cfg.pending_compact_frac * len(self.ids)))
+
+    def compact(self) -> None:
+        """Fold append buffers into the sorted bucket layout (one stable
+        argsort over the concatenation; preserves ``bucket_slice``)."""
+        if not self.pending_count:
+            return
+        add_b: List[int] = []
+        add_v: List[np.ndarray] = []
+        add_i: List[int] = []
+        for b in sorted(self._pend_vecs):
+            add_b += [b] * len(self._pend_vecs[b])
+            add_v += self._pend_vecs[b]
+            add_i += self._pend_ids[b]
+        bucket_of = np.concatenate(
+            [self.bucket_of, np.asarray(add_b, self.bucket_of.dtype)])
+        order = np.argsort(bucket_of, kind="stable")
+        self.bucket_of = bucket_of[order]
+        self.vectors = np.concatenate(
+            [self.vectors, np.stack(add_v)])[order]
+        self.ids = np.concatenate(
+            [self.ids, np.asarray(add_i, self.ids.dtype)])[order]
+        self._pend_vecs.clear()
+        self._pend_ids.clear()
+        self.pending_count = 0
 
     # -- kNN search -------------------------------------------------------------
 
@@ -146,44 +264,172 @@ class IVFIndex:
         hi = int(np.searchsorted(self.bucket_of, b, side="right"))
         return lo, hi
 
+    def _gather_buckets(self, buckets: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Rows of the probed buckets, compacted slices + pending appends."""
+        if len(buckets) == self.centroids.shape[0]:
+            corpus, ids, _ = self._full_corpus()   # exact mode: no copy
+            return corpus, ids
+        segs = [self.bucket_slice(int(b)) for b in buckets]
+        rows = (np.concatenate([np.arange(lo, hi) for lo, hi in segs])
+                if segs else np.empty(0, np.int64))
+        corpus = self.vectors[rows]
+        ids = self.ids[rows]
+        pend_v: List[np.ndarray] = []
+        pend_i: List[int] = []
+        for b in buckets:
+            b = int(b)
+            if b in self._pend_vecs:
+                pend_v += self._pend_vecs[b]
+                pend_i += self._pend_ids[b]
+        if pend_v:
+            corpus = np.concatenate([corpus, np.stack(pend_v)])
+            ids = np.concatenate([ids, np.asarray(pend_i, ids.dtype)])
+        return corpus, ids
+
     def search(self, queries: np.ndarray, k: int,
                nprobe: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
-        """ANN search: probe `nprobe` nearest buckets, exact scan inside."""
-        nprobe = nprobe or self.cfg.nprobe
+        """ANN search: probe ``nprobe`` nearest buckets, exact scan inside.
+        Thin alias of :meth:`search_many` (the batched path is the only
+        path)."""
+        return self.search_many(queries, k, nprobe)
+
+    def search_many(self, queries: np.ndarray, k: int,
+                    nprobe: Optional[int] = None, stats=None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched two-phase kNN over the whole query set.
+
+        Phase 1: one centroid scoring + top-``nprobe`` for all queries.
+        Phase 2 picks the cheaper of two batched scan layouts:
+
+        * **signature groups** -- queries sharing a probe signature (the
+          same bucket set) scan together: their buckets are gathered once
+          into a corpus padded to a ``block_n`` multiple (stable shapes;
+          the kernel precondition) and dispatched through ``ivf_scan_topk``
+          (Pallas kernel on TPU, fused XLA scan elsewhere).  Wins when
+          queries cluster (few signatures) and always serves exact mode
+          (nprobe=m is one signature).
+        * **masked dense scan** -- when the signatures are so scattered
+          that per-signature gathers would touch at least the whole table
+          (#signatures x nprobe >= m), ONE fused scan of the full corpus
+          with each query's non-probed buckets masked to -inf
+          (:func:`masked_scan_topk`).  Same candidate sets, one device
+          call.
+
+        Positions with no candidate (probe set smaller than ``k``) hold
+        val=-inf / id=-1.  ``stats``, if given, receives the observed scan
+        throughput via ``record_knn_scan`` (cost-model feedback)."""
+        queries = np.asarray(queries, np.float32)
+        qn = queries.shape[0]
+        out_v = np.full((qn, k), -np.inf, np.float32)
+        out_i = np.full((qn, k), -1, np.int64)
+        if qn == 0 or self.n_total == 0:
+            return out_v, out_i
         m = self.centroids.shape[0]
-        nprobe = min(nprobe, m)
-        q = jnp.asarray(queries, jnp.float32)
-        cscores = pairwise_scores(q, jnp.asarray(self.centroids), self.cfg.metric)
+        nprobe = min(nprobe or self.cfg.nprobe, m)
+        q = jnp.asarray(queries)
+        cscores = pairwise_scores(q, jnp.asarray(self.centroids),
+                                  self.cfg.metric)
         _, probe = jax.lax.top_k(cscores, nprobe)          # [Q, nprobe]
-        probe = np.asarray(probe)
-        out_v = np.full((queries.shape[0], k), -np.inf, np.float32)
-        out_i = np.full((queries.shape[0], k), -1, np.int64)
-        # group queries by probe signature to batch device scans
-        for qi in range(queries.shape[0]):
-            segs = [self.bucket_slice(int(b)) for b in probe[qi]]
-            rows = np.concatenate([np.arange(lo, hi) for lo, hi in segs]) \
-                if segs else np.array([], np.int64)
-            if rows.size == 0:
-                continue
-            vals, ids = scan_topk(q[qi:qi + 1], jnp.asarray(self.vectors[rows]),
-                                  jnp.asarray(self.ids[rows]), k, self.cfg.metric)
-            kk = vals.shape[1]
-            out_v[qi, :kk] = np.asarray(vals)[0]
-            out_i[qi, :kk] = np.asarray(ids)[0]
+        # probe *signature* = the bucket set; sort so order never splits groups
+        probe = np.sort(np.asarray(probe), axis=1)
+        sigs, inverse = np.unique(probe, axis=0, return_inverse=True)
+        t0 = time.perf_counter()
+        if sigs.shape[0] > 1 and sigs.shape[0] * nprobe >= m:
+            rows_scanned = self._scan_dense(queries, probe, k,
+                                            out_v, out_i)
+        else:
+            rows_scanned = self._scan_groups(queries, sigs, inverse, k,
+                                             out_v, out_i)
+        dt = time.perf_counter() - t0
+        self.scan_rows += rows_scanned
+        self.scan_time += dt
+        if stats is not None and rows_scanned:
+            stats.record_knn_scan(dt, rows_scanned)
         return out_v, out_i
+
+    def _scan_groups(self, queries: np.ndarray, sigs: np.ndarray,
+                     inverse: np.ndarray, k: int,
+                     out_v: np.ndarray, out_i: np.ndarray) -> int:
+        """One fused gathered scan per distinct probe signature."""
+        rows_scanned = 0
+        for g in range(sigs.shape[0]):
+            qsel = np.nonzero(inverse == g)[0]
+            corpus, ids = self._gather_buckets(sigs[g])
+            n_real = corpus.shape[0]
+            if n_real == 0:
+                continue
+            k_eff = min(k, n_real)
+            pad = (-n_real) % self.cfg.block_n
+            if pad:
+                corpus = np.concatenate(
+                    [corpus, np.zeros((pad, corpus.shape[1]), np.float32)])
+            vals, idx = ivf_scan_topk(
+                jnp.asarray(queries[qsel]), jnp.asarray(corpus), k_eff,
+                metric=self.cfg.metric, block_n=self.cfg.block_n,
+                n_valid=n_real)
+            out_v[qsel[:, None], np.arange(k_eff)[None, :]] = np.asarray(vals)
+            out_i[qsel[:, None], np.arange(k_eff)[None, :]] = \
+                ids[np.asarray(idx)]
+            rows_scanned += n_real * len(qsel)
+        return rows_scanned
+
+    def _scan_dense(self, queries: np.ndarray, probe: np.ndarray, k: int,
+                    out_v: np.ndarray, out_i: np.ndarray) -> int:
+        """One masked scan of the full table for scattered probe batches."""
+        m = self.centroids.shape[0]
+        qn = queries.shape[0]
+        corpus, ids, row_bucket = self._full_corpus()
+        n_real = corpus.shape[0]
+        pad = (-n_real) % self.cfg.block_n
+        if pad:
+            corpus = np.concatenate(
+                [corpus, np.zeros((pad, corpus.shape[1]), np.float32)])
+            # padding rows live in bucket m, which no query ever probes
+            row_bucket = np.concatenate(
+                [row_bucket, np.full(pad, m, row_bucket.dtype)])
+        probe_mask = np.zeros((qn, m + 1), bool)
+        probe_mask[np.arange(qn)[:, None], probe] = True
+        k_eff = min(k, n_real)
+        vals, idx = masked_scan_topk(
+            jnp.asarray(queries), jnp.asarray(corpus),
+            jnp.asarray(row_bucket), jnp.asarray(probe_mask), k_eff,
+            self.cfg.metric)
+        vals = np.asarray(vals)
+        gids = ids[np.clip(np.asarray(idx), 0, n_real - 1)]
+        out_v[:, :k_eff] = vals
+        out_i[:, :k_eff] = np.where(np.isfinite(vals), gids, -1)
+        return qn * n_real
+
+    def _full_corpus(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(vectors, ids, bucket ids) over compacted + pending rows."""
+        if not self.pending_count:
+            return self.vectors, self.ids, self.bucket_of
+        pend_v: List[np.ndarray] = []
+        pend_i: List[int] = []
+        pend_b: List[int] = []
+        for b in sorted(self._pend_vecs):
+            pend_v += self._pend_vecs[b]
+            pend_i += self._pend_ids[b]
+            pend_b += [b] * len(self._pend_vecs[b])
+        return (np.concatenate([self.vectors, np.stack(pend_v)]),
+                np.concatenate([self.ids, np.asarray(pend_i, self.ids.dtype)]),
+                np.concatenate([self.bucket_of,
+                                np.asarray(pend_b, self.bucket_of.dtype)]))
 
     def search_exact(self, queries: np.ndarray, k: int
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """Brute-force ground truth (recall denominator)."""
-        v, i = scan_topk(jnp.asarray(queries, jnp.float32),
-                         jnp.asarray(self.vectors), jnp.asarray(self.ids),
-                         k, self.cfg.metric)
-        return np.asarray(v), np.asarray(i)
+        """Brute-force ground truth (recall denominator): the batched scan
+        with every bucket probed, truncated to the real candidate count."""
+        v, i = self.search_many(queries, k, nprobe=self.centroids.shape[0])
+        kk = min(k, self.n_total)
+        return v[:, :kk], i[:, :kk]
 
     def shard(self, n_shards: int) -> List["IVFIndex"]:
         """Split bucket contents round-robin across shards (distributed layout:
         centroids replicated, contents sharded)."""
+        self.compact()
         shards = []
         for s in range(n_shards):
             sel = (np.arange(len(self.ids)) % n_shards) == s
@@ -199,5 +445,5 @@ def recall_at_k(index: IVFIndex, queries: np.ndarray, k: int,
     _, exact = index.search_exact(queries, k)
     hits = 0
     for a, e in zip(approx, exact):
-        hits += len(set(a.tolist()) & set(e.tolist()))
+        hits += len(set(a.tolist()) & set(e.tolist()) - {-1})
     return hits / (queries.shape[0] * k)

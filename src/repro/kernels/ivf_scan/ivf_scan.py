@@ -24,7 +24,7 @@ NEG = -3.0e38
 
 
 def _ivf_kernel(q_ref, c_ref, c2_ref, vals_ref, idx_ref, *, metric: str,
-                topl: int, block_n: int):
+                topl: int, block_n: int, n_valid: int, n_total: int):
     qf = q_ref[...].astype(jnp.float32)            # [Q, d]
     cf = c_ref[...].astype(jnp.float32)            # [BN, d]
     s = jax.lax.dot_general(qf, cf, (((1,), (1,)), ((), ())),
@@ -35,6 +35,10 @@ def _ivf_kernel(q_ref, c_ref, c2_ref, vals_ref, idx_ref, *, metric: str,
     # tile-local top-L via repeated max-extract (vectorized, L small)
     base = pl.program_id(0) * block_n
     cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if n_valid < n_total:
+        # rows past n_valid are padding (corpus padded up to a block_n
+        # multiple by the dispatcher): mask them out of every sweep
+        s = jnp.where(cols + base >= n_valid, NEG, s)
     for l in range(topl):
         m = jnp.max(s, axis=-1)                                   # [Q]
         a = jnp.argmax(s, axis=-1).astype(jnp.int32)              # [Q]
@@ -44,15 +48,23 @@ def _ivf_kernel(q_ref, c_ref, c2_ref, vals_ref, idx_ref, *, metric: str,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "metric", "block_n", "interpret"))
+                   static_argnames=("k", "metric", "block_n", "n_valid",
+                                    "interpret"))
 def ivf_scan_topk_pallas(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
                          metric: str = "l2", block_n: int = 512,
-                         interpret: bool = True
+                         n_valid: int = -1, interpret: bool = True
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """[Q, d] x [N, d] -> (vals [Q, k], ids [Q, k]); N % block_n == 0."""
+    """[Q, d] x [N, d] -> (vals [Q, k], ids [Q, k]); N % block_n == 0.
+
+    ``n_valid`` (< N) marks the tail rows as padding: their scores are pinned
+    to ``NEG`` inside the kernel, so the dispatcher can pad any corpus up to a
+    block_n multiple without padded rows ever reaching the top-k."""
     qn, d = q.shape
     n = corpus.shape[0]
     assert n % block_n == 0, (n, block_n)
+    if n_valid < 0:
+        n_valid = n
+    assert k <= n_valid, (k, n_valid)
     n_tiles = n // block_n
     if metric == "cosine":
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
@@ -62,7 +74,7 @@ def ivf_scan_topk_pallas(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
     c2 = jnp.sum(corpus.astype(jnp.float32) ** 2, axis=-1)
 
     kernel = functools.partial(_ivf_kernel, metric=metric, topl=k,
-                               block_n=block_n)
+                               block_n=block_n, n_valid=n_valid, n_total=n)
     vals, idx = pl.pallas_call(
         kernel,
         grid=(n_tiles,),

@@ -4,16 +4,23 @@ The kernel path is exact for any k (per-tile top-k >= global contribution of
 that tile), so parity with ref.py is bitwise up to fp32 reduction order.
 Large k (> 64) falls back to the XLA path: the L max-extract sweeps stop
 paying for themselves.
+
+Realistic corpus sizes are never block_n multiples, so the wrapper pads the
+corpus up to one and passes ``n_valid`` through: padded rows are masked to
+``NEG`` inside the kernel (or to -inf on the XLA path) and can never appear
+in the returned top-k.  Callers may also pre-pad for shape stability and
+pass their own ``n_valid``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.ivf_scan.ivf_scan import ivf_scan_topk_pallas
-from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref, scores_ref
 
 _KERNEL_MAX_K = 64
 
@@ -22,15 +29,42 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _scan_topk_xla(q: jnp.ndarray, corpus: jnp.ndarray, n_valid: jnp.ndarray,
+                   k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Jitted XLA twin of the kernel: fused scores + padding mask + top-k.
+    ``n_valid`` is traced, so every block-padded corpus shape compiles once
+    and serves any padding amount."""
+    s = scores_ref(q, corpus, metric)
+    cols = jnp.arange(corpus.shape[0])[None, :]
+    s = jnp.where(cols >= n_valid, -jnp.inf, s)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)
+
+
 def ivf_scan_topk(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
                   metric: str = "l2", block_n: int = 512,
-                  force_pallas: bool = False
+                  n_valid: int = -1, force_pallas: bool = False
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[Q, d] x [N, d] -> (vals [Q, k'], ids [Q, k']), k' = min(k, n_valid).
+
+    Rows at positions >= ``n_valid`` (default: all of ``corpus``) are treated
+    as padding and excluded from the result; returned indices are always
+    < ``n_valid``.
+    """
     n = corpus.shape[0]
-    use_kernel = (force_pallas or _on_tpu()) and k <= _KERNEL_MAX_K \
-        and n % block_n == 0 and n >= block_n
+    if n_valid < 0 or n_valid > n:
+        n_valid = n
+    k = min(k, n_valid)
+    if k <= 0:
+        return (jnp.zeros((q.shape[0], 0), jnp.float32),
+                jnp.zeros((q.shape[0], 0), jnp.int32))
+    use_kernel = (force_pallas or _on_tpu()) and k <= _KERNEL_MAX_K
     if use_kernel:
+        pad = (-n) % block_n
+        if pad:
+            corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
         return ivf_scan_topk_pallas(q, corpus, k, metric=metric,
-                                    block_n=block_n,
+                                    block_n=block_n, n_valid=n_valid,
                                     interpret=not _on_tpu())
-    return ivf_scan_topk_ref(q, corpus, k, metric)
+    return _scan_topk_xla(q, corpus, jnp.int32(n_valid), k, metric)

@@ -23,8 +23,15 @@ def scores_ref(q: jnp.ndarray, corpus: jnp.ndarray, metric: str
 
 
 def ivf_scan_topk_ref(q: jnp.ndarray, corpus: jnp.ndarray, k: int,
-                      metric: str = "l2") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """[Q, d] x [N, d] -> (scores [Q, k], indices [Q, k]), higher = closer."""
+                      metric: str = "l2", n_valid: int = -1
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[Q, d] x [N, d] -> (scores [Q, k], indices [Q, k]), higher = closer.
+
+    ``n_valid`` (< N) masks trailing padding rows to -inf, mirroring the
+    kernel's contract so the dispatcher can pad corpora freely."""
     s = scores_ref(q, corpus, metric)
+    if 0 <= n_valid < corpus.shape[0]:
+        cols = jnp.arange(corpus.shape[0])[None, :]
+        s = jnp.where(cols >= n_valid, -jnp.inf, s)
     vals, idx = jax.lax.top_k(s, k)
     return vals, idx.astype(jnp.int32)

@@ -268,3 +268,53 @@ def test_failed_extraction_propagates_and_clears_inflight():
         s.run("MATCH (p:Pet) WHERE p.photo->face ~: p.photo->face "
               "RETURN p.name").fetchall()
     assert wait_until(lambda: db.inflight.size() == 0)
+
+
+# ---------------------------------------------------------------------------
+# cross-chunk φ coalescing (idle-queue request merging)
+# ---------------------------------------------------------------------------
+
+
+def test_idle_queue_coalesces_prefetch_chunks():
+    """With the AIPM queue idle, the prefetch window's chunks merge into
+    fewer, larger requests; results stay identical to the sync path."""
+    db = make_pet_db(64)
+    text = ("MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name")
+    sync_rows = db.session(batch_rows=8, prefetch_depth=0).run(text).fetchall()
+    db.cache.clear()
+    spec = db.registry.get("animal")
+    calls0 = spec.calls
+    s = db.session(batch_rows=8, prefetch_depth=4)
+    cur = s.run(text)
+    rows = cur.fetchall()
+    assert rows == sync_rows
+    n_chunks = 64 // 8
+    assert cur.context.phi_coalesced >= 2         # some chunks rode together
+    assert spec.calls - calls0 < n_chunks         # fewer requests than chunks
+
+
+def test_busy_queue_does_not_coalesce():
+    """Coalescing is gated on an idle queue: with requests parked in front
+    of the workers, refills dispatch per-chunk as before."""
+    gate = Gate()
+    db = make_pet_db(32, workers=1)
+    db.register_extractor("face", gate.wrap(feature_hash_extractor(dim=16)))
+    # occupy the single worker, then park one request in the queue so the
+    # refill observes a busy service
+    b1 = db.aipm.submit("face", [(90_001, np.zeros(4, np.uint8))])
+    assert wait_until(gate.entered.is_set)
+    b2 = db.aipm.submit("face", [(90_002, np.zeros(4, np.uint8))])
+    s = db.session(batch_rows=8, prefetch_depth=2)
+    cur = s.run("MATCH (p:Pet) WHERE p.photo->animal='cat' RETURN p.name")
+    result = {}
+    t = threading.Thread(target=lambda: result.setdefault(
+        "rows", cur.fetchall()))
+    t.start()
+    # the refill's per-chunk φ requests queue up behind the parked one
+    assert wait_until(lambda: db.aipm.pending() >= 2)
+    gate.release.set()
+    t.join(timeout=20)
+    assert not t.is_alive()
+    assert cur.context.phi_coalesced == 0
+    b1.result(timeout=10)
+    b2.result(timeout=10)

@@ -109,3 +109,55 @@ def test_extract_count_optimized_vs_naive(figure1_db):
     ctx2 = ExecutionContext(db)
     execute(db.plan(text, optimized=False), ctx2)
     assert ctx1.extract_count <= ctx2.extract_count
+
+
+# ---------------------------------------------------------------------------
+# batched vector-index pushdown (var-var similarity)
+# ---------------------------------------------------------------------------
+
+
+def _face_db(n=40, seed=11):
+    from repro.core import PandaDB
+    from repro.core.aipm import feature_hash_extractor
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=32))
+    rng = np.random.default_rng(seed)
+    photos = [rng.bytes(256) for _ in range(n // 2)]
+    for i in range(n):
+        # pairs share a photo -> guaranteed cross-var similarity matches
+        db.graph.create_node("Person", name=f"p_{i}", photo=photos[i // 2])
+    for i in range(0, n - 1, 2):
+        db.graph.create_relationship(i, i + 1, "knows")
+    return db
+
+
+def test_var_var_pushdown_matches_extraction_path():
+    """`a.photo->face ~: b.photo->face` with an index on face: per-row query
+    vectors batch into one search_many per chunk, same rows as the
+    extract-both-sides path."""
+    text = ("MATCH (a:Person)-[:knows]->(b:Person) "
+            "WHERE a.photo->face ~: b.photo->face RETURN a.name, b.name")
+    db = _face_db()
+    baseline = {tuple(sorted(r.items())) for r in db.query(text)}
+    assert len(baseline) > 0
+    db2 = _face_db()
+    db2.build_index("face", "photo")
+    ctx = ExecutionContext(db2)
+    _, rows = execute(db2.plan(text), ctx)
+    pushed = {tuple(sorted(r.items())) for r in rows}
+    assert ctx.index_hits >= 1
+    assert pushed == baseline
+
+
+def test_self_similarity_pushdown_short_circuits():
+    """`x ~: x` with an index: rows with a blob pass without any search."""
+    db = _face_db(20)
+    db.build_index("face", "photo")
+    db.cache.clear()
+    ctx = ExecutionContext(db)
+    _, rows = execute(db.plan(
+        "MATCH (p:Person) WHERE p.photo->face ~: p.photo->face "
+        "RETURN p.name"), ctx)
+    assert len(rows) == 20
+    assert ctx.index_hits >= 1
+    assert ctx.extract_count == 0     # neither side extracted per row

@@ -52,6 +52,43 @@ def test_ivf_ops_fallback_large_k():
     assert np.array_equal(np.asarray(i), np.asarray(i2))
 
 
+@pytest.mark.parametrize("n", [100, 513, 777, 1500])
+@pytest.mark.parametrize("metric", ["l2", "ip", "cosine"])
+def test_ivf_ops_pads_to_kernel(n, metric):
+    """n % block_n != 0 must still hit the kernel: the wrapper pads the
+    corpus and masks the padding via n_valid, parity with the oracle."""
+    q = jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((n, 32)), jnp.float32)
+    v1, i1 = ivf_scan_topk(q, c, 8, metric=metric, force_pallas=True)
+    v2, i2 = ivf_scan_topk_ref(q, c, 8, metric)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    assert int(np.max(np.asarray(i1))) < n     # padding never surfaces
+    # the oracle's own n_valid contract: padded corpus + mask == truncation
+    pad = (-n) % 512
+    c_pad = jnp.pad(c, ((0, pad), (0, 0)))
+    v3, i3 = ivf_scan_topk_ref(q, c_pad, 8, metric, n_valid=n)
+    np.testing.assert_allclose(np.asarray(v3), np.asarray(v2),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(i3), np.asarray(i2))
+
+
+def test_ivf_pallas_n_valid_masks_tail():
+    """The kernel's n_valid contract: a pre-padded corpus scores only its
+    real prefix, matching the oracle on the truncation."""
+    n_real, n_pad = 700, 1024
+    q = jnp.asarray(RNG.standard_normal((3, 16)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((n_real, 16)), jnp.float32)
+    c_pad = jnp.pad(c, ((0, n_pad - n_real), (0, 0)))
+    v1, i1 = ivf_scan_topk_pallas(q, c_pad, 5, metric="l2", block_n=512,
+                                  n_valid=n_real, interpret=True)
+    v2, i2 = ivf_scan_topk_ref(q, c, 5, "l2")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
 # -- flash attention -----------------------------------------------------------
 
 @pytest.mark.parametrize("b,s,h,d,bq,bkv", [

@@ -222,3 +222,68 @@ def test_suggest_phi_batch_scales_with_speed():
     # fast extractor: amortize dispatch, clamped at the protocol max
     assert suggest_phi_batch(1e-6, 64, 256, 0.05) == 256
     assert suggest_phi_batch(1e-3, 64, 256, 0.05) == 50
+
+
+# ---------------------------------------------------------------------------
+# kNN cost term (index pushdown feedback)
+# ---------------------------------------------------------------------------
+
+
+def test_record_knn_scan_sets_speed_and_bumps_epoch():
+    from repro.core.cost_model import StatisticsService
+    stats = StatisticsService()
+    prior = stats.knn_scan_speed()
+    assert prior == stats.cfg.default_knn_scan_speed
+    e0 = stats.epoch
+    stats.record_knn_scan(0.01, 10_000)      # 1e-6 s/row observed
+    assert stats.epoch == e0 + 1             # first truth replaces the prior
+    assert stats.knn_scan_speed() == pytest.approx(1e-6)
+    stats.record_knn_scan(0.02, 10_000)      # EWMA folds, no epoch bump
+    assert stats.epoch == e0 + 1
+    assert prior < stats.knn_scan_speed() < 2e-6
+
+
+def test_knn_cost_scales_with_nprobe_and_corpus():
+    from repro.core.cost_model import StatisticsService
+    stats = StatisticsService()
+    c1 = stats.knn_cost(100_000, 100, 4)
+    c2 = stats.knn_cost(100_000, 100, 16)
+    c3 = stats.knn_cost(1_000_000, 100, 4)
+    assert c1 < c2 < stats.knn_cost(100_000, 100, 100)
+    assert c1 < c3                            # more rows -> more cost
+
+
+def test_choose_knn_nprobe_exact_vs_probe():
+    import numpy as np
+    from repro.configs.pandadb import VectorIndexConfig
+    from repro.core.cost_model import StatisticsService
+    from repro.core.vector_index import IVFIndex
+    stats = StatisticsService()
+    rng = np.random.default_rng(0)
+    # tiny index, nprobe ~ m: probing estimates no cheaper -> exact (m)
+    small = IVFIndex.build(rng.standard_normal((64, 8)).astype(np.float32),
+                           cfg=VectorIndexConfig(dim=8, vectors_per_bucket=16,
+                                                 min_buckets=2, nprobe=8,
+                                                 kmeans_iters=1))
+    m_small = small.centroids.shape[0]
+    assert stats.choose_knn_nprobe(small) == m_small
+    # wide index, narrow probe: IVF wins, keep the configured width
+    wide = IVFIndex.build(rng.standard_normal((2000, 8)).astype(np.float32),
+                          cfg=VectorIndexConfig(dim=8, vectors_per_bucket=50,
+                                                min_buckets=8, nprobe=2,
+                                                kmeans_iters=1))
+    assert stats.choose_knn_nprobe(wide) == 2
+
+
+def test_index_rebuild_bumps_epoch_and_invalidates_plans():
+    import numpy as np
+    from repro.core import PandaDB
+    from repro.core.aipm import feature_hash_extractor
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=16))
+    rng = np.random.default_rng(1)
+    for i in range(12):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(64))
+    e0 = db.stats.epoch
+    db.build_index("face", "photo")
+    assert db.stats.epoch > e0                # cached plans re-optimize

@@ -58,6 +58,34 @@ def test_ivf_partition_is_total(n, seed):
     assert total == n
 
 
+# -- probe-group batching: search_many == per-query searches -----------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(64, 300),
+    qn=st.integers(1, 12),
+    k=st.integers(1, 8),
+    nprobe=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_batched_search_equals_per_query(n, qn, k, nprobe, seed):
+    """Grouping queries by probe signature (or taking the masked dense
+    scan) must return exactly what one-query-at-a-time searches return."""
+    from repro.configs.pandadb import VectorIndexConfig
+    from repro.core.vector_index import IVFIndex
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, 8)).astype(np.float32)
+    idx = IVFIndex.build(vecs, cfg=VectorIndexConfig(
+        dim=8, vectors_per_bucket=40, min_buckets=2, kmeans_iters=2),
+        seed=seed)
+    queries = rng.standard_normal((qn, 8)).astype(np.float32)
+    v_b, i_b = idx.search_many(queries, k, nprobe)
+    for qi in range(qn):
+        v_1, i_1 = idx.search_many(queries[qi:qi + 1], k, nprobe)
+        assert np.array_equal(i_b[qi], i_1[0])
+        np.testing.assert_allclose(v_b[qi], v_1[0], rtol=1e-3, atol=1e-4)
+
+
 # -- EmbeddingBag ragged == dense --------------------------------------------------
 
 @settings(**SETTINGS)

@@ -1,7 +1,8 @@
-"""IVF-Flat index (Algorithm 2) + distributed kNN tests."""
+"""IVF-Flat index (Algorithm 2) + batched kNN + distributed kNN tests."""
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.pandadb import VectorIndexConfig
@@ -22,6 +23,30 @@ def index():
     cfg = VectorIndexConfig(dim=32, metric="l2", vectors_per_bucket=250,
                             min_buckets=8, nprobe=4, kmeans_iters=4)
     return IVFIndex.build(vecs, cfg=cfg, seed=0)
+
+
+def loop_search(index, queries, k, nprobe):
+    """The seed's per-query host loop: the parity oracle for search_many."""
+    q = jnp.asarray(queries, jnp.float32)
+    cscores = pairwise_scores(q, jnp.asarray(index.centroids),
+                              index.cfg.metric)
+    _, probe = jax.lax.top_k(cscores, min(nprobe, index.centroids.shape[0]))
+    probe = np.asarray(probe)
+    out_v = np.full((queries.shape[0], k), -np.inf, np.float32)
+    out_i = np.full((queries.shape[0], k), -1, np.int64)
+    for qi in range(queries.shape[0]):
+        segs = [index.bucket_slice(int(b)) for b in probe[qi]]
+        rows = np.concatenate([np.arange(lo, hi) for lo, hi in segs]) \
+            if segs else np.array([], np.int64)
+        if rows.size == 0:
+            continue
+        vals, ids = scan_topk(q[qi:qi + 1], jnp.asarray(index.vectors[rows]),
+                              jnp.asarray(index.ids[rows]), k,
+                              index.cfg.metric)
+        kk = vals.shape[1]
+        out_v[qi, :kk] = np.asarray(vals)[0]
+        out_i[qi, :kk] = np.asarray(ids)[0]
+    return out_v, out_i
 
 
 def test_build_bucket_count(index):
@@ -64,7 +89,16 @@ def test_dynamic_insert(index):
     v = index.vectors[7] + 0.5
     n0 = index.vectors.shape[0]
     b = index.insert(v, ext_id=999_999)
+    # buffered append: the compacted arrays are untouched until compaction
+    assert index.vectors.shape[0] == n0
+    assert index.pending_count == 1
+    assert index.n_total == n0 + 1
+    vals, ids = index.search(v[None], k=1, nprobe=4)
+    assert ids[0, 0] == 999_999          # searches see uncompacted rows
+    index.compact()
+    assert index.pending_count == 0
     assert index.vectors.shape[0] == n0 + 1
+    assert np.all(np.diff(index.bucket_of) >= 0)   # layout still sorted
     vals, ids = index.search(v[None], k=1, nprobe=4)
     assert ids[0, 0] == 999_999
     # restore module-scoped index (remove inserted row)
@@ -72,6 +106,101 @@ def test_dynamic_insert(index):
     index.vectors = index.vectors[keep]
     index.ids = index.ids[keep]
     index.bucket_of = index.bucket_of[keep]
+
+
+def test_batched_matches_loop_clustered(index):
+    """Probe-signature grouping: clustered queries, identical ids to the
+    per-query loop (vals to fp32 reduction-order noise)."""
+    rng = np.random.default_rng(7)
+    queries = index.vectors[rng.choice(4000, 48)] + \
+        rng.standard_normal((48, 32)).astype(np.float32) * 0.01
+    for k, nprobe in [(1, 4), (10, 4), (100, 6)]:
+        v1, i1 = index.search_many(queries, k, nprobe)
+        v2, i2 = loop_search(index, queries, k, nprobe)
+        assert np.array_equal(i1, i2), (k, nprobe)
+        np.testing.assert_allclose(v1, v2, rtol=1e-3, atol=1e-4)
+
+
+def test_batched_matches_loop_scattered(index):
+    """Scattered signatures take the masked dense scan: same candidates."""
+    rng = np.random.default_rng(8)
+    queries = rng.standard_normal((64, 32)).astype(np.float32)
+    for k, nprobe in [(10, 4), (10, 8)]:
+        v1, i1 = index.search_many(queries, k, nprobe)
+        v2, i2 = loop_search(index, queries, k, nprobe)
+        assert np.array_equal(i1, i2), (k, nprobe)
+        np.testing.assert_allclose(v1, v2, rtol=1e-3, atol=1e-4)
+
+
+def test_exact_mode_byte_identical(index):
+    """nprobe=m is exact mode: one probe signature, one fused scan,
+    byte-identical ids to the loop."""
+    rng = np.random.default_rng(9)
+    queries = rng.standard_normal((32, 32)).astype(np.float32)
+    m = index.centroids.shape[0]
+    _, i1 = index.search_many(queries, 10, m)
+    _, i2 = loop_search(index, queries, 10, m)
+    assert np.array_equal(i1, i2)
+
+
+def test_insert_then_search_uncompacted():
+    """Uncompacted buffer rows participate in probe, exact and dense
+    searches; compaction changes nothing observable."""
+    vecs = sift_like_vectors(600, dim=16, n_clusters=8, seed=5)
+    cfg = VectorIndexConfig(dim=16, metric="l2", vectors_per_bucket=100,
+                            min_buckets=4, nprobe=3, kmeans_iters=2)
+    idx = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(6)
+    new = rng.standard_normal((20, 16)).astype(np.float32) * 0.1 + vecs[:20]
+    for j, v in enumerate(new):
+        idx.insert(v, 10_000 + j)
+    assert idx.pending_count == 20
+    assert idx.n_total == 620
+    for j, v in enumerate(new):
+        _, ids = idx.search(v[None], k=1, nprobe=idx.centroids.shape[0])
+        assert ids[0, 0] == 10_000 + j          # exact mode must find it
+    _, ids_exact = idx.search_exact(new, 1)
+    assert set(ids_exact[:, 0].tolist()) == set(range(10_000, 10_020))
+    # dense masked path sees pending rows too
+    queries = rng.standard_normal((32, 16)).astype(np.float32)
+    v_pend, i_pend = idx.search_many(queries, 5, 3)
+    idx.compact()
+    v_comp, i_comp = idx.search_many(queries, 5, 3)
+    assert np.array_equal(i_pend, i_comp)
+    np.testing.assert_allclose(v_pend, v_comp, rtol=1e-3, atol=1e-4)
+
+
+def test_insert_many_matches_single_inserts():
+    vecs = sift_like_vectors(300, dim=8, n_clusters=4, seed=2)
+    cfg = VectorIndexConfig(dim=8, vectors_per_bucket=100, min_buckets=2,
+                            kmeans_iters=2)
+    a = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    b = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(3)
+    new = rng.standard_normal((10, 8)).astype(np.float32)
+    for j, v in enumerate(new):
+        a.insert(v, 500 + j)
+    b.insert_many(new, np.arange(500, 510))
+    a.compact()
+    b.compact()
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.bucket_of, b.bucket_of)
+    np.testing.assert_array_equal(a.vectors, b.vectors)
+
+
+def test_pending_compaction_threshold():
+    vecs = sift_like_vectors(200, dim=8, n_clusters=4, seed=4)
+    cfg = VectorIndexConfig(dim=8, vectors_per_bucket=50, min_buckets=2,
+                            kmeans_iters=1, pending_compact_min=16,
+                            pending_compact_frac=0.01)
+    idx = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(5)
+    for j in range(16):
+        idx.insert(rng.standard_normal(8).astype(np.float32), 1000 + j)
+    # the 16th insert crosses pending_compact_min and auto-compacts
+    assert idx.pending_count == 0
+    assert idx.vectors.shape[0] == 216
+    assert np.all(np.diff(idx.bucket_of) >= 0)
 
 
 def test_distributed_knn_equals_global():
@@ -85,6 +214,26 @@ def test_distributed_knn_equals_global():
     v_d, i_d = distributed_knn(q, shards, id_shards, 8, "l2")
     np.testing.assert_allclose(np.asarray(v_g), np.asarray(v_d), rtol=1e-5)
     assert np.array_equal(np.asarray(i_g), np.asarray(i_d))
+
+
+def test_distributed_knn_no_sentinel_leak():
+    """Shards smaller than k pad with (-inf, -1); the merge must never show
+    those to callers when enough real candidates exist, and must truncate
+    when they don't."""
+    rng = np.random.default_rng(11)
+    corpus = jnp.asarray(rng.standard_normal((10, 4)), jnp.float32)
+    ids = jnp.arange(10)
+    q = jnp.asarray(rng.standard_normal((3, 4)), jnp.float32)
+    # 4 shards of 2-3 rows, k=8 > any shard: total rows (10) >= k -> no -1
+    shards = [corpus[i::4] for i in range(4)]
+    id_shards = [ids[i::4] for i in range(4)]
+    v, i = distributed_knn(q, shards, id_shards, 8, "l2")
+    assert np.all(np.asarray(i) >= 0)
+    assert np.all(np.isfinite(np.asarray(v)))
+    # total rows (10) < k=20 -> truncated to 10 columns, still no -1
+    v, i = distributed_knn(q, shards, id_shards, 20, "l2")
+    assert v.shape == (3, 10) and i.shape == (3, 10)
+    assert np.all(np.asarray(i) >= 0)
 
 
 def test_merge_topk_associative():
