@@ -1,0 +1,98 @@
+"""PQ-compressed kNN: memory footprint, ADC vs float scan, re-rank recall.
+
+One IVF-PQ index per corpus size N in {20k, 200k} (dim=128, the paper's
+face-feature scale).  For each:
+
+* **memory** -- scan-resident bytes of the PQ layout (uint8 codes +
+  codebooks + centroids) vs the flat float32 layout; the acceptance bar is
+  >= 4x reduction (here ~30x: 128 floats -> 16 bytes per row).
+* **latency** -- ``search_many`` at Q=32, probe (nprobe=8) and exact
+  (nprobe=m) widths, float scan vs ADC + exact re-rank on the *same*
+  index (``mode=`` override).  The ADC path must beat the float path at
+  N=200k, where the scan is bandwidth-bound.
+* **recall@10** -- raw ADC top-k (quantized ordering) vs after the exact
+  re-rank of k' = rerank_mult * k candidates; the re-rank must bring a
+  clustered corpus back above 0.95.
+
+Raw numbers land in ``BENCH_pq_knn.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core.vector_index import IVFIndex, recall_at_k
+from repro.data.synthetic_graph import sift_like_vectors
+
+DIM = 128
+K = 10
+Q = 32
+NPROBE = 8
+
+
+def bench_one(n: int, seed: int = 0) -> dict:
+    vecs = sift_like_vectors(n, dim=DIM, n_clusters=max(64, n // 100),
+                             seed=seed)
+    cfg = VectorIndexConfig(dim=DIM, metric="l2",
+                            vectors_per_bucket=2000, min_buckets=8,
+                            nprobe=NPROBE, kmeans_iters=2,
+                            pq_m=16, pq_bits=8, pq_kmeans_iters=4,
+                            rerank_mult=32)
+    index = IVFIndex.build(vecs, cfg=cfg, seed=seed)
+    m = index.centroids.shape[0]
+    rng = np.random.default_rng(seed + 1)
+    queries = vecs[rng.choice(n, Q)] + \
+        rng.standard_normal((Q, DIM)).astype(np.float32) * 0.01
+
+    flat_bytes = int(index.vectors.nbytes + index.centroids.nbytes)
+    pq_bytes = index.index_bytes()
+    mem_ratio = flat_bytes / pq_bytes
+    emit(f"pq_knn/memory/N={n}", pq_bytes / 1.0,
+         f"flat_bytes={flat_bytes},ratio={mem_ratio:.1f}x")
+
+    out: dict = {"n": n, "m": m, "dim": DIM,
+                 "flat_bytes": flat_bytes, "pq_bytes": pq_bytes,
+                 "memory_ratio": mem_ratio, "search": {}}
+    for label, nprobe in (("probe", NPROBE), ("exact", m)):
+        t_float = timeit(lambda: index.search_many(
+            queries, K, nprobe, mode="float"), repeats=3)
+        t_adc = timeit(lambda: index.search_many(
+            queries, K, nprobe, mode="adc"), repeats=3)
+        speedup = t_float / t_adc
+        emit(f"pq_knn/{label}/N={n}", t_adc,
+             f"float_us={t_float:.0f},speedup={speedup:.1f}x")
+        out["search"][label] = dict(float_us=t_float, adc_us=t_adc,
+                                    speedup=speedup)
+
+    r_raw = recall_at_k(index, queries, K, nprobe=NPROBE, rerank=False)
+    r_rerank = recall_at_k(index, queries, K, nprobe=NPROBE)
+    emit(f"pq_knn/recall/N={n}", r_rerank * 1e6,
+         f"raw_adc={r_raw:.3f},rerank={r_rerank:.3f}")
+    out["recall_at_10"] = dict(raw_adc=r_raw, rerank=r_rerank,
+                               rerank_mult=cfg.rerank_mult)
+    return out
+
+
+def run() -> None:
+    payload = {"config": dict(dim=DIM, k=K, q=Q, nprobe=NPROBE,
+                              pq_m=16, pq_bits=8, rerank_mult=32),
+               "sizes": {}}
+    for n in (20_000, 200_000):
+        payload["sizes"][f"N={n}"] = bench_one(n)
+
+    big = payload["sizes"]["N=200000"]
+    assert big["memory_ratio"] >= 4.0, big["memory_ratio"]
+    assert big["search"]["probe"]["speedup"] > 1.0, big["search"]
+    assert big["recall_at_10"]["rerank"] >= 0.95, big["recall_at_10"]
+
+    out = Path(__file__).resolve().parent.parent / "BENCH_pq_knn.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ SUITES = {
     "fig11": "benchmarks.bench_index_recall",
     "fig12": "benchmarks.bench_index_perf",
     "index_knn": "benchmarks.bench_index_perf",
+    "pq_knn": "benchmarks.bench_pq_knn",
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.roofline",
 }

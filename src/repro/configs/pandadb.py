@@ -20,6 +20,16 @@ class VectorIndexConfig:
     pending_compact_frac: float = 0.1   # compact append buffers once pending
     #                                     rows exceed this fraction of N
     pending_compact_min: int = 1024     # ... but never before this many
+    # -- product quantization (IVF-PQ mode) --
+    pq_m: int = 0                 # subspaces per vector; 0 = IVF-Flat (no PQ).
+    #                               dim % pq_m must be 0 when enabled
+    pq_bits: int = 8              # bits per code -> K = 2**bits centers per
+    #                               subspace (8 keeps the ADC kernel MXU-wide)
+    pq_kmeans_iters: int = 6      # per-subspace codebook refinement steps
+    rerank_mult: int = 8          # ADC candidate fanout: scan keeps k' =
+    #                               rerank_mult * k codes, exact re-rank
+    #                               against original vectors returns top-k
+    #                               (recall@10 >= 0.95 on clustered corpora)
 
 
 @dataclass(frozen=True)
@@ -62,6 +72,10 @@ class CostModelConfig:
     default_semantic_speed: float = 0.3      # s/row prior (paper: 0.3s/face)
     default_knn_scan_speed: float = 2e-9     # s per corpus row scanned (prior;
     #                                          replaced by observed throughput)
+    default_pq_scan_speed: float = 5e-10     # s per code row ADC-scanned
+    #                                          (prior; the uint8 scan is
+    #                                          bandwidth-bound, ~4-8x the
+    #                                          float throughput)
 
 
 @dataclass(frozen=True)

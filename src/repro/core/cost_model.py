@@ -80,8 +80,10 @@ class StatisticsService:
     # -- kNN scan throughput (index pushdown) ----------------------------------
 
     _KNN_KEY = "knn_scan"
+    _PQ_KEY = "pq_scan"
 
-    def record_knn_scan(self, total_time: float, rows_scanned: int) -> None:
+    def _record_scan(self, key: str, total_time: float,
+                     rows_scanned: int) -> None:
         """Observed index-scan throughput (s per corpus row x query), EWMA'd
         like any operator speed.  The first real measurement replaces the
         config prior and bumps the epoch so cached plans re-optimize with
@@ -90,16 +92,28 @@ class StatisticsService:
             return
         speed = total_time / rows_scanned
         a = self.cfg.ewma_alpha
-        old = self.speeds.get(self._KNN_KEY)
+        old = self.speeds.get(key)
         if old is None:
             self.epoch += 1
-        self.speeds[self._KNN_KEY] = (speed if old is None
-                                      else a * speed + (1 - a) * old)
-        self.counts[self._KNN_KEY] = \
-            self.counts.get(self._KNN_KEY, 0) + rows_scanned
+        self.speeds[key] = (speed if old is None
+                            else a * speed + (1 - a) * old)
+        self.counts[key] = self.counts.get(key, 0) + rows_scanned
+
+    def record_knn_scan(self, total_time: float, rows_scanned: int) -> None:
+        """Float-scan throughput feedback (see :meth:`_record_scan`)."""
+        self._record_scan(self._KNN_KEY, total_time, rows_scanned)
+
+    def record_pq_scan(self, total_time: float, rows_scanned: int) -> None:
+        """ADC-scan throughput feedback (uint8 code rows; includes the
+        LUT build and the exact re-rank of k' candidates, so the EWMA
+        prices the *whole* two-stage path per scanned row)."""
+        self._record_scan(self._PQ_KEY, total_time, rows_scanned)
 
     def knn_scan_speed(self) -> float:
         return self.speeds.get(self._KNN_KEY, self.cfg.default_knn_scan_speed)
+
+    def pq_scan_speed(self) -> float:
+        return self.speeds.get(self._PQ_KEY, self.cfg.default_pq_scan_speed)
 
     def knn_cost(self, n_total: int, m: int, nprobe: int, q: int = 1) -> float:
         """Estimated cost of a kNN over ``q`` queries: centroid probe
@@ -120,6 +134,57 @@ class StatisticsService:
         cost_ivf = self.knn_cost(index.n_total, m, nprobe, q)
         cost_exact = self.knn_cost(index.n_total, m, m, q)
         return m if cost_exact <= cost_ivf else nprobe
+
+    def pq_cost(self, n_total: int, m: int, nprobe: int, q: int = 1,
+                k_prime: int = 0) -> float:
+        """Estimated cost of the two-stage ADC path: the centroid probe
+        (m *float* rows -- identical work to the float path, priced the
+        same), the uint8 ADC scan of the probed fraction at the observed
+        code-row throughput, and an exact re-rank of ``k_prime`` candidate
+        rows per query priced at the float scan throughput."""
+        nprobe = min(max(1, nprobe), max(1, m))
+        probed = n_total * nprobe / max(1, m)
+        probe = self.knn_scan_speed() * q * m
+        scan = self.pq_scan_speed() * q * probed
+        rerank = self.knn_scan_speed() * q * k_prime
+        return probe + scan + rerank
+
+    def choose_knn_scan(self, index, q: int = 1, k: int = 10) -> str:
+        """ADC + re-rank vs plain float scan for this query batch, from the
+        observed throughputs: the ADC scan saves bandwidth proportionally
+        to the corpus size, the re-rank adds a fixed per-query k' cost --
+        so big corpora go ``"adc"`` and tiny ones stay ``"float"``."""
+        if index.pq is None or index.codes is None:
+            return "float"
+        m = index.centroids.shape[0]
+        nprobe = self.choose_knn_nprobe(index, q)
+        k_prime = index.cfg.rerank_mult * k
+        cost_adc = self.pq_cost(index.n_total, m, nprobe, q, k_prime)
+        cost_float = self.knn_cost(index.n_total, m, nprobe, q)
+        return "adc" if cost_adc <= cost_float else "float"
+
+    def suggest_prefetch_depth(self, sem_op: lp.PlanOp,
+                               cap: int) -> Optional[int]:
+        """Adaptive φ prefetch window for one SemanticFilter: how many
+        chunks of structured production fit inside one chunk of φ wait,
+        from the observed per-row speeds already in this service -- a slow
+        extractor over a fast scan wants the whole window in flight, a
+        cheap (cached / pushed-down) one shouldn't queue anything it may
+        never need.  Clamped to ``cap`` (the AIPM bounded-queue capacity:
+        deeper would just block on backpressure).  Returns None until the
+        executor has observed a real speed for this φ family -- cold start
+        keeps the configured default."""
+        phi = self.speeds.get(self.op_key(sem_op))
+        if phi is None:
+            return None
+        produce = 0.0
+        stack = list(sem_op.children())
+        while stack:
+            op = stack.pop()
+            produce += self.expected_speed(op)
+            stack.extend(op.children())
+        depth = int(np.ceil(phi / max(produce, 1e-12)))
+        return max(1, min(cap, depth))
 
     def note_index_rebuild(self, sub_key: str) -> None:
         """A (re)built index changes which plans are optimal (pushdown

@@ -2,6 +2,7 @@
 cache + AIPM + vector indexes (the paper's Fig 2 architecture)."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -101,12 +102,9 @@ class PandaDB:
                 self.cache.put(bid, sub_key, serial, vec)
         vecs = np.stack([self.cache.get(int(b), sub_key, serial)
                          for b in blob_ids])
-        cfg = cfg or VectorIndexConfig(dim=vecs.shape[1],
-                                       metric=self.cfg.index.metric,
-                                       vectors_per_bucket=self.cfg.index.vectors_per_bucket,
-                                       min_buckets=self.cfg.index.min_buckets,
-                                       nprobe=self.cfg.index.nprobe,
-                                       kmeans_iters=self.cfg.index.kmeans_iters)
+        # carry every deployment knob (incl. pq_m / pq_bits / rerank_mult:
+        # IVF-PQ mode trains codebooks inside IVFIndex.build)
+        cfg = cfg or dataclasses.replace(self.cfg.index, dim=vecs.shape[1])
         index = IVFIndex.build(vecs, ids=blob_ids, cfg=cfg, serial=serial)
         self.indexes[sub_key] = index
         # a fresh index changes which plans are optimal (pushdown becomes

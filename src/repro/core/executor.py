@@ -73,9 +73,14 @@ class ExecutionContext:
         self.registry = db.registry
         self.inflight = db.inflight
         #: chunks of φ work kept in flight ahead of the semantic filter's
-        #: consumption point (0 disables overlap; None = AIPMConfig default)
+        #: consumption point (0 disables overlap; None = adaptive -- the
+        #: AIPMConfig default until the stats service has observed this φ
+        #: family's speed, then auto-tuned per filter from φ wait vs
+        #: structured-produce time, clamped to the bounded-queue capacity)
+        self.prefetch_auto = prefetch_depth is None
         self.prefetch_depth = (db.cfg.aipm.prefetch_depth
                                if prefetch_depth is None else prefetch_depth)
+        self.prefetch_depth_used: Optional[int] = None
         self.params: Dict[str, Any] = dict(params or {})
         self.extract_count = 0      # φ items dispatched by *this* execution
         self.dedup_borrows = 0      # φ items shared with another execution
@@ -515,6 +520,17 @@ def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
     the generator (``LIMIT`` early exit, cursor close) cancels every φ batch
     not yet picked up by a worker."""
     depth = ctx.prefetch_depth
+    if ctx.prefetch_auto and depth > 0:
+        # adaptive window: observed φ wait vs structured-produce time,
+        # clamped to the AIPM bounded-queue capacity (deeper would only
+        # block on backpressure).  Explicit session overrides, a config
+        # prefetch_depth of 0 (sync mode stays sync), and cold starts
+        # (no observed speed yet) keep ctx.prefetch_depth
+        adaptive = ctx.stats.suggest_prefetch_depth(
+            plan, ctx.aipm.cfg.max_inflight)
+        if adaptive is not None:
+            depth = adaptive
+    ctx.prefetch_depth_used = depth
     # dedupe: `x ~: x` style predicates name the same extraction twice;
     # skip extractions an index pushdown will cover (the rest -- e.g. the
     # query side of a var-var similarity -- still prefetch normally)

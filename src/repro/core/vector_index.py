@@ -1,4 +1,5 @@
-"""Semantic-information vector index: IVF-Flat (paper §VI-B2 + Algorithm 2).
+"""Semantic-information vector index: IVF-Flat / IVF-PQ (paper §VI-B2 +
+Algorithm 2, extended with product-quantized storage).
 
 BatchIndexing: m = |S| / 100_000 buckets (empirical value from the paper),
 random core vectors refined by a few k-means iterations, every vector
@@ -11,6 +12,18 @@ together through ``kernels.ivf_scan.ops.ivf_scan_topk`` (the Pallas kernel
 on TPU, the fused XLA oracle elsewhere) over a gathered, block-padded
 corpus, followed by the ``merge_topk``-shaped epilogue inside the kernel
 dispatch.  There is no per-query Python loop.
+
+IVF-PQ (``cfg.pq_m > 0``): :class:`PQCodebook` trains per-subspace k-means
+codebooks at build time and every bucket stores uint8 codes (M bytes per
+row instead of 4*dim) alongside the append-buffer machinery.  Search is
+two-stage: per-query score LUTs + an asymmetric-distance (ADC) top-k' scan
+of the probed buckets through ``kernels.pq_scan.ops.pq_adc_topk``, then an
+exact re-rank of the k' candidates against the original float vectors
+(primary storage) that returns true top-k scores -- so similarity
+thresholds downstream see exact values, and recall lost to quantization is
+recovered (cf. proxy-then-rerank pipelines).  The cost model picks ADC vs
+float scan per query batch from observed throughputs
+(``StatisticsService.choose_knn_scan``).
 
 Distributed layout (paper §VII-A: property data sharded): centroids are
 replicated, bucket contents are sharded over the ``data`` axis; a query does
@@ -31,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.configs.pandadb import VectorIndexConfig
 from repro.kernels.ivf_scan.ops import ivf_scan_topk
+from repro.kernels.pq_scan.ops import pq_adc_topk
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +151,116 @@ def distributed_knn(q: jnp.ndarray, corpus_shards: List[jnp.ndarray],
 
 
 # ---------------------------------------------------------------------------
-# IVF-Flat
+# product quantization
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PQCodebook:
+    """Per-subspace k-means codebooks: dim splits into ``m`` contiguous
+    subspaces of ``dsub`` dims, each quantized to one of ``ksub = 2**bits``
+    centers.  A vector becomes ``m`` uint8 codes; reconstruction error is
+    the sum of per-subspace quantization errors.
+
+    Codes are always assigned by nearest center in L2 (minimum
+    reconstruction error) regardless of the search metric; the *LUTs* carry
+    the metric: negative squared sub-distances for L2, sub dot products for
+    IP (cosine callers normalize upstream, then IP == cosine)."""
+
+    codebooks: np.ndarray        # [m, ksub, dsub] float32
+    metric: str = "l2"
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def ksub(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.dsub
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.codebooks.nbytes)
+
+    @staticmethod
+    def train(vectors: np.ndarray, m: int, bits: int = 8, iters: int = 6,
+              metric: str = "l2", seed: int = 0) -> "PQCodebook":
+        """Lloyd k-means per subspace (init: random corpus rows)."""
+        vectors = np.asarray(vectors, np.float32)
+        n, dim = vectors.shape
+        if dim % m:
+            raise ValueError(f"dim {dim} not divisible by pq_m {m}")
+        if not 1 <= bits <= 8:
+            raise ValueError(f"pq_bits must be in [1, 8] (uint8 codes), "
+                             f"got {bits}")
+        ksub = min(1 << bits, n)
+        dsub = dim // m
+        rng = np.random.default_rng(seed)
+        books = np.empty((m, ksub, dsub), np.float32)
+        subs = vectors.reshape(n, m, dsub)
+        for j in range(m):
+            sv = subs[:, j, :]
+            centers = sv[rng.choice(n, size=ksub, replace=False)].copy()
+            for _ in range(iters):
+                assign = _nearest_l2(sv, centers)
+                for c in range(ksub):
+                    sel = assign == c
+                    if sel.any():
+                        centers[c] = sv[sel].mean(axis=0)
+            books[j] = centers
+        return PQCodebook(books, metric=metric)
+
+    def encode(self, vectors: np.ndarray) -> np.ndarray:
+        """[N, dim] -> uint8 codes [N, m] (nearest L2 center per subspace)."""
+        vectors = np.asarray(vectors, np.float32)
+        n = vectors.shape[0]
+        subs = vectors.reshape(n, self.m, self.dsub)
+        codes = np.empty((n, self.m), np.uint8)
+        for j in range(self.m):
+            codes[:, j] = _nearest_l2(subs[:, j, :], self.codebooks[j])
+        return codes
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """uint8 codes [N, m] -> reconstructed vectors [N, dim]."""
+        codes = np.asarray(codes)
+        parts = [self.codebooks[j][codes[:, j].astype(np.int64)]
+                 for j in range(self.m)]
+        return np.concatenate(parts, axis=1)
+
+    def luts(self, queries: np.ndarray) -> np.ndarray:
+        """[Q, dim] -> score LUTs [Q, m, ksub], higher = better.  The ADC
+        scan then evaluates s[q, n] = sum_j lut[q, j, codes[n, j]]."""
+        queries = np.asarray(queries, np.float32)
+        qn = queries.shape[0]
+        qsubs = queries.reshape(qn, self.m, self.dsub)
+        # [Q, m, ksub]: einsum over dsub against every center
+        ip = np.einsum("qmd,mkd->qmk", qsubs, self.codebooks,
+                       dtype=np.float32)
+        if self.metric == "ip":
+            return np.ascontiguousarray(ip, np.float32)
+        q2 = np.sum(qsubs * qsubs, axis=-1)[:, :, None]
+        c2 = np.sum(self.codebooks * self.codebooks, axis=-1)[None, :, :]
+        return np.ascontiguousarray(-(q2 - 2.0 * ip + c2), np.float32)
+
+
+def _nearest_l2(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    """argmin_c ||x - c||^2 via the matmul identity; [N, d] x [K, d] -> [N]."""
+    c2 = np.sum(centers * centers, axis=-1)
+    # ||x||^2 is constant per row: argmin over centers needs only -2xc + c2
+    d = c2[None, :] - 2.0 * (x @ centers.T)
+    return d.argmin(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# IVF-Flat / IVF-PQ
 # ---------------------------------------------------------------------------
 
 
@@ -149,11 +272,18 @@ class IVFIndex:
     vectors: np.ndarray                   # [N, d] compacted rows
     ids: np.ndarray                       # [N] external ids
     serial: int = 1                       # model serial this index was built for
+    # IVF-PQ mode (cfg.pq_m > 0): trained codebooks + uint8 codes aligned
+    # row-for-row with ``vectors``; the ADC scan reads only ``codes``, the
+    # exact re-rank reads ``vectors`` (primary storage)
+    pq: Optional[PQCodebook] = None
+    codes: Optional[np.ndarray] = None    # [N, pq_m] uint8
     # dynamic-insert append buffers (bucket -> uncompacted rows); searches
     # always include these, compaction folds them into the sorted layout
     _pend_vecs: Dict[int, List[np.ndarray]] = dataclasses.field(
         default_factory=dict, repr=False)
     _pend_ids: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _pend_codes: Dict[int, List[np.ndarray]] = dataclasses.field(
         default_factory=dict, repr=False)
     pending_count: int = 0
     # observed scan throughput (feeds the cost model's kNN term)
@@ -164,6 +294,18 @@ class IVFIndex:
     def n_total(self) -> int:
         """Indexed vectors, compacted + pending."""
         return int(self.ids.shape[0]) + self.pending_count
+
+    def index_bytes(self) -> int:
+        """Scan-resident bytes: what a bucket scan actually streams.  PQ
+        mode streams uint8 codes (+ codebooks + centroids); flat mode
+        streams the float32 rows.  Original vectors kept for re-rank are
+        primary storage, touched only for k' candidates per query."""
+        base = int(self.centroids.nbytes)
+        if self.pq is not None and self.codes is not None:
+            pend = sum(len(v) for v in self._pend_codes.values()) * self.pq.m
+            return base + int(self.codes.nbytes) + pend + self.pq.nbytes
+        pend = self.pending_count * self.vectors.shape[1] * 4
+        return base + int(self.vectors.nbytes) + pend
 
     # -- Algorithm 2: BatchIndexing -------------------------------------------
 
@@ -191,9 +333,21 @@ class IVFIndex:
         assign = np.asarray(jnp.argmax(
             pairwise_scores(v, jnp.asarray(cores), cfg.metric), axis=1))
         order = np.argsort(assign, kind="stable")
-        return IVFIndex(cfg, cores, assign[order],
-                        np.asarray(vectors, np.float32)[order], ids[order],
-                        serial=serial)
+        sorted_vecs = np.asarray(vectors, np.float32)[order]
+        if cfg.metric == "cosine":
+            # normalize once so PQ codes / IP LUTs realize cosine exactly
+            sorted_vecs = sorted_vecs / np.maximum(
+                np.linalg.norm(sorted_vecs, axis=-1, keepdims=True), 1e-9)
+        pq = codes = None
+        if cfg.pq_m > 0:
+            pq = PQCodebook.train(
+                sorted_vecs, cfg.pq_m, bits=cfg.pq_bits,
+                iters=cfg.pq_kmeans_iters,
+                metric="ip" if cfg.metric in ("ip", "cosine") else "l2",
+                seed=seed)
+            codes = pq.encode(sorted_vecs)
+        return IVFIndex(cfg, cores, assign[order], sorted_vecs, ids[order],
+                        serial=serial, pq=pq, codes=codes)
 
     # -- Algorithm 2: DynamicIndexing ------------------------------------------
 
@@ -204,11 +358,16 @@ class IVFIndex:
         append buffer and the sorted layout is rebuilt only when the pending
         set crosses the compaction threshold (``pending_compact_frac``)."""
         vec = np.asarray(vec, np.float32)
+        if self.cfg.metric == "cosine":
+            vec = vec / max(float(np.linalg.norm(vec)), 1e-9)
         scores = _pairwise_scores_np(vec[None], self.centroids,
                                      self.cfg.metric)[0]
         b = int(scores.argmax())
         self._pend_vecs.setdefault(b, []).append(vec)
         self._pend_ids.setdefault(b, []).append(int(ext_id))
+        if self.pq is not None:
+            self._pend_codes.setdefault(b, []).append(
+                self.pq.encode(vec[None])[0])
         self.pending_count += 1
         if self.pending_count >= self._compact_threshold():
             self.compact()
@@ -217,13 +376,20 @@ class IVFIndex:
     def insert_many(self, vecs: np.ndarray, ext_ids: np.ndarray) -> np.ndarray:
         """Batched DynamicIndexing: one centroid scoring for all vectors."""
         vecs = np.asarray(vecs, np.float32)
+        if self.cfg.metric == "cosine":
+            vecs = vecs / np.maximum(
+                np.linalg.norm(vecs, axis=-1, keepdims=True), 1e-9)
         assign = np.asarray(jnp.argmax(pairwise_scores(
             jnp.asarray(vecs), jnp.asarray(self.centroids), self.cfg.metric),
             axis=1))
-        for v, b, eid in zip(vecs, assign, np.asarray(ext_ids)):
+        codes = self.pq.encode(vecs) if self.pq is not None else None
+        for i, (v, b, eid) in enumerate(zip(vecs, assign,
+                                            np.asarray(ext_ids))):
             b = int(b)
             self._pend_vecs.setdefault(b, []).append(v)
             self._pend_ids.setdefault(b, []).append(int(eid))
+            if codes is not None:
+                self._pend_codes.setdefault(b, []).append(codes[i])
         self.pending_count += len(vecs)
         if self.pending_count >= self._compact_threshold():
             self.compact()
@@ -241,10 +407,13 @@ class IVFIndex:
         add_b: List[int] = []
         add_v: List[np.ndarray] = []
         add_i: List[int] = []
+        add_c: List[np.ndarray] = []
         for b in sorted(self._pend_vecs):
             add_b += [b] * len(self._pend_vecs[b])
             add_v += self._pend_vecs[b]
             add_i += self._pend_ids[b]
+            if self.pq is not None:
+                add_c += self._pend_codes.get(b, [])
         bucket_of = np.concatenate(
             [self.bucket_of, np.asarray(add_b, self.bucket_of.dtype)])
         order = np.argsort(bucket_of, kind="stable")
@@ -253,8 +422,12 @@ class IVFIndex:
             [self.vectors, np.stack(add_v)])[order]
         self.ids = np.concatenate(
             [self.ids, np.asarray(add_i, self.ids.dtype)])[order]
+        if self.pq is not None and self.codes is not None:
+            self.codes = np.concatenate(
+                [self.codes, np.stack(add_c)])[order]
         self._pend_vecs.clear()
         self._pend_ids.clear()
+        self._pend_codes.clear()
         self.pending_count = 0
 
     # -- kNN search -------------------------------------------------------------
@@ -266,7 +439,9 @@ class IVFIndex:
 
     def _gather_buckets(self, buckets: np.ndarray
                         ) -> Tuple[np.ndarray, np.ndarray]:
-        """Rows of the probed buckets, compacted slices + pending appends."""
+        """Float rows of the probed buckets, compacted slices + pending
+        appends (the float-scan view; ADC scans gather through
+        :meth:`_gather_codes` instead and never copy vectors)."""
         if len(buckets) == self.centroids.shape[0]:
             corpus, ids, _ = self._full_corpus()   # exact mode: no copy
             return corpus, ids
@@ -296,12 +471,13 @@ class IVFIndex:
         return self.search_many(queries, k, nprobe)
 
     def search_many(self, queries: np.ndarray, k: int,
-                    nprobe: Optional[int] = None, stats=None
+                    nprobe: Optional[int] = None, stats=None,
+                    mode: str = "auto", rerank: bool = True
                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Batched two-phase kNN over the whole query set.
 
         Phase 1: one centroid scoring + top-``nprobe`` for all queries.
-        Phase 2 picks the cheaper of two batched scan layouts:
+        Phase 2 picks a batched scan layout:
 
         * **signature groups** -- queries sharing a probe signature (the
           same bucket set) scan together: their buckets are gathered once
@@ -310,16 +486,33 @@ class IVFIndex:
           (Pallas kernel on TPU, fused XLA scan elsewhere).  Wins when
           queries cluster (few signatures) and always serves exact mode
           (nprobe=m is one signature).
-        * **masked dense scan** -- when the signatures are so scattered
-          that per-signature gathers would touch at least the whole table
-          (#signatures x nprobe >= m), ONE fused scan of the full corpus
-          with each query's non-probed buckets masked to -inf
+        * **masked dense scan** (float mode) -- when the signatures are so
+          scattered that per-signature gathers would touch at least the
+          whole table (#signatures x nprobe >= m), ONE fused scan of the
+          full corpus with each query's non-probed buckets masked to -inf
           (:func:`masked_scan_topk`).  Same candidate sets, one device
           call.
+        * **ADC + exact re-rank** (PQ mode) -- per-query score LUTs, an
+          asymmetric-distance top-k' scan of the probed buckets' uint8
+          codes through ``pq_adc_topk`` (k' = ``rerank_mult * k``), then an
+          exact re-rank of the k' candidates against the original float
+          vectors.  Returned scores are exact, so downstream similarity
+          thresholds are unaffected by quantization.
 
-        Positions with no candidate (probe set smaller than ``k``) hold
-        val=-inf / id=-1.  ``stats``, if given, receives the observed scan
-        throughput via ``record_knn_scan`` (cost-model feedback)."""
+        A single-query batch takes a host-side fast path that skips the
+        probe-signature grouping, block padding and device dispatch
+        entirely (the per-call overhead dominates one small scan).
+
+        ``mode`` is ``"auto"`` (consult ``stats.choose_knn_scan`` when
+        given, else ADC whenever PQ codebooks exist), ``"adc"`` or
+        ``"float"``.  ``rerank=False`` returns raw ADC scores/ids truncated
+        to ``k`` (recall instrumentation).  Positions with no candidate
+        (probe set smaller than ``k``) hold val=-inf / id=-1.  ``stats``,
+        if given, receives the observed scan throughput via
+        ``record_knn_scan`` / ``record_pq_scan`` (cost-model feedback)."""
+        if mode not in ("auto", "adc", "float"):
+            raise ValueError(f"unknown scan mode {mode!r}; "
+                             f"expected auto | adc | float")
         queries = np.asarray(queries, np.float32)
         qn = queries.shape[0]
         out_v = np.full((qn, k), -np.inf, np.float32)
@@ -328,6 +521,14 @@ class IVFIndex:
             return out_v, out_i
         m = self.centroids.shape[0]
         nprobe = min(nprobe or self.cfg.nprobe, m)
+        use_adc = self._use_adc(mode, stats, qn, k)
+        if qn == 1:
+            t0 = time.perf_counter()
+            rows_scanned = self._search_one(queries, k, nprobe, out_v, out_i,
+                                            use_adc, rerank)
+            self._note_scan(stats, time.perf_counter() - t0, rows_scanned,
+                            use_adc)
+            return out_v, out_i
         q = jnp.asarray(queries)
         cscores = pairwise_scores(q, jnp.asarray(self.centroids),
                                   self.cfg.metric)
@@ -336,18 +537,157 @@ class IVFIndex:
         probe = np.sort(np.asarray(probe), axis=1)
         sigs, inverse = np.unique(probe, axis=0, return_inverse=True)
         t0 = time.perf_counter()
-        if sigs.shape[0] > 1 and sigs.shape[0] * nprobe >= m:
+        if use_adc:
+            rows_scanned = self._scan_groups_pq(queries, sigs, inverse, k,
+                                                out_v, out_i, rerank)
+        elif sigs.shape[0] > 1 and sigs.shape[0] * nprobe >= m:
             rows_scanned = self._scan_dense(queries, probe, k,
                                             out_v, out_i)
         else:
             rows_scanned = self._scan_groups(queries, sigs, inverse, k,
                                              out_v, out_i)
-        dt = time.perf_counter() - t0
+        self._note_scan(stats, time.perf_counter() - t0, rows_scanned,
+                        use_adc)
+        return out_v, out_i
+
+    def _use_adc(self, mode: str, stats, qn: int, k: int) -> bool:
+        if self.pq is None or self.codes is None or mode == "float":
+            return False
+        if mode == "adc":
+            return True
+        if stats is not None:
+            return stats.choose_knn_scan(self, q=qn, k=k) == "adc"
+        return True
+
+    def _note_scan(self, stats, dt: float, rows_scanned: int,
+                   used_adc: bool) -> None:
         self.scan_rows += rows_scanned
         self.scan_time += dt
         if stats is not None and rows_scanned:
-            stats.record_knn_scan(dt, rows_scanned)
-        return out_v, out_i
+            if used_adc:
+                stats.record_pq_scan(dt, rows_scanned)
+            else:
+                stats.record_knn_scan(dt, rows_scanned)
+
+    def _norm_queries(self, queries: np.ndarray) -> np.ndarray:
+        """Cosine realizes as IP over unit vectors (stored rows are
+        normalized at build/insert); l2/ip pass through."""
+        if self.cfg.metric != "cosine":
+            return queries
+        return queries / np.maximum(
+            np.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
+
+    def _kprime(self, k_eff: int, n_real: int, rerank: bool) -> int:
+        """ADC candidate fanout: the re-rank stage reads this many rows."""
+        if not rerank:
+            return k_eff
+        return min(n_real, max(k_eff, self.cfg.rerank_mult * k_eff))
+
+    def _gather_codes(self, buckets: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 Optional[np.ndarray]]:
+        """ADC view of the probed buckets: (codes, ids, comp_rows,
+        pend_stack).  Only the uint8 codes are copied; original float rows
+        stay in place -- re-rank fetches just the k' candidates through
+        :meth:`_fetch_rows`.  Result positions < len(comp_rows) map to
+        compacted table rows ``comp_rows[pos]``; later positions map into
+        ``pend_stack[pos - len(comp_rows)]`` (uncompacted appends)."""
+        if len(buckets) == self.centroids.shape[0]:
+            # exact mode: identity row map, no table copy
+            comp_rows = np.arange(len(self.ids))
+            pend_sel = sorted(self._pend_vecs)
+            codes, ids = self.codes, self.ids
+        else:
+            segs = [self.bucket_slice(int(b)) for b in buckets]
+            comp_rows = (np.concatenate([np.arange(lo, hi)
+                                         for lo, hi in segs])
+                         if segs else np.empty(0, np.int64))
+            pend_sel = [int(b) for b in buckets if int(b) in self._pend_vecs]
+            codes = self.codes[comp_rows]
+            ids = self.ids[comp_rows]
+        pend_v: List[np.ndarray] = []
+        pend_i: List[int] = []
+        pend_c: List[np.ndarray] = []
+        for b in pend_sel:
+            pend_v += self._pend_vecs[b]
+            pend_i += self._pend_ids[b]
+            pend_c += self._pend_codes.get(b, [])
+        pend_stack = None
+        if pend_v:
+            pend_stack = np.stack(pend_v)
+            codes = np.concatenate([codes, np.stack(pend_c)])
+            ids = np.concatenate([ids, np.asarray(pend_i, ids.dtype)])
+        return codes, ids, comp_rows, pend_stack
+
+    def _fetch_rows(self, comp_rows: np.ndarray,
+                    pend_stack: Optional[np.ndarray],
+                    idx: np.ndarray) -> np.ndarray:
+        """Original float rows of ADC candidates: [..., k'] local positions
+        -> [..., k', d] vectors (the re-rank's only float traffic)."""
+        nc = len(comp_rows)
+        flat = idx.reshape(-1)
+        out = np.empty((flat.size, self.vectors.shape[1]), np.float32)
+        is_comp = flat < nc
+        out[is_comp] = self.vectors[comp_rows[flat[is_comp]]]
+        if pend_stack is not None and not is_comp.all():
+            out[~is_comp] = pend_stack[flat[~is_comp] - nc]
+        return out.reshape(*idx.shape, -1)
+
+    def _search_one(self, queries: np.ndarray, k: int, nprobe: int,
+                    out_v: np.ndarray, out_i: np.ndarray,
+                    use_adc: bool, rerank: bool) -> int:
+        """Single-query fast path: numpy end-to-end.  One centroid scoring,
+        one bucket gather, one scan -- no signature grouping, no block
+        padding, no device round-trip.  Candidate order matches the batched
+        path (descending score, ties to the lower row index)."""
+        m = self.centroids.shape[0]
+        cscores = _pairwise_scores_np(queries, self.centroids,
+                                      self.cfg.metric)[0]
+        if nprobe >= m:
+            buckets = np.arange(m)
+        else:
+            buckets = np.sort(np.argpartition(-cscores, nprobe - 1)[:nprobe])
+        if use_adc:
+            codes, ids, comp_rows, pend_stack = self._gather_codes(buckets)
+            n_real = codes.shape[0]
+            if n_real == 0:
+                return 0
+            k_eff = min(k, n_real)
+            lut = self.pq.luts(self._norm_queries(queries))[0]  # [m, ksub]
+            s = lut[np.arange(self.pq.m)[None, :],
+                    codes.astype(np.int64)].sum(axis=1)
+            kprime = self._kprime(k_eff, n_real, rerank)
+            # sort candidate positions ascending so score ties resolve to
+            # the lower row index (argpartition's order is arbitrary; the
+            # batched path's lax.top_k is stable)
+            cand = (np.sort(np.argpartition(-s, kprime - 1)[:kprime])
+                    if kprime < n_real else np.arange(n_real))
+            if rerank:
+                vecs = self._fetch_rows(comp_rows, pend_stack, cand)
+                exact = _exact_scores_np(queries, vecs[None],
+                                         self.cfg.metric)[0]
+                order = _stable_topk_desc(exact, k_eff)
+                out_v[0, :k_eff] = exact[order]
+            else:
+                adc = s[cand]
+                order = _stable_topk_desc(adc, k_eff)
+                out_v[0, :k_eff] = adc[order]
+            out_i[0, :k_eff] = ids[cand[order]]
+            return n_real
+        corpus, ids = self._gather_buckets(buckets)
+        n_real = corpus.shape[0]
+        if n_real == 0:
+            return 0
+        k_eff = min(k, n_real)
+        s = _pairwise_scores_np(queries, corpus, self.cfg.metric)[0]
+        # ascending candidate positions: ties resolve to the lower row
+        # index, matching the batched path's lax.top_k order
+        top = (np.sort(np.argpartition(-s, k_eff - 1)[:k_eff])
+               if k_eff < n_real else np.arange(n_real))
+        order = top[_stable_topk_desc(s[top], k_eff)]
+        out_v[0, :k_eff] = s[order]
+        out_i[0, :k_eff] = ids[order]
+        return n_real
 
     def _scan_groups(self, queries: np.ndarray, sigs: np.ndarray,
                      inverse: np.ndarray, k: int,
@@ -372,6 +712,47 @@ class IVFIndex:
             out_v[qsel[:, None], np.arange(k_eff)[None, :]] = np.asarray(vals)
             out_i[qsel[:, None], np.arange(k_eff)[None, :]] = \
                 ids[np.asarray(idx)]
+            rows_scanned += n_real * len(qsel)
+        return rows_scanned
+
+    def _scan_groups_pq(self, queries: np.ndarray, sigs: np.ndarray,
+                        inverse: np.ndarray, k: int,
+                        out_v: np.ndarray, out_i: np.ndarray,
+                        rerank: bool) -> int:
+        """PQ two-stage scan, one dispatch per distinct probe signature:
+        ADC top-k' over the gathered uint8 codes (``pq_adc_topk``: Pallas
+        kernel on TPU, fused XLA gathers elsewhere), then exact re-rank of
+        the k' candidates against the original float rows."""
+        luts = self.pq.luts(self._norm_queries(queries))     # [Q, m, ksub]
+        rows_scanned = 0
+        for g in range(sigs.shape[0]):
+            qsel = np.nonzero(inverse == g)[0]
+            codes, ids, comp_rows, pend_stack = self._gather_codes(sigs[g])
+            n_real = codes.shape[0]
+            if n_real == 0:
+                continue
+            k_eff = min(k, n_real)
+            kprime = self._kprime(k_eff, n_real, rerank)
+            vals, idx = pq_adc_topk(
+                jnp.asarray(luts[qsel]), jnp.asarray(codes), kprime,
+                block_n=self.cfg.block_n)
+            idx = np.asarray(idx).astype(np.int64)           # [Qg, k']
+            if rerank:
+                cand = self._fetch_rows(comp_rows, pend_stack,
+                                        idx)                 # [Qg, k', d]
+                exact = _exact_scores_np(queries[qsel], cand,
+                                         self.cfg.metric)    # [Qg, k']
+                order = np.argsort(-exact, axis=1, kind="stable")[:, :k_eff]
+                rows = np.arange(len(qsel))[:, None]
+                out_v[qsel[:, None], np.arange(k_eff)[None, :]] = \
+                    exact[rows, order]
+                out_i[qsel[:, None], np.arange(k_eff)[None, :]] = \
+                    ids[idx[rows, order]]
+            else:
+                out_v[qsel[:, None], np.arange(k_eff)[None, :]] = \
+                    np.asarray(vals)[:, :k_eff]
+                out_i[qsel[:, None], np.arange(k_eff)[None, :]] = \
+                    ids[idx[:, :k_eff]]
             rows_scanned += n_real * len(qsel)
         return rows_scanned
 
@@ -420,28 +801,76 @@ class IVFIndex:
 
     def search_exact(self, queries: np.ndarray, k: int
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """Brute-force ground truth (recall denominator): the batched scan
-        with every bucket probed, truncated to the real candidate count."""
-        v, i = self.search_many(queries, k, nprobe=self.centroids.shape[0])
+        """Brute-force ground truth (recall denominator): the batched
+        *float* scan with every bucket probed, truncated to the real
+        candidate count.  Always float mode -- the truth must not be
+        quantized."""
+        v, i = self.search_many(queries, k, nprobe=self.centroids.shape[0],
+                                mode="float")
         kk = min(k, self.n_total)
         return v[:, :kk], i[:, :kk]
 
+    def retrain_pq(self, stats=None, seed: int = 0) -> None:
+        """Re-train the codebooks over the current corpus and re-encode
+        every row (codebook drift after sustained dynamic inserts).  Bumps
+        the statistics epoch when ``stats`` is given, so cached plans
+        re-optimize against the fresh index."""
+        if self.cfg.pq_m <= 0:
+            return
+        self.compact()
+        self.pq = PQCodebook.train(
+            self.vectors, self.cfg.pq_m, bits=self.cfg.pq_bits,
+            iters=self.cfg.pq_kmeans_iters,
+            metric="ip" if self.cfg.metric in ("ip", "cosine") else "l2",
+            seed=seed)
+        self.codes = self.pq.encode(self.vectors)
+        if stats is not None:
+            stats.note_index_rebuild("pq_retrain")
+
     def shard(self, n_shards: int) -> List["IVFIndex"]:
         """Split bucket contents round-robin across shards (distributed layout:
-        centroids replicated, contents sharded)."""
+        centroids + codebooks replicated, contents sharded)."""
         self.compact()
         shards = []
         for s in range(n_shards):
             sel = (np.arange(len(self.ids)) % n_shards) == s
             shards.append(IVFIndex(self.cfg, self.centroids,
                                    self.bucket_of[sel], self.vectors[sel],
-                                   self.ids[sel], serial=self.serial))
+                                   self.ids[sel], serial=self.serial,
+                                   pq=self.pq,
+                                   codes=(self.codes[sel]
+                                          if self.codes is not None
+                                          else None)))
         return shards
 
 
+def _exact_scores_np(queries: np.ndarray, cand: np.ndarray, metric: str
+                     ) -> np.ndarray:
+    """Re-rank scoring: [Q, d] x [Q, k', d] -> [Q, k'], higher is better."""
+    queries = np.asarray(queries, np.float32)
+    cand = np.asarray(cand, np.float32)
+    if metric == "ip":
+        return np.einsum("qd,qkd->qk", queries, cand, dtype=np.float32)
+    if metric == "cosine":
+        qn = queries / np.maximum(
+            np.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
+        cn = cand / np.maximum(
+            np.linalg.norm(cand, axis=-1, keepdims=True), 1e-9)
+        return np.einsum("qd,qkd->qk", qn, cn, dtype=np.float32)
+    diff = cand - queries[:, None, :]
+    return -np.sum(diff * diff, axis=-1)
+
+
+def _stable_topk_desc(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest scores, ties to the lower index (the
+    ``jax.lax.top_k`` order the batched paths produce)."""
+    return np.argsort(-scores, kind="stable")[:k]
+
+
 def recall_at_k(index: IVFIndex, queries: np.ndarray, k: int,
-                nprobe: Optional[int] = None) -> float:
-    _, approx = index.search(queries, k, nprobe)
+                nprobe: Optional[int] = None,
+                rerank: bool = True) -> float:
+    _, approx = index.search_many(queries, k, nprobe, rerank=rerank)
     _, exact = index.search_exact(queries, k)
     hits = 0
     for a, e in zip(approx, exact):

@@ -129,6 +129,10 @@ class RelationshipStore:
         self._out: Optional[Tuple[np.ndarray, np.ndarray]] = None  # ptr, (eid)
         self._in: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._n_nodes = 0
+        # edge columns as arrays, cached alongside the CSR build: expand is
+        # called per chunk, and re-converting the Python lists would cost
+        # O(E) per call (invalidated in add(), same as the CSR)
+        self._arr: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
 
     def add(self, src: int, tgt: int, type_id: int) -> int:
         rid = len(self.src)
@@ -137,14 +141,14 @@ class RelationshipStore:
         self.type_id.append(type_id)
         self._n_nodes = max(self._n_nodes, src + 1, tgt + 1)
         self._csr_dirty = True
+        self._arr = None
         return rid
 
     def __len__(self) -> int:
         return len(self.src)
 
     def _build_csr(self, n_nodes: int) -> None:
-        src = np.asarray(self.src, np.int64)
-        tgt = np.asarray(self.tgt, np.int64)
+        src, tgt, _tids = self._edge_arrays()
         eids = np.arange(len(src))
 
         def csr(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -173,12 +177,17 @@ class RelationshipStore:
         ptr, idx = self._in
         return idx[ptr[node]:ptr[node + 1]] if node + 1 < len(ptr) else np.array([], np.int64)
 
+    def _edge_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, tgt, type_id) as arrays, cached until the next add()."""
+        if self._arr is None:
+            self._arr = (np.asarray(self.src, np.int64),
+                         np.asarray(self.tgt, np.int64),
+                         np.asarray(self.type_id, np.int32))
+        return self._arr
+
     def arrays(self) -> Dict[str, np.ndarray]:
-        return {
-            "src": np.asarray(self.src, np.int64),
-            "tgt": np.asarray(self.tgt, np.int64),
-            "type_id": np.asarray(self.type_id, np.int32),
-        }
+        src, tgt, tid = self._edge_arrays()
+        return {"src": src, "tgt": tgt, "type_id": tid}
 
     def expand_batch(self, nodes: np.ndarray, type_id: Optional[int],
                      direction: str = "out") -> Tuple[np.ndarray, np.ndarray]:
@@ -189,8 +198,8 @@ class RelationshipStore:
         """
         self.ensure_csr(self._n_nodes)
         ptr, idx = self._out if direction == "out" else self._in
-        src_arr = np.asarray(self.tgt if direction == "out" else self.src, np.int64)
-        tids = np.asarray(self.type_id, np.int32)
+        src_col, tgt_col, tids = self._edge_arrays()
+        src_arr = tgt_col if direction == "out" else src_col
         nodes = np.asarray(nodes, np.int64)
         nodes_c = np.clip(nodes, 0, len(ptr) - 2)
         starts, ends = ptr[nodes_c], ptr[nodes_c + 1]

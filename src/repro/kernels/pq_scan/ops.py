@@ -1,0 +1,76 @@
+"""Dispatching wrapper: Pallas ADC kernel on TPU, jnp oracle elsewhere.
+
+The kernel path is exact for any k (per-tile top-k >= global contribution of
+that tile), so parity with ref.py is bitwise on candidate ids (the LUT sums
+are the same fp32 adds in a different order).  Large k' (> 64) falls back to
+the XLA path: the L max-extract sweeps stop paying for themselves.
+
+Code tables are rarely block_n multiples, so the wrapper pads the codes up
+to one and passes ``n_valid`` through: padded rows are masked to ``NEG``
+inside the kernel (or to -inf on the XLA path) and can never appear in the
+returned top-k.  Callers may also pre-pad for shape stability and pass their
+own ``n_valid``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_scan.pq_scan import pq_adc_topk_pallas
+
+_KERNEL_MAX_K = 64
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _pq_topk_xla(luts: jnp.ndarray, codes: jnp.ndarray, n_valid: jnp.ndarray,
+                 k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Jitted XLA twin of the kernel: fused LUT gathers + padding mask +
+    top-k.  Scores accumulate in [Q, N] layout (one column gather per
+    subspace) so the top-k runs over contiguous rows -- the [N, Q]
+    transpose layout costs ~8x here.  ``n_valid`` is traced, so every
+    block-padded code-table shape compiles once and serves any padding
+    amount."""
+    qn, m, _ksub = luts.shape
+    codes = codes.astype(jnp.int32)
+    s = jnp.zeros((qn, codes.shape[0]), jnp.float32)
+    for j in range(m):                      # static unroll: M is small
+        s = s + luts[:, j, :][:, codes[:, j]]
+    cols = jnp.arange(codes.shape[0])[None, :]
+    s = jnp.where(cols >= n_valid, -jnp.inf, s)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def pq_adc_topk(luts: jnp.ndarray, codes: jnp.ndarray, k: int,
+                block_n: int = 512, n_valid: int = -1,
+                force_pallas: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[Q, M, K] x [N, M] -> (vals [Q, k'], ids [Q, k']), k' = min(k, n_valid).
+
+    Rows at positions >= ``n_valid`` (default: all of ``codes``) are treated
+    as padding and excluded from the result; returned indices are always
+    < ``n_valid``.
+    """
+    n = codes.shape[0]
+    if n_valid < 0 or n_valid > n:
+        n_valid = n
+    k = min(k, n_valid)
+    if k <= 0:
+        return (jnp.zeros((luts.shape[0], 0), jnp.float32),
+                jnp.zeros((luts.shape[0], 0), jnp.int32))
+    use_kernel = (force_pallas or _on_tpu()) and k <= _KERNEL_MAX_K
+    if use_kernel:
+        pad = (-n) % block_n
+        if pad:
+            codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        return pq_adc_topk_pallas(luts, codes, k, block_n=block_n,
+                                  n_valid=n_valid,
+                                  interpret=not _on_tpu())
+    return _pq_topk_xla(luts, codes, jnp.int32(n_valid), k)

@@ -1,0 +1,100 @@
+"""PQ ADC scan Pallas kernel: fused LUT-sum + per-tile top-L (TPU).
+
+The bandwidth-bound half of the PQ kNN hot loop: corpus *codes* (uint8, M
+bytes per row instead of 4d float bytes) stream HBM -> VMEM in block_n
+tiles; each grid step turns its code tile into a one-hot [BN, M*K] matrix
+in registers (an iota compare -- no gather, which the MXU path cannot do
+cheaply) and contracts it against the flattened query LUTs [Q, M*K] with
+ONE MXU matmul, yielding the [Q, BN] ADC score tile.  Tile-local top-L then
+runs the same L vectorized max/mask sweeps as ``ivf_scan`` -- no
+data-dependent control flow, no cross-tile traffic -- and a tiny jnp
+epilogue merges the [n_tiles, L] partials.
+
+VMEM working set per grid step (Q<=128, BN=512, M=8, K=256, fp32):
+  luts 128x2048 (1 MB) + codes 512x8 (16 kB int32) + onehot 512x2048 (4 MB)
+  + scores 128x512 (256 kB)  -> comfortably under the ~16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+
+
+def _pq_kernel(luts_ref, codes_ref, vals_ref, idx_ref, *, topl: int,
+               block_n: int, ksub: int, n_valid: int, n_total: int):
+    luts = luts_ref[...]                                  # [Q, M*K] f32
+    codes = codes_ref[...].astype(jnp.int32)              # [BN, M]
+    bn, m = codes.shape
+    # one-hot the codes: onehot[n, j*K + c] = (codes[n, j] == c).  An iota
+    # compare keeps everything dense/vectorized -- the TPU has no cheap
+    # per-lane gather, but a [Q, M*K] x [M*K, BN] contraction is one MXU pass.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, m, ksub), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+    onehot = onehot.reshape(bn, m * ksub)
+    s = jax.lax.dot_general(luts, onehot, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, BN]
+    base = pl.program_id(0) * block_n
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if n_valid < n_total:
+        # rows past n_valid are padding (code table padded up to a block_n
+        # multiple by the dispatcher): mask them out of every sweep
+        s = jnp.where(cols + base >= n_valid, NEG, s)
+    for l in range(topl):
+        mx = jnp.max(s, axis=-1)                                  # [Q]
+        a = jnp.argmax(s, axis=-1).astype(jnp.int32)              # [Q]
+        vals_ref[:, l] = mx
+        idx_ref[:, l] = a + base
+        s = jnp.where(cols == a[:, None], NEG, s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "n_valid", "interpret"))
+def pq_adc_topk_pallas(luts: jnp.ndarray, codes: jnp.ndarray, k: int,
+                       block_n: int = 512, n_valid: int = -1,
+                       interpret: bool = True
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[Q, M, K] x [N, M] -> (vals [Q, k], ids [Q, k]); N % block_n == 0.
+
+    ``n_valid`` (< N) marks the tail rows as padding: their scores are pinned
+    to ``NEG`` inside the kernel, so the dispatcher can pad any code table up
+    to a block_n multiple without padded rows ever reaching the top-k."""
+    qn, m, ksub = luts.shape
+    n = codes.shape[0]
+    assert codes.shape[1] == m, (codes.shape, m)
+    assert n % block_n == 0, (n, block_n)
+    if n_valid < 0:
+        n_valid = n
+    assert k <= n_valid, (k, n_valid)
+    n_tiles = n // block_n
+    luts_flat = luts.astype(jnp.float32).reshape(qn, m * ksub)
+    codes = codes.astype(jnp.int32)
+
+    kernel = functools.partial(_pq_kernel, topl=k, block_n=block_n,
+                               ksub=ksub, n_valid=n_valid, n_total=n)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((qn, m * ksub), lambda i: (0, 0)),  # luts: resident
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),    # code tile
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, k), lambda i: (0, i)),         # per-tile topL
+            pl.BlockSpec((qn, k), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, n_tiles * k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, n_tiles * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts_flat, codes)
+
+    # epilogue: merge per-tile partials (tiny)
+    mv, mi = jax.lax.top_k(vals, k)
+    return mv, jnp.take_along_axis(idx, mi, axis=1)

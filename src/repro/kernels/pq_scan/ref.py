@@ -1,0 +1,44 @@
+"""Pure-numpy oracle for the PQ ADC scan kernel: LUT-sum scores + top-k.
+
+Asymmetric distance computation (ADC): the corpus lives as uint8 PQ codes
+``codes[N, M]`` (M subspaces, K = 2**bits centers each) and each query is a
+per-subspace lookup table ``luts[Q, M, K]`` of *scores* (higher = better;
+for L2 the LUT holds negative squared sub-distances, for IP the sub dot
+products).  The scan is then M table gathers + an add per corpus row --
+no floats from the corpus are ever touched.
+
+Tie-breaking matches ``jax.lax.top_k`` (equal scores -> lower row index),
+so candidate ids are byte-comparable against the kernel and the XLA twin.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def pq_scores_ref(luts, codes) -> np.ndarray:
+    """[Q, M, K] x [N, M] -> [Q, N]: s[q, n] = sum_m luts[q, m, codes[n, m]]."""
+    luts = np.asarray(luts, np.float32)
+    codes = np.asarray(codes).astype(np.int64)
+    q, m, _k = luts.shape
+    s = np.zeros((q, codes.shape[0]), np.float32)
+    for j in range(m):
+        s += luts[:, j, :][:, codes[:, j]]
+    return s
+
+
+def pq_adc_topk_ref(luts, codes, k: int, n_valid: int = -1
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """[Q, M, K] x [N, M] -> (scores [Q, k], indices [Q, k]), higher = better.
+
+    ``n_valid`` (< N) masks trailing padding rows to -inf, mirroring the
+    kernel's contract so the dispatcher can pad code tables freely."""
+    s = pq_scores_ref(luts, codes)
+    n = s.shape[1]
+    if 0 <= n_valid < n:
+        s[:, n_valid:] = -np.inf
+    # stable descending sort == lax.top_k tie order (lower index first)
+    idx = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(s, idx, axis=1)
+    return vals.astype(np.float32), idx.astype(np.int32)

@@ -318,3 +318,88 @@ def test_busy_queue_does_not_coalesce():
     assert cur.context.phi_coalesced == 0
     b1.result(timeout=10)
     b2.result(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# adaptive prefetch depth
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_prefetch_cold_start_uses_config_default():
+    """No observed φ speed yet: the configured depth stands."""
+    db = make_pet_db(16, prefetch_depth=3)
+    s = db.session(batch_rows=4)
+    cur = s.run("MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name")
+    cur.fetchall()
+    assert cur.context.prefetch_depth_used == 3
+
+
+def test_adaptive_prefetch_widens_for_slow_phi():
+    """A slow extractor over a fast structured scan wants the whole
+    bounded-queue window in flight; the second run sees the observed speed
+    and widens the window to the queue capacity."""
+    db = make_pet_db(32, extractor=latency_extractor(16, 0.002),
+                     prefetch_depth=1, max_inflight=4)
+    text = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    s = db.session(batch_rows=4)
+    s.run(text).fetchall()                       # observe φ speed
+    assert "semantic_filter:animal" in db.stats.speeds
+    cur = s.run(text)
+    cur.fetchall()
+    assert cur.context.prefetch_depth_used == 4  # clamped to queue capacity
+
+
+def test_adaptive_prefetch_respects_sync_config():
+    """A deployment that disabled prefetch (config prefetch_depth=0) stays
+    synchronous -- the adaptive tuner never re-enables async dispatch."""
+    db = make_pet_db(16, extractor=latency_extractor(16, 0.002),
+                     prefetch_depth=0, max_inflight=4)
+    text = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    s = db.session(batch_rows=4)
+    s.run(text).fetchall()                       # observe slow φ speed
+    cur = s.run(text)
+    cur.fetchall()
+    assert cur.context.prefetch_depth_used == 0     # sync branch taken
+
+
+def test_adaptive_prefetch_narrows_for_cheap_phi():
+    """An observed-cheap φ (cached rows, fast model) should not queue a
+    deep window it may never need."""
+    db = make_pet_db(16, prefetch_depth=4, max_inflight=4)
+    text = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    s = db.session(batch_rows=4)
+    s.run(text).fetchall()
+    # second run: rows are cached, so the recorded per-row speed collapses
+    s.run(text).fetchall()
+    cur = s.run(text)
+    cur.fetchall()
+    assert cur.context.prefetch_depth_used is not None
+    assert 1 <= cur.context.prefetch_depth_used <= 4
+
+
+def test_explicit_prefetch_depth_overrides_adaptive():
+    db = make_pet_db(16, extractor=latency_extractor(16, 0.002),
+                     max_inflight=4)
+    text = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    db.session(batch_rows=4).run(text).fetchall()  # observe slow φ
+    s = db.session(batch_rows=4, prefetch_depth=1)
+    cur = s.run(text)
+    cur.fetchall()
+    assert cur.context.prefetch_depth_used == 1    # override wins
+
+
+def test_suggest_prefetch_depth_unit():
+    from repro.core import logical_plan as lp
+    from repro.core.cost_model import StatisticsService
+    from repro.core.cypherplus import Compare, Literal, Prop, SubProp
+    stats = StatisticsService()
+    pred = Compare("=", SubProp(Prop("p", "photo"), "animal"),
+                   Literal("cat"))
+    op = lp.SemanticFilter(lp.NodeByLabelScan("p", "Pet"), pred, pred_id=0)
+    cap = 4
+    assert stats.suggest_prefetch_depth(op, cap) is None   # no observation
+    stats.record("semantic_filter:animal", total_time=1.0, n_rows=10)
+    assert stats.suggest_prefetch_depth(op, cap) == cap    # slow φ -> cap
+    stats.speeds["semantic_filter:animal"] = \
+        stats.cfg.default_structured_speed / 2              # cheap φ -> 1
+    assert stats.suggest_prefetch_depth(op, cap) == 1

@@ -32,6 +32,28 @@ def test_expand_type_filter():
     assert nbrs.tolist() == [b]
 
 
+def test_expand_batch_caches_edge_arrays():
+    """The edge columns are converted to arrays once per CSR build, not
+    O(E) per expand call; add() invalidates the cache."""
+    g = GraphStore()
+    a, b, c = (g.add_node("N") for _ in range(3))
+    g.add_relationship(a, b, "knows")
+    g.add_relationship(b, c, "knows")
+    g.rels.expand_batch(np.array([a]), None, "out")
+    arr1 = g.rels._arr
+    assert arr1 is not None
+    g.rels.expand_batch(np.array([b]), None, "out")
+    assert g.rels._arr is arr1               # reused, not rebuilt
+    # a new edge invalidates the cache and is visible to the next expand
+    g.add_relationship(a, c, "likes")
+    assert g.rels._arr is None
+    row, nbrs = g.rels.expand_batch(np.array([a]), None, "out")
+    assert set(nbrs.tolist()) == {b, c}
+    tid = g.rel_types.id_of("likes")
+    _, nbrs = g.rels.expand_batch(np.array([a]), tid, "out")
+    assert nbrs.tolist() == [c]
+
+
 def test_property_columns():
     g = GraphStore()
     a = g.add_node("P", name="x", age=30)

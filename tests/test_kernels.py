@@ -11,6 +11,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ivf_scan.ivf_scan import ivf_scan_topk_pallas
 from repro.kernels.ivf_scan.ops import ivf_scan_topk
 from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+from repro.kernels.pq_scan.ops import pq_adc_topk
+from repro.kernels.pq_scan.pq_scan import pq_adc_topk_pallas
+from repro.kernels.pq_scan.ref import pq_adc_topk_ref, pq_scores_ref
 
 RNG = np.random.default_rng(0)
 
@@ -84,6 +87,79 @@ def test_ivf_pallas_n_valid_masks_tail():
     v1, i1 = ivf_scan_topk_pallas(q, c_pad, 5, metric="l2", block_n=512,
                                   n_valid=n_real, interpret=True)
     v2, i2 = ivf_scan_topk_ref(q, c, 5, "l2")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# -- pq_scan (ADC) -------------------------------------------------------------
+
+
+def _pq_inputs(qn, n, m, ksub):
+    luts = jnp.asarray(RNG.standard_normal((qn, m, ksub)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, ksub, (n, m)), jnp.int32)
+    return luts, codes
+
+
+@pytest.mark.parametrize("qn,n,m,ksub,k", [(1, 512, 4, 16, 1),
+                                           (4, 1024, 8, 256, 8),
+                                           (16, 2048, 16, 256, 16),
+                                           (8, 512, 8, 64, 32)])
+def test_pq_scan_shapes(qn, n, m, ksub, k):
+    luts, codes = _pq_inputs(qn, n, m, ksub)
+    v1, i1 = pq_adc_topk_pallas(luts, codes, k, interpret=True)
+    v2, i2 = pq_adc_topk_ref(luts, codes, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_pq_scores_match_manual_gather():
+    luts, codes = _pq_inputs(3, 200, 4, 16)
+    s = np.asarray(pq_scores_ref(luts, codes))
+    ln, cn = np.asarray(luts), np.asarray(codes)
+    manual = np.zeros((3, 200), np.float32)
+    for j in range(4):
+        manual += ln[:, j, cn[:, j]]
+    np.testing.assert_allclose(s, manual, rtol=1e-5, atol=1e-5)
+
+
+def test_pq_ops_fallback_large_k():
+    luts, codes = _pq_inputs(2, 1024, 4, 16)
+    v, i = pq_adc_topk(luts, codes, k=500)     # falls back to XLA path
+    v2, i2 = pq_adc_topk_ref(luts, codes, 500)
+    assert np.array_equal(np.asarray(i), np.asarray(i2))
+
+
+@pytest.mark.parametrize("n", [100, 513, 777, 1500])
+def test_pq_ops_pads_to_kernel(n):
+    """n % block_n != 0 must still hit the kernel: the wrapper pads the
+    code table and masks the padding via n_valid, parity with the oracle."""
+    luts, codes = _pq_inputs(4, n, 8, 256)
+    v1, i1 = pq_adc_topk(luts, codes, 8, force_pallas=True)
+    v2, i2 = pq_adc_topk_ref(luts, codes, 8)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    assert int(np.max(np.asarray(i1))) < n     # padding never surfaces
+    # the oracle's own n_valid contract: padded codes + mask == truncation
+    pad = (-n) % 512
+    c_pad = jnp.pad(codes, ((0, pad), (0, 0)))
+    v3, i3 = pq_adc_topk_ref(luts, c_pad, 8, n_valid=n)
+    np.testing.assert_allclose(np.asarray(v3), np.asarray(v2),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(i3), np.asarray(i2))
+
+
+def test_pq_pallas_n_valid_masks_tail():
+    """The kernel's n_valid contract: a pre-padded code table scores only
+    its real prefix, matching the oracle on the truncation."""
+    n_real, n_pad = 700, 1024
+    luts, codes = _pq_inputs(3, n_real, 4, 16)
+    c_pad = jnp.pad(codes, ((0, n_pad - n_real), (0, 0)))
+    v1, i1 = pq_adc_topk_pallas(luts, c_pad, 5, block_n=512,
+                                n_valid=n_real, interpret=True)
+    v2, i2 = pq_adc_topk_ref(luts, codes, 5)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
                                rtol=1e-4, atol=1e-4)
     assert np.array_equal(np.asarray(i1), np.asarray(i2))

@@ -1,0 +1,308 @@
+"""IVF-PQ mode: codebooks, ADC scan + exact re-rank, dynamic insert, cost
+model integration (paper §VI-B2 extended with product-quantized storage)."""
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core.cost_model import StatisticsService
+from repro.core.vector_index import (
+    IVFIndex,
+    PQCodebook,
+    recall_at_k,
+)
+from repro.data.synthetic_graph import sift_like_vectors
+
+
+def pq_cfg(dim, **kw):
+    base = dict(dim=dim, metric="l2", vectors_per_bucket=250, min_buckets=8,
+                nprobe=6, kmeans_iters=4, pq_m=8, pq_bits=8, rerank_mult=8)
+    base.update(kw)
+    return VectorIndexConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def pq_index():
+    vecs = sift_like_vectors(4000, dim=32, n_clusters=16, seed=1)
+    return IVFIndex.build(vecs, cfg=pq_cfg(32), seed=0)
+
+
+# -- codebooks ----------------------------------------------------------------
+
+
+def test_codebook_roundtrip_error_bound():
+    """encode->decode reconstruction error is a small fraction of the data
+    variance (the quantizer actually learned the clusters)."""
+    vecs = sift_like_vectors(2000, dim=32, n_clusters=16, seed=3)
+    pq = PQCodebook.train(vecs, m=8, bits=8, iters=6, seed=0)
+    codes = pq.encode(vecs)
+    assert codes.shape == (2000, 8) and codes.dtype == np.uint8
+    rec = pq.decode(codes)
+    assert rec.shape == vecs.shape
+    mse = float(np.mean((rec - vecs) ** 2))
+    assert mse / float(vecs.var()) < 0.1, mse / float(vecs.var())
+
+
+def test_codebook_luts_match_bruteforce():
+    """ADC identity: sum of LUT entries at a row's codes == the score of
+    the query against that row's *reconstruction*."""
+    rng = np.random.default_rng(4)
+    vecs = rng.standard_normal((300, 16)).astype(np.float32)
+    pq = PQCodebook.train(vecs, m=4, bits=4, iters=4, seed=0)
+    codes = pq.encode(vecs)
+    q = rng.standard_normal((5, 16)).astype(np.float32)
+    luts = pq.luts(q)                              # [5, 4, 16]
+    adc = luts[:, np.arange(4)[None, :], codes.astype(np.int64)].sum(axis=2)
+    rec = pq.decode(codes)
+    exact = -((q[:, None, :] - rec[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(adc, exact, rtol=1e-3, atol=1e-3)
+
+
+def test_codebook_dim_not_divisible_raises():
+    vecs = np.zeros((32, 30), np.float32)
+    with pytest.raises(ValueError):
+        PQCodebook.train(vecs, m=8)
+
+
+def test_codebook_bits_over_uint8_raises():
+    vecs = np.zeros((32, 16), np.float32)
+    with pytest.raises(ValueError):
+        PQCodebook.train(vecs, m=4, bits=9)   # would wrap uint8 codes
+
+
+# -- recall -------------------------------------------------------------------
+
+
+def test_recall_with_rerank(pq_index):
+    """Acceptance bar: recall@10 >= 0.95 after exact re-rank on a
+    clustered corpus, and the re-rank is doing real work (raw ADC top-k
+    recalls strictly less)."""
+    rng = np.random.default_rng(2)
+    queries = pq_index.vectors[rng.choice(4000, 32)] + \
+        rng.standard_normal((32, 32)).astype(np.float32) * 0.01
+    r_rerank = recall_at_k(pq_index, queries, 10, nprobe=6)
+    r_raw = recall_at_k(pq_index, queries, 10, nprobe=6, rerank=False)
+    assert r_rerank >= 0.95, r_rerank
+    assert r_rerank >= r_raw
+
+
+def test_rerank_scores_are_exact(pq_index):
+    """Returned values come from the float re-rank, not the quantized
+    scan: every (query, id) score equals the true metric score."""
+    rng = np.random.default_rng(5)
+    queries = pq_index.vectors[rng.choice(4000, 8)].copy()
+    vals, ids = pq_index.search_many(queries, 5, nprobe=6)
+    for qi in range(8):
+        for j in range(5):
+            if ids[qi, j] < 0:
+                continue
+            row = pq_index.vectors[np.nonzero(pq_index.ids == ids[qi, j])[0][0]]
+            true = -float(((queries[qi] - row) ** 2).sum())
+            assert vals[qi, j] == pytest.approx(true, rel=1e-4, abs=1e-4)
+
+
+def test_search_exact_ignores_pq(pq_index):
+    """Ground truth stays float even on a PQ index (mode='float')."""
+    rng = np.random.default_rng(6)
+    queries = rng.standard_normal((4, 32)).astype(np.float32)
+    v, i = pq_index.search_exact(queries, 3)
+    # brute force over the raw vectors
+    s = -((queries[:, None, :] - pq_index.vectors[None]) ** 2).sum(-1)
+    expect = pq_index.ids[np.argsort(-s, axis=1, kind="stable")[:, :3]]
+    assert np.array_equal(i, expect)
+
+
+def test_unknown_mode_raises(pq_index):
+    with pytest.raises(ValueError):
+        pq_index.search_many(pq_index.vectors[:1], 1, mode="flat")  # typo
+
+
+def test_mode_override_matrix(pq_index):
+    """mode='float' on a PQ index equals a flat scan; mode='adc' engages
+    the two-stage path; both return the same top-1 on easy queries."""
+    rng = np.random.default_rng(7)
+    queries = pq_index.vectors[rng.choice(4000, 16)].copy()
+    v_f, i_f = pq_index.search_many(queries, 1, nprobe=6, mode="float")
+    v_a, i_a = pq_index.search_many(queries, 1, nprobe=6, mode="adc")
+    assert np.array_equal(i_f[:, 0], i_a[:, 0])
+
+
+# -- dynamic insert -----------------------------------------------------------
+
+
+def test_insert_then_search_uncompacted_pq():
+    """Uncompacted PQ buffer rows participate in ADC probe + exact-mode
+    searches; compaction changes nothing observable."""
+    vecs = sift_like_vectors(600, dim=16, n_clusters=8, seed=5)
+    cfg = pq_cfg(16, vectors_per_bucket=100, min_buckets=4, nprobe=3,
+                 kmeans_iters=2, pq_m=4)
+    idx = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(6)
+    new = rng.standard_normal((20, 16)).astype(np.float32) * 0.1 + vecs[:20]
+    for j, v in enumerate(new):
+        idx.insert(v, 10_000 + j)
+    assert idx.pending_count == 20
+    assert idx.n_total == 620
+    # pending rows hold codes too
+    assert sum(len(c) for c in idx._pend_codes.values()) == 20
+    for j, v in enumerate(new):
+        _, ids = idx.search_many(v[None], 1, nprobe=idx.centroids.shape[0],
+                                 mode="adc")
+        assert ids[0, 0] == 10_000 + j       # exact-mode ADC must find it
+    queries = rng.standard_normal((32, 16)).astype(np.float32)
+    v_pend, i_pend = idx.search_many(queries, 5, 3, mode="adc")
+    idx.compact()
+    assert idx.codes.shape[0] == 620
+    v_comp, i_comp = idx.search_many(queries, 5, 3, mode="adc")
+    assert np.array_equal(i_pend, i_comp)
+    np.testing.assert_allclose(v_pend, v_comp, rtol=1e-3, atol=1e-4)
+
+
+def test_insert_many_encodes_codes():
+    vecs = sift_like_vectors(300, dim=8, n_clusters=4, seed=2)
+    cfg = pq_cfg(8, vectors_per_bucket=100, min_buckets=2, kmeans_iters=2,
+                 pq_m=4)
+    a = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    b = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(3)
+    new = rng.standard_normal((10, 8)).astype(np.float32)
+    for j, v in enumerate(new):
+        a.insert(v, 500 + j)
+    b.insert_many(new, np.arange(500, 510))
+    a.compact()
+    b.compact()
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.codes, b.codes)
+
+
+def test_retrain_pq_bumps_epoch():
+    vecs = sift_like_vectors(400, dim=16, n_clusters=8, seed=9)
+    idx = IVFIndex.build(vecs, cfg=pq_cfg(16, pq_m=4, vectors_per_bucket=100,
+                                          min_buckets=4), seed=0)
+    stats = StatisticsService()
+    e0 = stats.epoch
+    old_books = idx.pq.codebooks.copy()
+    # drift the corpus, then retrain
+    rng = np.random.default_rng(10)
+    idx.insert_many(rng.standard_normal((50, 16)).astype(np.float32) * 3.0,
+                    np.arange(1000, 1050))
+    idx.retrain_pq(stats=stats, seed=1)
+    assert stats.epoch > e0
+    assert idx.pending_count == 0            # retrain compacts first
+    assert idx.codes.shape[0] == idx.vectors.shape[0]
+    assert not np.array_equal(idx.pq.codebooks, old_books)
+
+
+# -- memory -------------------------------------------------------------------
+
+
+def test_index_bytes_reduction(pq_index):
+    flat = IVFIndex.build(pq_index.vectors,
+                          cfg=pq_cfg(32, pq_m=0), seed=0)
+    ratio = flat.index_bytes() / pq_index.index_bytes()
+    assert ratio >= 4.0, ratio
+
+
+def test_shard_carries_codes(pq_index):
+    shards = pq_index.shard(4)
+    assert sum(s.codes.shape[0] for s in shards) == pq_index.codes.shape[0]
+    for s in shards:
+        assert s.pq is pq_index.pq           # codebooks replicated
+        assert s.codes.shape[1] == pq_index.pq.m
+
+
+# -- cost model ---------------------------------------------------------------
+
+
+def test_record_pq_scan_sets_speed_and_bumps_epoch():
+    stats = StatisticsService()
+    assert stats.pq_scan_speed() == stats.cfg.default_pq_scan_speed
+    e0 = stats.epoch
+    stats.record_pq_scan(0.001, 10_000)      # 1e-7 s/row observed
+    assert stats.epoch == e0 + 1             # first truth replaces the prior
+    assert stats.pq_scan_speed() == pytest.approx(1e-7)
+    stats.record_pq_scan(0.002, 10_000)      # EWMA folds, no epoch bump
+    assert stats.epoch == e0 + 1
+    assert 1e-7 < stats.pq_scan_speed() < 2e-7
+
+
+def test_choose_knn_scan_prefers_adc_on_large_corpora(pq_index):
+    stats = StatisticsService()
+    # observed: ADC 4x faster per row than float
+    stats.record_knn_scan(0.04, 1_000_000)   # 4e-8 s/row
+    stats.record_pq_scan(0.01, 1_000_000)    # 1e-8 s/row
+    assert stats.choose_knn_scan(pq_index, q=8, k=10) == "adc"
+    # flat index can never choose adc
+    flat = IVFIndex.build(pq_index.vectors[:500],
+                          cfg=pq_cfg(32, pq_m=0), seed=0)
+    assert stats.choose_knn_scan(flat, q=8, k=10) == "float"
+
+
+def test_choose_knn_scan_prefers_float_when_rerank_dominates():
+    """Tiny corpus: the k' re-rank overhead outweighs the bandwidth saved
+    by scanning codes, so the batch stays on the float path."""
+    vecs = sift_like_vectors(300, dim=16, n_clusters=4, seed=11)
+    idx = IVFIndex.build(vecs, cfg=pq_cfg(16, pq_m=4, vectors_per_bucket=100,
+                                          min_buckets=2, rerank_mult=8),
+                         seed=0)
+    stats = StatisticsService()
+    # ADC barely faster per row: fixed re-rank cost dominates at N=300
+    stats.record_knn_scan(0.011, 1_000_000)
+    stats.record_pq_scan(0.010, 1_000_000)
+    assert stats.choose_knn_scan(idx, q=1, k=10) == "float"
+
+
+def test_search_many_stats_feedback_records_pq(pq_index):
+    stats = StatisticsService()
+    rng = np.random.default_rng(8)
+    queries = rng.standard_normal((4, 32)).astype(np.float32)
+    pq_index.search_many(queries, 5, nprobe=6, stats=stats, mode="adc")
+    assert stats.counts.get("pq_scan", 0) > 0
+    pq_index.search_many(queries, 5, nprobe=6, stats=stats, mode="float")
+    assert stats.counts.get("knn_scan", 0) > 0
+
+
+def test_pq_cost_scales():
+    stats = StatisticsService()
+    c_small = stats.pq_cost(10_000, 100, 4, q=1, k_prime=80)
+    c_big = stats.pq_cost(1_000_000, 100, 4, q=1, k_prime=80)
+    assert c_small < c_big
+    assert stats.pq_cost(10_000, 100, 4, 1, 80) < \
+        stats.pq_cost(10_000, 100, 4, 1, 8000)
+
+
+# -- executor pushdown over a PQ index ---------------------------------------
+
+
+def test_pushdown_uses_pq_index():
+    """End-to-end: a similarity query over a PQ-mode index returns the
+    same rows as the flat index (exact re-rank keeps thresholds exact)."""
+    import dataclasses as dc
+    from repro.configs.pandadb import PandaDBConfig
+    from repro.core import PandaDB
+    from repro.core.aipm import feature_hash_extractor
+
+    def build(pq_m):
+        cfg = PandaDBConfig(index=dc.replace(PandaDBConfig().index,
+                                             vectors_per_bucket=40,
+                                             min_buckets=4, pq_m=pq_m,
+                                             kmeans_iters=2))
+        db = PandaDB(cfg)
+        db.register_extractor("face", feature_hash_extractor(dim=32))
+        rng = np.random.default_rng(12)
+        for i in range(120):
+            db.graph.create_node("Photo", name=f"p_{i}",
+                                 img=rng.bytes(256))
+        db.build_index("face", "img")
+        return db
+
+    db_flat, db_pq = build(0), build(8)
+    assert db_pq.indexes["face"].pq is not None
+    q = ("MATCH (p:Photo) WHERE p.img->face ~: "
+         "createFromSource('https://example.com/q1')->face RETURN p.name")
+    rows_flat = sorted(r["p.name"] for r in db_flat.query(q))
+    rows_pq = sorted(r["p.name"] for r in db_pq.query(q))
+    assert rows_flat == rows_pq
+    # the pushdown actually ran (not a per-row extraction fallback)
+    cur = db_pq.session().run(q)
+    cur.fetchall()
+    assert cur.context.index_hits > 0

@@ -132,6 +132,51 @@ def test_batched_matches_loop_scattered(index):
         np.testing.assert_allclose(v1, v2, rtol=1e-3, atol=1e-4)
 
 
+def test_single_query_fast_path_matches_batched(index):
+    """Q=1 skips probe-signature grouping / block padding / device
+    dispatch; candidates must match the batched path (the same query
+    duplicated engages grouping)."""
+    rng = np.random.default_rng(12)
+    queries = index.vectors[rng.choice(4000, 8)] + \
+        rng.standard_normal((8, 32)).astype(np.float32) * 0.01
+    for k, nprobe in [(1, 4), (10, 4), (10, index.centroids.shape[0])]:
+        for qi in range(queries.shape[0]):
+            q1 = queries[qi:qi + 1]
+            v_fast, i_fast = index.search_many(q1, k, nprobe)
+            v_batch, i_batch = index.search_many(
+                np.concatenate([q1, q1]), k, nprobe)
+            assert np.array_equal(i_fast[0], i_batch[0]), (k, nprobe, qi)
+            # host BLAS vs device reduction order: the matmul-identity L2
+            # cancels near-duplicate distances to ~1e-4 absolute noise
+            np.testing.assert_allclose(v_fast[0], v_batch[0],
+                                       rtol=1e-3, atol=1e-3)
+
+
+def test_single_query_fast_path_tie_order():
+    """Duplicate corpus vectors tie exactly: the fast path must break ties
+    by lower row index, like the batched path's lax.top_k."""
+    vecs = sift_like_vectors(400, dim=16, n_clusters=8, seed=13)
+    dup = np.concatenate([vecs, vecs])          # every vector twice
+    cfg = VectorIndexConfig(dim=16, metric="l2", vectors_per_bucket=100,
+                            min_buckets=4, nprobe=3, kmeans_iters=2)
+    idx = IVFIndex.build(dup, cfg=cfg, seed=0)
+    rng = np.random.default_rng(14)
+    queries = vecs[rng.choice(400, 16)]
+    for qi in range(16):
+        q1 = queries[qi:qi + 1]
+        _, i_fast = idx.search_many(q1, 4, 3)
+        _, i_batch = idx.search_many(np.concatenate([q1, q1]), 4, 3)
+        assert np.array_equal(i_fast[0], i_batch[0]), qi
+
+
+def test_single_query_fast_path_stats_feedback(index):
+    from repro.core.cost_model import StatisticsService
+    stats = StatisticsService()
+    q = index.vectors[:1] + 0.01
+    index.search_many(q, 5, nprobe=4, stats=stats)
+    assert stats.counts.get("knn_scan", 0) > 0
+
+
 def test_exact_mode_byte_identical(index):
     """nprobe=m is exact mode: one probe signature, one fused scan,
     byte-identical ids to the loop."""
