@@ -1,0 +1,113 @@
+"""Sharded scatter-gather kNN: throughput vs shard count.
+
+One IVF-PQ index over N=200k clustered vectors (dim=128, the paper's
+face-feature scale), sharded by stable id hash into P in {1, 2, 4, 8}
+pieces (centroids + codebooks replicated, bucket contents partitioned --
+exactly what ``ShardedPandaDB.build_index`` hands its shards).  For each P
+and Q in {1, 32, 256} queries we time the full scatter-gather schedule
+(:func:`repro.core.vector_index.scatter_gather_knn`: per-shard ADC scan ->
+``merge_topk`` -> truncation), scattering on a thread pool as the
+coordinator does, and report throughput relative to the unsharded index.
+
+Honesty note (encoded in the cost model's ``shard_knn_fanout_cost``): this
+is ONE process -- shards contend for the same cores, so the win ceiling is
+whatever parallel slack the single-shard scan leaves plus smaller per-shard
+top-k heaps; the merge adds O(P x k) work per query.  Where merge/dispatch
+overhead dominates (small Q, large P) the ratio honestly drops below 1 and
+the JSON says so; on a real deployment each shard is its own machine and
+the scatter is network-parallel.  Results land in
+``BENCH_sharded_knn.json``; the parity suite (tests/test_cluster.py)
+pins correctness, this file pins speed.
+"""
+from __future__ import annotations
+
+import json
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.pandadb import VectorIndexConfig
+from repro.core.cost_model import StatisticsService
+from repro.core.vector_index import IVFIndex, scatter_gather_knn
+from repro.data.synthetic_graph import sift_like_vectors
+
+N = 200_000
+DIM = 128
+K = 10
+NPROBE = 8
+SHARDS = (1, 2, 4, 8)
+QS = (1, 32, 256)
+
+
+def run(n: int = N) -> None:
+    vecs = sift_like_vectors(n, dim=DIM, n_clusters=max(64, n // 100),
+                             seed=0)
+    cfg = VectorIndexConfig(dim=DIM, metric="l2",
+                            vectors_per_bucket=2000, min_buckets=8,
+                            nprobe=NPROBE, kmeans_iters=2,
+                            pq_m=16, pq_bits=8, pq_kmeans_iters=4,
+                            rerank_mult=32)
+    index = IVFIndex.build(vecs, cfg=cfg, seed=0)
+    rng = np.random.default_rng(1)
+    queries = {q: vecs[rng.choice(n, q)]
+               + rng.standard_normal((q, DIM)).astype(np.float32) * 0.01
+               for q in QS}
+
+    payload = {"config": dict(n=n, dim=DIM, k=K, nprobe=NPROBE,
+                              pq_m=16, rerank_mult=32, shards=list(SHARDS),
+                              qs=list(QS)),
+               "results": {}}
+    base_ids = {}
+    stats = StatisticsService()
+    for p in SHARDS:
+        pieces = index.shard(p, strategy="hash")
+        pool = ThreadPoolExecutor(max_workers=p) if p > 1 else None
+        for q in QS:
+            t_us = timeit(lambda: scatter_gather_knn(
+                pieces, queries[q], K, nprobe=NPROBE, mode="adc",
+                pool=pool), repeats=3)
+            _, ids = scatter_gather_knn(pieces, queries[q], K,
+                                        nprobe=NPROBE, mode="adc",
+                                        pool=pool,
+                                        record=stats.record_shard_scan)
+            if p == 1:
+                base_ids[q] = ids
+                speedup = 1.0
+            else:
+                speedup = payload["results"][f"P=1/Q={q}"]["us"] / t_us
+            qps = q / (t_us / 1e6)
+            emit(f"sharded_knn/P={p}/Q={q}", t_us,
+                 f"qps={qps:.0f},vs_P1={speedup:.2f}x")
+            payload["results"][f"P={p}/Q={q}"] = dict(
+                us=t_us, qps=qps, speedup_vs_single=speedup,
+                ids_match_single=bool(np.array_equal(ids, base_ids[q])))
+        if pool is not None:
+            pool.shutdown()
+
+    # cost-model cross-check: the fan-out estimate at the observed per-shard
+    # speeds should call the same winner the wall clock saw at Q=256
+    est = {p: stats.shard_knn_fanout_cost(
+        [n // p] * p, index.centroids.shape[0], NPROBE, q=256, k=K)
+        for p in SHARDS}
+    payload["cost_model_fanout_est_s"] = est
+    best_wall = min(SHARDS,
+                    key=lambda p: payload["results"][f"P={p}/Q=256"]["us"])
+    payload["note"] = (
+        "single-process shards share cores: speedup comes from parallel "
+        "slack + smaller per-shard top-k, and merge overhead (O(P*k)/query) "
+        f"dominates at small Q. best P at Q=256 by wall clock: {best_wall}; "
+        "per the cost model a real deployment scatters network-parallel.")
+
+    for q in QS:
+        assert payload["results"][f"P=2/Q={q}"]["ids_match_single"], q
+        assert payload["results"][f"P=4/Q={q}"]["ids_match_single"], q
+
+    out = Path(__file__).resolve().parent.parent / "BENCH_sharded_knn.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

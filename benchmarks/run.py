@@ -21,6 +21,7 @@ SUITES = {
     "fig12": "benchmarks.bench_index_perf",
     "index_knn": "benchmarks.bench_index_perf",
     "pq_knn": "benchmarks.bench_pq_knn",
+    "sharded": "benchmarks.bench_sharded",
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.roofline",
 }

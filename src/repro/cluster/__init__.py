@@ -1,0 +1,37 @@
+"""Sharded cluster subsystem (paper §VII-A): hash-partitioned shards,
+replicated index metadata, scatter-gather + routed query serving."""
+from repro.cluster.coordinator import (
+    ClusterCursor,
+    ClusterPreparedStatement,
+    ClusterSession,
+    ShardedPandaDB,
+)
+from repro.cluster.partition import (
+    TEMP_BLOB_BASE,
+    default_owner_fn,
+    make_shard,
+    owner_shard,
+    stable_id_hash,
+)
+from repro.cluster.scatter import (
+    ClusterUnsupportedQuery,
+    fanout_anchor,
+    id_bound_expr,
+    ordered_merge,
+)
+
+__all__ = [
+    "ClusterCursor",
+    "ClusterPreparedStatement",
+    "ClusterSession",
+    "ClusterUnsupportedQuery",
+    "ShardedPandaDB",
+    "TEMP_BLOB_BASE",
+    "default_owner_fn",
+    "fanout_anchor",
+    "id_bound_expr",
+    "make_shard",
+    "ordered_merge",
+    "owner_shard",
+    "stable_id_hash",
+]

@@ -1,0 +1,527 @@
+"""ShardedPandaDB: the cluster coordinator (paper §VII-A serving layer).
+
+Owns N shard replicas -- each a full :class:`~repro.core.database.PandaDB`
+over a hash-partitioned slice (see :mod:`repro.cluster.partition` for the
+layout rules) -- and routes every statement:
+
+* **kNN** scatter-gathers through the one shared merge schedule
+  (:func:`repro.core.vector_index.scatter_gather_knn`): per-shard ADC or
+  float scan (each shard's cost model picks, from its own observed
+  throughputs), ``merge_topk`` reduce, shard-padding truncation.  Exact
+  re-ranked scores merge exactly, so results are byte-identical to a
+  single-node index over the same corpus.
+* **point lookups / id-bound MATCHes** route to the owner shard only; the
+  cost model's ``choose_shard_route`` prefers the routed plan over the
+  (also correct, but P-dispatch) fan-out whenever the predicate pins an
+  owner.
+* **label / all-node scans** fan out to every shard and stream through an
+  ordered merge that restores the global row order and preserves ``LIMIT``
+  early exit end-to-end (per-shard caps + merged cap + pipeline close).
+
+Sessions (:class:`ClusterSession`) mirror the driver surface
+(``prepare()``/``run()``/cursors) and all shards share ONE plan cache:
+parse+optimize runs once per query skeleton for the whole cluster, and any
+shard's epoch-invalidation semantics apply unchanged because plans are
+db-independent trees.  :class:`~repro.serving.engine.QueryServer` accepts a
+``ShardedPandaDB`` wherever it accepts a ``PandaDB``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.pandadb import PandaDBConfig, VectorIndexConfig
+from repro.core import logical_plan as lp
+from repro.core.cost_model import StatisticsService, estimate_plan_cost
+from repro.core.cypherplus import (
+    CreateQuery,
+    FuncCall,
+    Literal,
+    MatchQuery,
+    Param,
+    parse_query,
+    query_params,
+)
+from repro.core.database import PandaDB
+from repro.core.executor import (
+    DEFAULT_BATCH_ROWS,
+    ExecutionContext,
+    execute_iter,
+    execute_iter_tagged,
+)
+from repro.core.session import (
+    Cursor,
+    PlanCache,
+    RWLock,
+    _projection_keys,
+    bind_text,
+    check_wal_renderable,
+    plan_query,
+    skeleton_of,
+)
+from repro.core.vector_index import IVFIndex, scatter_gather_knn
+from repro.cluster.partition import default_owner_fn, make_shard
+from repro.cluster.scatter import (
+    ClusterUnsupportedQuery,
+    fanout_anchor,
+    id_bound_expr,
+    ordered_merge,
+    resolve_id,
+)
+from repro.graphstore.blob import Blob
+from repro.graphstore.wal import WriteAheadLog
+
+
+@dataclasses.dataclass(frozen=True)
+class _PendingBlob:
+    """Blob content + resolved mime, carried from statement resolution to
+    owner-shard registration (so cluster CREATEs keep the same blob
+    metadata a single-node apply would record)."""
+    content: bytes
+    mime: str
+
+
+class ClusterCursor(Cursor):
+    """A :class:`~repro.core.session.Cursor` over an already-routed row
+    stream (merged fan-out or a single shard's pipeline).  Inherits the
+    fetch surface; closing tears the shard pipelines down."""
+
+    def __init__(self, gen, keys: Tuple[str, ...] = (),
+                 rwlock: Optional[RWLock] = None) -> None:
+        super().__init__(None, None, keys=tuple(keys), rwlock=rwlock)
+        if gen is not None:
+            self._gen = gen
+            self._exhausted = False
+
+
+class ClusterPreparedStatement:
+    """Parsed once; each ``run()`` re-routes (a ``$id`` binding may move
+    the owner shard) but reuses the cluster-shared cached plan."""
+
+    def __init__(self, session: "ClusterSession", text: str) -> None:
+        self.session = session
+        self.text = text
+        self.skeleton = skeleton_of(text)
+        self.query = parse_query(text)
+        self.param_names = frozenset(query_params(self.query))
+
+    def run(self, parameters: Optional[Dict[str, Any]] = None,
+            optimized: bool = True, **params: Any) -> ClusterCursor:
+        return self.session._run_parsed(self.skeleton, self.query,
+                                        {**(parameters or {}), **params},
+                                        optimized=optimized, text=self.text)
+
+
+class ClusterSession:
+    """One client's conversation with the cluster; the serving workers'
+    handle.  API-compatible with :class:`~repro.core.session.Session` for
+    the read/write statement surface (``prepare()``/``run()``/cursors)."""
+
+    def __init__(self, cdb: "ShardedPandaDB",
+                 batch_rows: int = DEFAULT_BATCH_ROWS,
+                 use_cache: bool = True,
+                 prefetch_depth: Optional[int] = None) -> None:
+        self.cdb = cdb
+        self.batch_rows = batch_rows
+        self.use_cache = use_cache
+        self.prefetch_depth = prefetch_depth
+        self._closed = False
+
+    def __enter__(self) -> "ClusterSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        self._closed = True
+
+    def prepare(self, text: str) -> ClusterPreparedStatement:
+        return ClusterPreparedStatement(self, text)
+
+    def run(self, text: str, parameters: Optional[Dict[str, Any]] = None,
+            optimized: bool = True, **params: Any) -> ClusterCursor:
+        if self._closed:
+            raise RuntimeError("session is closed")
+        params = {**(parameters or {}), **params}
+        return self._run_parsed(skeleton_of(text), parse_query(text), params,
+                                optimized=optimized, text=text)
+
+    def _run_parsed(self, skeleton: str, q, params: Dict[str, Any],
+                    optimized: bool, text: str) -> ClusterCursor:
+        if self._closed:
+            raise RuntimeError("session is closed")
+        cdb = self.cdb
+        missing = query_params(q) - set(params)
+        if missing:
+            raise KeyError(f"unbound parameters: "
+                           f"{', '.join('$' + m for m in sorted(missing))}")
+        if isinstance(q, CreateQuery):
+            cdb.rwlock.acquire_write()
+            try:
+                cdb._execute_create(q, text, params)
+            finally:
+                cdb.rwlock.release_write()
+            return ClusterCursor(None)
+        plan = cdb._plan_cached(skeleton, q, optimized,
+                                use_cache=self.use_cache)
+        route, owner, anchor = cdb._route(q, plan, params)
+        keys = _projection_keys(q)
+        if route == "routed":
+            ctx = ExecutionContext(cdb.shards[owner], params,
+                                   prefetch_depth=self.prefetch_depth)
+            return ClusterCursor(execute_iter(plan, ctx, self.batch_rows),
+                                 keys=keys, rwlock=cdb.rwlock)
+        limit = _root_limit(plan, params)
+        streams = [
+            execute_iter_tagged(plan,
+                                ExecutionContext(sh, params,
+                                                 prefetch_depth=self.prefetch_depth),
+                                anchor, self.batch_rows, limit=limit)
+            for sh in cdb.shards]
+        gen = ordered_merge(streams,
+                            batch_rows=cdb.cfg.cluster.merge_batch_rows,
+                            limit=limit)
+        return ClusterCursor(gen, keys=keys, rwlock=cdb.rwlock)
+
+    def explain(self, text: str) -> Dict[str, Any]:
+        return self.cdb.explain(text)
+
+
+def _root_limit(plan: lp.PlanOp, params: Dict[str, Any]) -> Optional[int]:
+    if not isinstance(plan, lp.Limit):
+        return None
+    n = plan.n
+    if isinstance(n, Param):
+        n = params[n.name]
+    return int(n)
+
+
+class ShardedPandaDB:
+    """Coordinator over ``n_shards`` hash-partitioned PandaDB replicas."""
+
+    def __init__(self, n_shards: Optional[int] = None,
+                 cfg: Optional[PandaDBConfig] = None,
+                 owner_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None
+                 ) -> None:
+        self.cfg = cfg or PandaDBConfig()
+        self.n_shards = int(n_shards or self.cfg.cluster.n_shards)
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        self.shards: List[PandaDB] = [make_shard(self.cfg)
+                                      for _ in range(self.n_shards)]
+        #: ONE plan cache for the whole cluster: any worker's prepared
+        #: skeleton serves every shard (plans are db-independent trees)
+        self.plan_cache = PlanCache()
+        for sh in self.shards:
+            sh.plan_cache = self.plan_cache
+        #: coordinator statistics: per-shard scan EWMAs + fan-out terms
+        self.stats = StatisticsService(self.cfg.cost)
+        self.rwlock = RWLock()
+        self.wal = WriteAheadLog(None)    # leader statement log (§VII-A)
+        self.owner_fn = owner_fn or default_owner_fn(self.n_shards)
+        self._blob_owner: Dict[int, int] = {}
+        self._next_blob_id = 0
+        self.route_counts: Dict[str, int] = {"routed": 0, "fanout": 0}
+        self._route_lock = threading.Lock()   # serving workers race _route
+        self._pool: Optional[ThreadPoolExecutor] = None
+        if self.cfg.cluster.parallel_fanout and self.n_shards > 1:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_shards,
+                thread_name_prefix="shard-scatter")
+        self._default_session: Optional[ClusterSession] = None
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    @property
+    def n_nodes(self) -> int:
+        return self.shards[0].graph.store.n_nodes
+
+    def owner_of(self, node_id: int) -> int:
+        return int(self.owner_fn(np.asarray([node_id], np.int64))[0])
+
+    # -- data path (routed writes) --------------------------------------------
+
+    def create_node(self, label: str, **props: Any) -> int:
+        """Create one node cluster-wide: the label slot is replicated on
+        every shard (structure), properties and blob payload land on the
+        owner only.  Blob ids come from the coordinator's global sequence
+        so they are identical to a single-node database fed the same
+        creation order."""
+        nid = self.n_nodes
+        owner = self.owner_of(nid)
+        owner_props: Dict[str, Any] = {}
+        for k, v in props.items():
+            if isinstance(v, Blob):
+                # a Blob handle points into ONE shard's (or a single-node
+                # db's) store; accepting it would leave the content
+                # unreachable from the owner and jump the coordinator's
+                # global id sequence into the shards' temp range
+                raise TypeError(
+                    f"property {k!r}: pass blob content (bytes / ndarray), "
+                    f"not a Blob handle -- cluster blob ids are assigned by "
+                    f"the coordinator")
+            if isinstance(v, (bytes, np.ndarray, _PendingBlob)):
+                if isinstance(v, _PendingBlob):
+                    content, mime = v.content, v.mime
+                else:
+                    content, mime = \
+                        self.shards[owner].graph.blobs.resolve_source(v)
+                v = self.shards[owner].graph.blobs.create(
+                    content, mime, blob_id=self._next_blob_id)
+                self._blob_owner[v.blob_id] = owner
+                self._next_blob_id = v.blob_id + 1
+            owner_props[k] = v
+        for s, sh in enumerate(self.shards):
+            got = sh.graph.create_node(label,
+                                       **(owner_props if s == owner else {}))
+            assert got == nid, (got, nid)
+            sh.graph.store.set_owner(nid, s == owner)
+        return nid
+
+    def create_relationship(self, src: int, dst: int, rel_type: str,
+                            **props: Any) -> int:
+        """Edges are co-located with their source node's shard."""
+        return self.shards[self.owner_of(src)].graph.create_relationship(
+            src, dst, rel_type, **props)
+
+    def register_extractor(self, sub_key: str, fn, batch_size: int = 64) -> int:
+        """Models are replicated: every shard extracts φ for its own slice
+        (and for query-side blobs), so serials stay aligned cluster-wide."""
+        serial = 0
+        for sh in self.shards:
+            serial = sh.register_extractor(sub_key, fn, batch_size)
+        return serial
+
+    # -- indexing ---------------------------------------------------------------
+
+    def build_index(self, sub_key: str, prop_key: str,
+                    cfg: Optional[VectorIndexConfig] = None
+                    ) -> List[IVFIndex]:
+        """Cluster BatchIndexing: each shard extracts φ for its owned blobs,
+        the coordinator trains ONE set of centroids + PQ codebooks over the
+        gathered space (sorted by blob id -- the exact single-node build
+        input, so centroids/codes are bit-identical), then hands every
+        shard its owner-assigned bucket contents via ``IVFIndex.shard``."""
+        per: List[Tuple[np.ndarray, List[Any], int]] = []
+        column_seen = False
+        for s, sh in enumerate(self.shards):
+            try:
+                bids = sh.blob_ids_for(prop_key)
+                column_seen = True
+            except KeyError:
+                # a shard that owns no node with this property never
+                # materialized the column -- it just contributes no rows
+                bids = np.empty(0, np.int64)
+            vecs = sh.phi_for_blobs(sub_key, bids) if len(bids) else []
+            per.append((bids, vecs, s))
+        if not column_seen:
+            raise KeyError(f"no property {prop_key!r}")
+        all_bids = np.concatenate([p[0] for p in per])
+        if all_bids.size == 0:
+            raise ValueError(f"no blobs under property {prop_key!r}")
+        all_vecs = np.stack([v for p in per for v in p[1]])
+        order = np.argsort(all_bids, kind="stable")
+        all_bids = all_bids[order]
+        all_vecs = all_vecs[order]
+        serial = self.shards[0].registry.serial(sub_key)
+        cfg = cfg or dataclasses.replace(self.cfg.index,
+                                         dim=all_vecs.shape[1])
+        index = IVFIndex.build(all_vecs, ids=all_bids, cfg=cfg,
+                               serial=serial)
+        assign = np.asarray([self._blob_owner[int(b)] for b in index.ids],
+                            np.int64)
+        pieces = index.shard(self.n_shards, assign=assign)
+        for s, sh in enumerate(self.shards):
+            sh.indexes[sub_key] = pieces[s]
+            sh.stats.note_index_rebuild(sub_key)
+        self.stats.note_index_rebuild(sub_key)
+        return pieces
+
+    def index_insert(self, sub_key: str, blob_id: int) -> None:
+        """DynamicIndexing, routed: the blob's owner shard extracts φ (its
+        cache/AIPM) and appends to ITS index piece -- membership stays
+        consistent with owner-shard routing after any number of inserts."""
+        owner = self._blob_owner.get(int(blob_id))
+        if owner is None:
+            raise KeyError(f"blob {blob_id} was not created through this "
+                           f"coordinator")
+        self.shards[owner].index_insert(sub_key, int(blob_id))
+
+    def index_pieces(self, sub_key: str) -> List[IVFIndex]:
+        return [sh.indexes[sub_key] for sh in self.shards]
+
+    # -- kNN scatter-gather -----------------------------------------------------
+
+    def knn(self, sub_key: str, queries: np.ndarray, k: int,
+            nprobe: Optional[int] = None, mode: str = "auto",
+            rerank: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+        """Scatter-gather kNN over every shard's index piece through the
+        shared ``merge_topk`` schedule.  Each shard's scan feeds its own
+        cost model (ADC-vs-float stays a per-shard decision) and the
+        coordinator's per-shard throughput EWMAs
+        (``stats.record_shard_scan``)."""
+        return scatter_gather_knn(
+            self.index_pieces(sub_key), queries, k, nprobe=nprobe,
+            mode=mode, rerank=rerank,
+            stats=[sh.stats for sh in self.shards],
+            record=self.stats.record_shard_scan,
+            pool=self._pool)
+
+    def knn_fanout_cost(self, sub_key: str, q: int = 1, k: int = 10,
+                        nprobe: Optional[int] = None) -> float:
+        pieces = self.index_pieces(sub_key)
+        m = pieces[0].centroids.shape[0]
+        return self.stats.shard_knn_fanout_cost(
+            [p.n_total for p in pieces], m,
+            nprobe or pieces[0].cfg.nprobe, q=q, k=k)
+
+    # -- query path -------------------------------------------------------------
+
+    def session(self, batch_rows: Optional[int] = None,
+                use_cache: bool = True,
+                prefetch_depth: Optional[int] = None) -> ClusterSession:
+        kwargs: Dict[str, Any] = {"use_cache": use_cache,
+                                  "prefetch_depth": prefetch_depth}
+        if batch_rows is not None:
+            kwargs["batch_rows"] = batch_rows
+        return ClusterSession(self, **kwargs)
+
+    def query(self, text: str, parameters: Optional[Dict[str, Any]] = None,
+              optimized: bool = True, **params: Any) -> List[Dict[str, Any]]:
+        if isinstance(parameters, bool):
+            parameters, optimized = None, parameters
+        if self._default_session is None:
+            self._default_session = self.session()
+        return self._default_session.run(text, parameters,
+                                         optimized=optimized,
+                                         **params).fetchall()
+
+    def explain(self, text: str) -> Dict[str, Any]:
+        """Route decision + costs the coordinator would use for ``text``."""
+        q = parse_query(text)
+        if not isinstance(q, MatchQuery):
+            raise TypeError("explain() expects a MATCH query")
+        plan = self._plan_cached(skeleton_of(text), q, optimized=True)
+        anchor = fanout_anchor(plan)
+        routable = id_bound_expr(q, anchor) is not None
+        cost = estimate_plan_cost(plan, self.shards[0].stats)
+        return {
+            "anchor": anchor,
+            "route": self.stats.choose_shard_route(cost, self.n_shards,
+                                                   routable),
+            "routed_cost": self.stats.shard_routed_cost(cost, self.n_shards),
+            "fanout_cost": self.stats.shard_fanout_cost(cost, self.n_shards),
+            "n_shards": self.n_shards,
+            "plan": plan.describe(),
+            "plan_cache": self.plan_cache.stats(),
+            "route_counts": dict(self.route_counts),
+        }
+
+    # -- internals --------------------------------------------------------------
+
+    def _plan_cached(self, skeleton: str, q: MatchQuery, optimized: bool,
+                     use_cache: bool = True) -> lp.PlanOp:
+        lead = self.shards[0]
+        lead.stats.refresh_from_graph(lead.graph)
+        lead.stats.refresh_extractor_stats(lead.registry)
+        if not use_cache:
+            return plan_query(lead, q, optimized)
+        key = (skeleton, optimized, lead.stats.epoch)
+        _, plan = self.plan_cache.get_or_build(
+            key, lambda: (q, plan_query(lead, q, optimized)))
+        return plan
+
+    def _route(self, q: MatchQuery, plan: lp.PlanOp,
+               params: Dict[str, Any]) -> Tuple[str, Optional[int], str]:
+        """(route, owner shard or None, anchor var).  Correctness first:
+        the anchor check gates everything; the cost model then prefers the
+        routed plan over the fan-out whenever the statement pins an owner
+        (both are semantically valid -- non-owners would scan their slice
+        and match nothing)."""
+        anchor = fanout_anchor(plan)
+        bound = id_bound_expr(q, anchor)
+        cost = estimate_plan_cost(plan, self.shards[0].stats)
+        choice = self.stats.choose_shard_route(cost, self.n_shards,
+                                               routable=bound is not None)
+        with self._route_lock:
+            self.route_counts[choice] = self.route_counts.get(choice, 0) + 1
+        if choice == "routed":
+            return "routed", self.owner_of(resolve_id(bound, params)), anchor
+        return "fanout", None, anchor
+
+    def _execute_create(self, q: CreateQuery, text: str,
+                        params: Dict[str, Any]) -> None:
+        """Cluster CREATE: same two-phase contract as
+        ``PandaDB._execute_create`` (resolve everything, then apply), with
+        node creation routed through :meth:`create_node` so slots replicate
+        and payload lands on owners.  The bound statement is logged once on
+        the coordinator's leader WAL."""
+        params = params or {}
+        check_wal_renderable(q, params)
+
+        def resolve(v: Any) -> Any:
+            if isinstance(v, Literal):
+                return v.value
+            if isinstance(v, Param):
+                if v.name not in params:
+                    raise KeyError(f"missing query parameter ${v.name}")
+                return params[v.name]
+            return v
+
+        # phase 1: resolve every new node's props (blob sources read here,
+        # registered only on apply) -- failures abort before any mutation
+        resolved: List[List[Optional[Dict[str, Any]]]] = []
+        seen_vars: set = set()
+        for pat in q.patterns:
+            plist: List[Optional[Dict[str, Any]]] = []
+            for np_ in pat.nodes:
+                if np_.var in seen_vars:
+                    plist.append(None)
+                    continue
+                if np_.var:
+                    seen_vars.add(np_.var)
+                props: Dict[str, Any] = {}
+                for k, v in np_.props:
+                    if isinstance(v, (Literal, Param)):
+                        props[k] = resolve(v)
+                    elif isinstance(v, FuncCall) \
+                            and v.name == "createFromSource":
+                        src = resolve(v.args[0])
+                        content, mime = \
+                            self.shards[0].graph.blobs.resolve_source(
+                                src if isinstance(src, (str, bytes))
+                                else str(src))
+                        # registered on the owner at apply, mime intact
+                        props[k] = _PendingBlob(content, mime)
+                plist.append(props)
+            resolved.append(plist)
+
+        # phase 2: apply (routed), then log once
+        env: Dict[str, int] = {}
+        for pat, plist in zip(q.patterns, resolved):
+            prev = None
+            for i, np_ in enumerate(pat.nodes):
+                if np_.var in env:
+                    nid = env[np_.var]
+                else:
+                    nid = self.create_node(np_.label or "Node",
+                                           **(plist[i] or {}))
+                    if np_.var:
+                        env[np_.var] = nid
+                if prev is not None:
+                    rel = pat.rels[i - 1]
+                    src, dst = ((prev, nid) if rel.direction != "in"
+                                else (nid, prev))
+                    self.create_relationship(src, dst, rel.rel_type or "REL")
+                prev = nid
+        self.wal.append(bind_text(text, params))

@@ -1,0 +1,51 @@
+"""Hash partitioning for the sharded cluster (paper §VII-A).
+
+Layout rules (what lives where):
+
+* **nodes** -- partitioned by :func:`repro.core.vector_index.stable_id_hash`
+  of the node id.  Every shard keeps the full node-id space + labels
+  (structure is replicated, so ids stay global and cheap), but properties,
+  blobs and scan rows exist only on the owner (``GraphStore.owned``).
+* **edges** -- co-located with their *source* node: an out-expand from an
+  owned node never leaves the shard.
+* **index metadata** -- IVF centroids + PQ codebooks replicated on every
+  shard; bucket contents partitioned per shard via ``IVFIndex.shard()``
+  with an explicit owner assignment, so a shard's index piece covers
+  exactly the blobs its graph slice owns (index pushdown stays shard-local
+  and exact).
+* **query-side blobs** -- ``createFromSource`` literals materialize per
+  shard in a reserved high id range (:data:`TEMP_BLOB_BASE`), disjoint
+  from the coordinator's global data-blob sequence, so a temp blob can
+  never alias a data blob's φ cache entries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.pandadb import PandaDBConfig
+from repro.core.database import PandaDB
+from repro.core.vector_index import owner_shard, stable_id_hash  # noqa: F401
+
+#: auto-allocated (query-side / temp) blob ids start here on every shard;
+#: coordinator-assigned data blob ids stay far below
+TEMP_BLOB_BASE = 1 << 40
+
+
+def make_shard(cfg: Optional[PandaDBConfig] = None,
+               wal_path: Optional[str] = None) -> PandaDB:
+    """One shard replica: a PandaDB whose store tracks ownership and whose
+    blob store auto-allocates only from the temp range."""
+    db = PandaDB(cfg, wal_path)
+    db.graph.store.enable_ownership()
+    db.graph.blobs._next_id = TEMP_BLOB_BASE
+    return db
+
+
+def default_owner_fn(n_shards: int):
+    """ids -> owning shard, the stable-hash default (injectable in tests to
+    force skewed / degenerate partitions)."""
+    def fn(ids: np.ndarray) -> np.ndarray:
+        return owner_shard(np.asarray(ids), n_shards)
+    return fn

@@ -76,6 +76,23 @@ class CostModelConfig:
     #                                          (prior; the uint8 scan is
     #                                          bandwidth-bound, ~4-8x the
     #                                          float throughput)
+    shard_dispatch_s: float = 1e-4           # fixed cost of scattering one
+    #                                          statement/scan to one shard
+    #                                          (ctx setup + queueing); the
+    #                                          fan-out term routed plans
+    #                                          avoid
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Sharded serving (§VII-A): property + unstructured data partitioned
+    by stable node-id hash, graph structure + index metadata replicated."""
+
+    n_shards: int = 1
+    parallel_fanout: bool = True   # scatter shard scans on a thread pool
+    #                                (results are merged in shard order, so
+    #                                output is deterministic either way)
+    merge_batch_rows: int = 256    # coordinator's ordered-merge chunk size
 
 
 @dataclass(frozen=True)
@@ -85,6 +102,7 @@ class PandaDBConfig:
     cache: CacheConfig = field(default_factory=CacheConfig)
     aipm: AIPMConfig = field(default_factory=AIPMConfig)
     cost: CostModelConfig = field(default_factory=CostModelConfig)
+    cluster: ClusterConfig = field(default_factory=ClusterConfig)
     # distributed layout (§VII-A): structure replicated, properties sharded
     replicate_graph_structure: bool = True
     shard_axis: str = "data"

@@ -163,6 +163,61 @@ class StatisticsService:
         cost_float = self.knn_cost(index.n_total, m, nprobe, q)
         return "adc" if cost_adc <= cost_float else "float"
 
+    # -- sharded serving (cluster scatter-gather vs routed plans) --------------
+
+    def record_shard_scan(self, shard: int, total_time: float,
+                          rows_scanned: int) -> None:
+        """Per-shard kNN scan throughput EWMA (coordinator feedback: a slow
+        or overloaded shard raises the fan-out estimate, since scatter wall
+        time is the *slowest* shard's scan)."""
+        self._record_scan(f"shard{shard}:knn_scan", total_time, rows_scanned)
+
+    def shard_scan_speed(self, shard: int) -> float:
+        """Observed s/row of one shard's index scans; falls back to the
+        global kNN throughput until that shard has been measured."""
+        return self.speeds.get(f"shard{shard}:knn_scan",
+                               self.knn_scan_speed())
+
+    def shard_knn_fanout_cost(self, shard_rows: "list[int]", m: int,
+                              nprobe: int, q: int = 1, k: int = 10) -> float:
+        """Estimated wall cost of a scatter-gather kNN: the slowest shard's
+        scan (shards run in parallel; each repeats the centroid probe over
+        the replicated centroids) + per-shard dispatch + the merge of
+        P x k candidates per query."""
+        if not shard_rows:
+            return 0.0
+        per = [self.shard_scan_speed(s) * q
+               * (m + rows * min(max(1, nprobe), max(1, m)) / max(1, m))
+               for s, rows in enumerate(shard_rows)]
+        p = len(shard_rows)
+        merge = self.knn_scan_speed() * q * p * k
+        return max(per) + p * self.cfg.shard_dispatch_s + merge
+
+    def shard_fanout_cost(self, plan_cost: float, n_shards: int) -> float:
+        """Cost of scattering one statement to every shard: each shard runs
+        the plan over ~1/P of the rows in parallel (wall time = slowest
+        shard ~= plan_cost / P on a balanced partition) plus one dispatch
+        per shard -- the term routed plans avoid."""
+        p = max(1, n_shards)
+        return plan_cost / p + p * self.cfg.shard_dispatch_s
+
+    def shard_routed_cost(self, plan_cost: float, n_shards: int) -> float:
+        """Cost of routing the statement to the single owner shard: that
+        shard's ~1/P of the rows, one dispatch, no merge."""
+        return plan_cost / max(1, n_shards) + self.cfg.shard_dispatch_s
+
+    def choose_shard_route(self, plan_cost: float, n_shards: int,
+                           routable: bool) -> str:
+        """``"routed"`` vs ``"fanout"`` for an id-bound statement (both are
+        correct: non-owner shards scan their slice and match nothing -- the
+        fan-out just pays P-1 useless dispatches, so the optimizer prefers
+        the routed plan whenever the predicate pins an owner)."""
+        if not routable or n_shards <= 1:
+            return "fanout" if not routable else "routed"
+        routed = self.shard_routed_cost(plan_cost, n_shards)
+        return ("routed" if routed
+                <= self.shard_fanout_cost(plan_cost, n_shards) else "fanout")
+
     def suggest_prefetch_depth(self, sem_op: lp.PlanOp,
                                cap: int) -> Optional[int]:
         """Adaptive φ prefetch window for one SemanticFilter: how many

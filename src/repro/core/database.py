@@ -78,30 +78,39 @@ class PandaDB:
 
     # -- indexing (paper §VI-B2) ------------------------------------------------
 
-    def build_index(self, sub_key: str, prop_key: str,
-                    node_ids: Optional[np.ndarray] = None,
-                    cfg: Optional[VectorIndexConfig] = None) -> IVFIndex:
-        """BatchIndexing: extract φ for every unstructured item, then build
-        the IVF index over the semantic space."""
+    def blob_ids_for(self, prop_key: str,
+                     node_ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Distinct blob ids a property column holds over ``node_ids``
+        (default: every node this store owns), sorted ascending."""
         node_ids = (np.asarray(node_ids) if node_ids is not None
                     else self.graph.store.all_nodes())
         col = self.graph.store.node_props.column(prop_key)
         if col is None:
             raise KeyError(f"no property {prop_key!r}")
         blob_ids = np.asarray(col.values, np.int64)[node_ids]
-        ok = blob_ids >= 0
-        blob_ids = np.unique(blob_ids[ok])
+        return np.unique(blob_ids[blob_ids >= 0])
+
+    def phi_for_blobs(self, sub_key: str, blob_ids: np.ndarray) -> List[Any]:
+        """φ for every blob id, through cache -> batched AIPM extraction
+        (the BatchIndexing inner loop; cluster shards run it over their
+        owned slice only)."""
         serial = self.registry.serial(sub_key)
-        items = []
-        for bid in blob_ids:
-            cached = self.cache.get(int(bid), sub_key, serial)
-            if cached is None:
-                items.append((int(bid), self.graph.blobs.as_array(int(bid))))
+        items = [(int(b), self.graph.blobs.as_array(int(b)))
+                 for b in blob_ids
+                 if self.cache.get(int(b), sub_key, serial) is None]
         if items:
             for bid, vec in self.aipm.extract_sync(sub_key, items).items():
                 self.cache.put(bid, sub_key, serial, vec)
-        vecs = np.stack([self.cache.get(int(b), sub_key, serial)
-                         for b in blob_ids])
+        return [self.cache.get(int(b), sub_key, serial) for b in blob_ids]
+
+    def build_index(self, sub_key: str, prop_key: str,
+                    node_ids: Optional[np.ndarray] = None,
+                    cfg: Optional[VectorIndexConfig] = None) -> IVFIndex:
+        """BatchIndexing: extract φ for every unstructured item, then build
+        the IVF index over the semantic space."""
+        blob_ids = self.blob_ids_for(prop_key, node_ids)
+        serial = self.registry.serial(sub_key)
+        vecs = np.stack(self.phi_for_blobs(sub_key, blob_ids))
         # carry every deployment knob (incl. pq_m / pq_bits / rerank_mult:
         # IVF-PQ mode trains codebooks inside IVFIndex.build)
         cfg = cfg or dataclasses.replace(self.cfg.index, dim=vecs.shape[1])
@@ -117,20 +126,9 @@ class PandaDB:
         inverted index for strings/labels.  Type is detected from the
         extracted values."""
         from repro.core.scalar_index import InvertedIndex, NumericIndex
-        node_ids = self.graph.store.all_nodes()
-        col = self.graph.store.node_props.column(prop_key)
-        if col is None:
-            raise KeyError(f"no property {prop_key!r}")
-        blob_ids = np.asarray(col.values, np.int64)[node_ids]
-        blob_ids = np.unique(blob_ids[blob_ids >= 0])
+        blob_ids = self.blob_ids_for(prop_key)
         serial = self.registry.serial(sub_key)
-        items = [(int(b), self.graph.blobs.as_array(int(b)))
-                 for b in blob_ids
-                 if self.cache.get(int(b), sub_key, serial) is None]
-        if items:
-            for bid, v in self.aipm.extract_sync(sub_key, items).items():
-                self.cache.put(bid, sub_key, serial, v)
-        vals = [self.cache.get(int(b), sub_key, serial) for b in blob_ids]
+        vals = self.phi_for_blobs(sub_key, blob_ids)
         if all(isinstance(v, (int, float, np.integer, np.floating))
                or (isinstance(v, np.ndarray) and v.ndim == 0
                    and np.issubdtype(v.dtype, np.number))

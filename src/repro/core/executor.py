@@ -614,20 +614,58 @@ def execute_iter(plan: lp.PlanOp, ctx: ExecutionContext,
     upstream generators are closed and no further scan chunk is pulled, so a
     ``LIMIT 5`` over a million-node scan touches ~``batch_rows`` rows.
     """
-    limit: Optional[int] = None
+    it = _execute_iter_core(plan, ctx, None, batch_rows, None)
+    try:
+        for _ids, rows in it:
+            yield rows
+    finally:
+        it.close()
+
+
+def execute_iter_tagged(plan: lp.PlanOp, ctx: ExecutionContext,
+                        anchor: str, batch_rows: int = DEFAULT_BATCH_ROWS,
+                        limit: Optional[int] = None
+                        ) -> Iterator[Tuple[np.ndarray, List[Dict]]]:
+    """Stream ``(anchor_ids, projected_rows)`` batches: :func:`execute_iter`
+    with each batch tagged by the ``anchor`` variable's node ids.
+
+    This is the cluster scatter leg: the coordinator's ordered merge needs
+    every row's anchor id to interleave shard streams back into the global
+    (single-node) row order, and the per-shard ``limit`` cap preserves
+    ``LIMIT`` early exit -- each shard contributes at most ``limit`` rows to
+    an ordered merge, so nothing past the cap is ever scanned or extracted.
+    Closing the generator tears the pipeline down exactly like
+    :func:`execute_iter` (φ cancellation included)."""
+    return _execute_iter_core(plan, ctx, anchor, batch_rows, limit)
+
+
+def _execute_iter_core(plan: lp.PlanOp, ctx: ExecutionContext,
+                       anchor: Optional[str], batch_rows: int,
+                       limit: Optional[int]
+                       ) -> Iterator[Tuple[Optional[np.ndarray], List[Dict]]]:
+    """One streaming driver for both entry points: yields
+    ``(anchor_ids | None, rows)`` batches with root-``Limit`` early exit and
+    deterministic pipeline teardown (closing cancels any φ batches still in
+    the prefetch window)."""
     if isinstance(plan, lp.Limit):
-        limit = _resolve_limit(plan.n, ctx)
+        n = _resolve_limit(plan.n, ctx)
+        limit = n if limit is None else min(limit, n)
         plan = plan.child
     ctx.row_limit = limit
     proj: Optional[lp.Projection] = None
     if isinstance(plan, lp.Projection):
         proj, plan = plan, plan.child
+    if anchor is not None and anchor not in plan.vars:
+        raise KeyError(f"anchor var {anchor!r} not bound by plan "
+                       f"(vars: {sorted(plan.vars)})")
     if limit == 0:
         return
     produced = 0
     it = _iter_bindings(plan, ctx, batch_rows)
     try:
         for chunk in it:
+            ids = (np.asarray(chunk[anchor], np.int64)
+                   if anchor is not None else None)
             if proj is not None:
                 rows = _project_rows(proj, chunk, ctx)
             else:
@@ -637,13 +675,12 @@ def execute_iter(plan: lp.PlanOp, ctx: ExecutionContext,
             if not rows:
                 continue
             if limit is not None and produced + len(rows) >= limit:
-                yield rows[:limit - produced]
+                take = limit - produced
+                yield (ids[:take] if ids is not None else None), rows[:take]
                 return
             produced += len(rows)
-            yield rows
+            yield ids, rows
     finally:
-        # deterministic teardown on LIMIT early exit / cursor close: closing
-        # the pipeline cancels any φ batches still in the prefetch window
         it.close()
 
 

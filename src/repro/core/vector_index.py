@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -125,29 +125,119 @@ def merge_topk(vals_parts: jnp.ndarray, ids_parts: jnp.ndarray, k: int
     return v, jnp.take_along_axis(flat_i, pos, axis=1)
 
 
+def stable_id_hash(ids: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer over external ids: the cluster-wide ownership
+    hash.  Stable under row reordering (it sees the *id*, not the row
+    position), so compaction / rebuilds never move a row between shards --
+    the property deterministic owner-shard routing depends on."""
+    x = np.asarray(ids).astype(np.uint64)
+    x = x + np.uint64(0x9E3779B97F4A7C15)
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+def owner_shard(ids: np.ndarray, n_shards: int) -> np.ndarray:
+    """Owning shard per external id: ``stable_id_hash(id) % n_shards``."""
+    return (stable_id_hash(ids) % np.uint64(max(1, n_shards))).astype(np.int64)
+
+
+def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
+                       k: int, nprobe: Optional[int] = None,
+                       mode: str = "auto", rerank: bool = True,
+                       stats=None, record: Optional[Callable] = None,
+                       pool=None) -> Tuple[np.ndarray, np.ndarray]:
+    """THE cluster merge schedule: per-shard ``search_many`` (ADC or float,
+    per each shard's cost-model call) -> ``merge_topk`` reduce -> truncation
+    of shard padding to min(k, total rows).  Every scatter-gather kNN in the
+    tree -- ``ShardedPandaDB.knn``, :func:`distributed_knn`, the serving
+    path -- routes through here, so the merge semantics cannot drift.
+
+    ``stats`` is either one StatisticsService (shared feedback) or a
+    sequence with one entry per shard (each shard's ADC-vs-float choice then
+    uses its own observed throughputs).  ``record(shard_idx, dt, rows)``,
+    if given, receives per-shard wall time + rows scanned (the
+    coordinator's per-shard EWMAs).  ``pool`` is an optional
+    ``concurrent.futures`` executor: shards scatter in parallel; results
+    are merged in shard order either way, so the output is deterministic."""
+    queries = np.asarray(queries, np.float32)
+    qn = queries.shape[0]
+    out_v = np.full((qn, k), -np.inf, np.float32)
+    out_i = np.full((qn, k), -1, np.int64)
+    if qn == 0 or not shards:
+        return out_v, out_i
+    per_stats = (list(stats) if isinstance(stats, (list, tuple))
+                 else [stats] * len(shards))
+
+    def scan_one(s: int):
+        t0 = time.perf_counter()
+        rows0 = shards[s].scan_rows
+        v, i = shards[s].search_many(queries, k, nprobe, stats=per_stats[s],
+                                     mode=mode, rerank=rerank)
+        if record is not None:
+            record(s, time.perf_counter() - t0, shards[s].scan_rows - rows0)
+        return v, i
+
+    if pool is not None and len(shards) > 1:
+        parts = list(pool.map(scan_one, range(len(shards))))
+    else:
+        parts = [scan_one(s) for s in range(len(shards))]
+    v, i = merge_topk(jnp.stack([jnp.asarray(p[0]) for p in parts]),
+                      jnp.stack([jnp.asarray(p[1]) for p in parts]), k)
+    total = sum(sh.n_total for sh in shards)
+    kk = min(k, total)
+    out_v[:, :kk] = np.asarray(v)[:, :kk]
+    out_i[:, :kk] = np.asarray(i)[:, :kk]
+    return out_v[:, :k], out_i[:, :k]
+
+
+def flat_shard_view(corpus: np.ndarray, ids: np.ndarray, metric: str = "l2",
+                    pq: Optional["PQCodebook"] = None,
+                    codes: Optional[np.ndarray] = None) -> "IVFIndex":
+    """Wrap raw (corpus, ids) arrays as a single-bucket :class:`IVFIndex`
+    so loose shards ride the same scan + merge machinery as built indexes
+    (cosine rows are normalized exactly as :meth:`IVFIndex.build` would)."""
+    corpus = np.asarray(corpus, np.float32)
+    if metric == "cosine" and corpus.size:
+        corpus = corpus / np.maximum(
+            np.linalg.norm(corpus, axis=-1, keepdims=True), 1e-9)
+    n, dim = corpus.shape
+    cfg = VectorIndexConfig(dim=dim, metric=metric, min_buckets=1,
+                            vectors_per_bucket=max(1, n), nprobe=1)
+    return IVFIndex(cfg, np.zeros((1, dim), np.float32),
+                    np.zeros(n, np.int64), corpus,
+                    np.asarray(ids), pq=pq, codes=codes)
+
+
 def distributed_knn(q: jnp.ndarray, corpus_shards: List[jnp.ndarray],
-                    id_shards: List[jnp.ndarray], k: int, metric: str = "l2"
+                    id_shards: List[jnp.ndarray], k: int, metric: str = "l2",
+                    mode: str = "float", pq: Optional["PQCodebook"] = None,
+                    code_shards: Optional[List[np.ndarray]] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Reference collective schedule: local scan -> local top-k -> merge.
     (On a real mesh the shard loop is the data axis and the merge is one
     all_gather of [k] pairs per shard; see distributed/collectives.py.)
 
-    The output is truncated to min(k, total rows), so the -1/-inf padding a
-    small shard contributes can never leak into caller-visible results."""
-    parts_v, parts_i = [], []
-    for shard, ids in zip(corpus_shards, id_shards):
-        v, i = scan_topk(q, shard, ids, k, metric)
-        pad = k - v.shape[1]
-        if pad > 0:
-            v = jnp.pad(v, ((0, 0), (0, pad)), constant_values=-jnp.inf)
-            i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
-        parts_v.append(v)
-        parts_i.append(i)
-    v, i = merge_topk(jnp.stack(parts_v), jnp.stack(parts_i), k)
-    total = sum(int(s.shape[0]) for s in corpus_shards)
-    if total < k:
-        v, i = v[:, :total], i[:, :total]
-    return v, i
+    A thin wrapper over :func:`scatter_gather_knn` -- the cluster merge
+    path -- so this host-loop reference and ``ShardedPandaDB`` can never
+    drift.  ``mode="adc"`` with ``pq`` + ``code_shards`` runs the PQ
+    two-stage scan per shard (ADC top-k' + exact re-rank, returned scores
+    exact).  The output is truncated to min(k, total rows), so the -1/-inf
+    padding a small shard contributes can never leak into caller-visible
+    results."""
+    views = []
+    for s, (shard, ids) in enumerate(zip(corpus_shards, id_shards)):
+        codes = code_shards[s] if code_shards is not None else None
+        views.append(flat_shard_view(np.asarray(shard), np.asarray(ids),
+                                     metric, pq=pq, codes=codes))
+    v, i = scatter_gather_knn(views, np.asarray(q, np.float32), k,
+                              nprobe=1, mode=mode)
+    total = sum(int(np.asarray(s).shape[0]) for s in corpus_shards)
+    kk = min(k, total)
+    return jnp.asarray(v[:, :kk]), jnp.asarray(i[:, :kk])
 
 
 # ---------------------------------------------------------------------------
@@ -827,13 +917,36 @@ class IVFIndex:
         if stats is not None:
             stats.note_index_rebuild("pq_retrain")
 
-    def shard(self, n_shards: int) -> List["IVFIndex"]:
-        """Split bucket contents round-robin across shards (distributed layout:
-        centroids + codebooks replicated, contents sharded)."""
+    def shard(self, n_shards: int, strategy: str = "hash",
+              assign: Optional[np.ndarray] = None) -> List["IVFIndex"]:
+        """Split bucket contents across shards (distributed layout:
+        centroids + codebooks replicated, contents sharded).
+
+        ``strategy="hash"`` (default) partitions by :func:`stable_id_hash`
+        of the external id -- membership survives compaction reorders and
+        rebuilds, which deterministic owner-shard routing requires.
+        ``strategy="roundrobin"`` keeps the legacy positional split (row
+        index mod n_shards; membership shifts whenever rows reorder --
+        load-balancing only).  ``assign`` overrides both with an explicit
+        per-row shard id (the cluster coordinator passes the *node* owner
+        of each blob so a shard's index piece covers exactly the blobs its
+        graph slice owns)."""
         self.compact()
+        if assign is not None:
+            assign = np.asarray(assign, np.int64)
+            if assign.shape[0] != len(self.ids):
+                raise ValueError(f"assign has {assign.shape[0]} entries for "
+                                 f"{len(self.ids)} rows")
+        elif strategy == "hash":
+            assign = owner_shard(self.ids, n_shards)
+        elif strategy == "roundrobin":
+            assign = np.arange(len(self.ids)) % n_shards
+        else:
+            raise ValueError(f"unknown shard strategy {strategy!r}; "
+                             f"expected hash | roundrobin")
         shards = []
         for s in range(n_shards):
-            sel = (np.arange(len(self.ids)) % n_shards) == s
+            sel = assign == s
             shards.append(IVFIndex(self.cfg, self.centroids,
                                    self.bucket_of[sel], self.vectors[sel],
                                    self.ids[sel], serial=self.serial,

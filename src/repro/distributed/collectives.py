@@ -22,20 +22,17 @@ def sharded_topk(mesh: Mesh, axis: str, q: jnp.ndarray, corpus: jnp.ndarray,
                  ids: jnp.ndarray, k: int, metric: str = "l2"
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """corpus/ids sharded over `axis`; q replicated. Returns global top-k."""
-    from repro.core.vector_index import pairwise_scores
+    from repro.core.vector_index import merge_topk, pairwise_scores
 
     def local(q_l, c_l, id_l):
         s = pairwise_scores(q_l, c_l, metric)
         v, i = jax.lax.top_k(s, min(k, c_l.shape[0]))
         vals = id_l[i]
-        # gather per-shard candidates: [n_shards, Q, k]
+        # gather per-shard candidates ([n_shards, Q, k]) and reduce through
+        # the ONE merge schedule every scatter-gather kNN shares
         v_all = jax.lax.all_gather(v, axis)
         i_all = jax.lax.all_gather(vals, axis)
-        p, qn, kk = v_all.shape
-        flat_v = jnp.transpose(v_all, (1, 0, 2)).reshape(qn, p * kk)
-        flat_i = jnp.transpose(i_all, (1, 0, 2)).reshape(qn, p * kk)
-        gv, gpos = jax.lax.top_k(flat_v, k)
-        return gv, jnp.take_along_axis(flat_i, gpos, axis=1)
+        return merge_topk(v_all, i_all, k)
 
     fn = _shard_map(local, mesh,
                     in_specs=(P(), P(axis), P(axis)),

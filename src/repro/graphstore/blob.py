@@ -73,9 +73,16 @@ class BlobStore:
         self.manager = BlobValueManager(self.cfg.table_columns)
         self._next_id = 0
 
-    def create(self, content: bytes, mime: str = "application/octet-stream") -> Blob:
-        blob_id = self._next_id
-        self._next_id += 1
+    def create(self, content: bytes, mime: str = "application/octet-stream",
+               blob_id: Optional[int] = None) -> Blob:
+        """Register content; ``blob_id`` lets a cluster coordinator assign
+        ids from the *global* sequence so blob identity survives sharding
+        (each shard's store then holds a disjoint slice of one id space)."""
+        if blob_id is None:
+            blob_id = self._next_id
+            self._next_id += 1
+        else:
+            self._next_id = max(self._next_id, blob_id + 1)
         blob = Blob(blob_id, len(content), mime)
         self.meta[blob_id] = blob
         if len(content) < self.cfg.inline_threshold:

@@ -215,7 +215,14 @@ class RelationshipStore:
 
 
 class GraphStore:
-    """The assembled native store: nodes, relationships, labels, properties."""
+    """The assembled native store: nodes, relationships, labels, properties.
+
+    Cluster mode (paper §VII-A): a shard's store keeps the full node-id
+    space and every node's label (structure is replicated -- ids stay
+    global and traversal metadata is cheap), but *owns* only its
+    hash-partitioned slice: properties/blobs are populated and scans
+    (:meth:`all_nodes` / :meth:`nodes_with_label`) emit rows only for owned
+    nodes.  Single-node stores never enable the mask and pay nothing."""
 
     def __init__(self) -> None:
         self.labels = LabelRegistry()
@@ -225,11 +232,48 @@ class GraphStore:
         self.rels = RelationshipStore()
         self.node_props = PropertyStore()
         self.rel_props = PropertyStore()
+        #: None = single-node store (owns every row).  A shard's store holds
+        #: one bool per node slot; remote nodes keep label/edges-by-source
+        #: structure but contribute no scan rows and no property payload.
+        self.owned: Optional[List[bool]] = None
+        self._owned_arr: Optional[np.ndarray] = None   # scan-path cache
+
+    def enable_ownership(self) -> None:
+        """Switch to sharded mode: existing and future nodes default to
+        owned until :meth:`set_owner` says otherwise."""
+        if self.owned is None:
+            self.owned = [True] * self.n_nodes
+            self._owned_arr = None
+
+    def set_owner(self, node_id: int, owned: bool) -> None:
+        if self.owned is None:
+            self.enable_ownership()
+        self.owned[node_id] = owned
+        self._owned_arr = None
+
+    def is_owned(self, node_id: int) -> bool:
+        return self.owned is None or self.owned[node_id]
+
+    def _owned_mask(self) -> np.ndarray:
+        """Ownership as a bool array, cached until the next mutation (scans
+        run per chunk per statement; converting the list each time would put
+        an O(n) interpreter loop on the fan-out hot path)."""
+        if self._owned_arr is None or len(self._owned_arr) != self.n_nodes:
+            self._owned_arr = np.asarray(self.owned, bool)
+        return self._owned_arr
+
+    def owned_nodes(self) -> np.ndarray:
+        if self.owned is None:
+            return np.arange(self.n_nodes, dtype=np.int64)
+        return np.nonzero(self._owned_mask())[0].astype(np.int64)
 
     def add_node(self, label: str, **props: Any) -> int:
         nid = self.n_nodes
         self.n_nodes += 1
         self.node_labels.append(self.labels.intern(label))
+        if self.owned is not None:
+            self.owned.append(True)
+            self._owned_arr = None
         for k, v in props.items():
             self.node_props.set(nid, k, v)
         return nid
@@ -244,7 +288,10 @@ class GraphStore:
         lid = self.labels.id_of(label)
         if lid is None:
             return np.array([], np.int64)
-        return np.nonzero(np.asarray(self.node_labels) == lid)[0]
+        hit = np.asarray(self.node_labels) == lid
+        if self.owned is not None:
+            hit &= self._owned_mask()
+        return np.nonzero(hit)[0].astype(np.int64)
 
     def all_nodes(self) -> np.ndarray:
-        return np.arange(self.n_nodes, dtype=np.int64)
+        return self.owned_nodes()

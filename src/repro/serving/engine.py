@@ -7,6 +7,14 @@ reused per query skeleton (the shared plan cache means parse+optimize run
 once per skeleton across the whole server, not once per request).
 Reading-queries go to any worker; writing-queries serialize through the
 db-level write lock + leader WAL (paper §VII-A).
+
+``db`` may be a single-node :class:`~repro.core.database.PandaDB` or a
+:class:`~repro.cluster.ShardedPandaDB` coordinator -- the session surfaces
+are interchangeable, so every worker's statements route through the
+coordinator (scatter-gather fan-out or owner-shard routing per statement)
+while the cluster-wide plan cache keeps parse+optimize amortized exactly as
+on one node.  :meth:`QueryServer.route_counts` surfaces the coordinator's
+routing decisions for the load just served.
 """
 from __future__ import annotations
 
@@ -130,6 +138,11 @@ class QueryServer:
         self._stats.finished = time.perf_counter()
         self.shutdown()
         return self._stats
+
+    def route_counts(self) -> Dict[str, int]:
+        """Routed-vs-fanout statement counts when serving a sharded
+        coordinator ({} on a single-node db)."""
+        return dict(getattr(self.db, "route_counts", {}))
 
     def shutdown(self) -> None:
         self._stop = True
