@@ -22,6 +22,7 @@ SUITES = {
     "index_knn": "benchmarks.bench_index_perf",
     "pq_knn": "benchmarks.bench_pq_knn",
     "sharded": "benchmarks.bench_sharded",
+    "failover": "benchmarks.bench_failover",
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.roofline",
 }

@@ -1,5 +1,6 @@
 """Sharded cluster subsystem (paper §VII-A): hash-partitioned shards,
-replicated index metadata, scatter-gather + routed query serving."""
+replica sets with hedged/failover reads, scatter-gather + routed query
+serving, and live rebalancing."""
 from repro.cluster.coordinator import (
     ClusterCursor,
     ClusterPreparedStatement,
@@ -8,13 +9,25 @@ from repro.cluster.coordinator import (
 )
 from repro.cluster.partition import (
     TEMP_BLOB_BASE,
+    ShardMap,
     default_owner_fn,
     make_shard,
     owner_shard,
     stable_id_hash,
 )
+from repro.cluster.rebalance import Move, Rebalancer
+from repro.cluster.replication import (
+    FaultInjector,
+    ReplicaDown,
+    ReplicaError,
+    ReplicaSet,
+    ReplicatedPandaDB,
+    hedged_call,
+    resilient_stream,
+)
 from repro.cluster.scatter import (
     ClusterUnsupportedQuery,
+    close_streams,
     fanout_anchor,
     id_bound_expr,
     ordered_merge,
@@ -25,13 +38,24 @@ __all__ = [
     "ClusterPreparedStatement",
     "ClusterSession",
     "ClusterUnsupportedQuery",
+    "FaultInjector",
+    "Move",
+    "Rebalancer",
+    "ReplicaDown",
+    "ReplicaError",
+    "ReplicaSet",
+    "ReplicatedPandaDB",
+    "ShardMap",
     "ShardedPandaDB",
     "TEMP_BLOB_BASE",
+    "close_streams",
     "default_owner_fn",
     "fanout_anchor",
+    "hedged_call",
     "id_bound_expr",
     "make_shard",
     "ordered_merge",
     "owner_shard",
+    "resilient_stream",
     "stable_id_hash",
 ]

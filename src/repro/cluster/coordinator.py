@@ -64,9 +64,10 @@ from repro.core.session import (
     skeleton_of,
 )
 from repro.core.vector_index import IVFIndex, scatter_gather_knn
-from repro.cluster.partition import default_owner_fn, make_shard
+from repro.cluster.partition import ShardMap, make_shard
 from repro.cluster.scatter import (
     ClusterUnsupportedQuery,
+    close_streams,
     fanout_anchor,
     id_bound_expr,
     ordered_merge,
@@ -85,6 +86,82 @@ class _PendingBlob:
     mime: str
 
 
+# -- shard-side write ops -----------------------------------------------------
+#
+# Every coordinator write is expressed as a named op applied to one shard
+# db.  The base coordinator dispatches directly; the replicated coordinator
+# records the same (op, args, kwargs) tuple on the shard's op log (the
+# leader-WAL path) and applies it to every live replica, so a revived
+# replica replays exactly what it missed.
+
+def _create_node_slot(db: PandaDB, nid: int, label: str,
+                      scalar_props: Dict[str, Any],
+                      blob_specs: Dict[str, Tuple[int, bytes, str]],
+                      owned: bool) -> int:
+    """One shard's (or replica's) view of a cluster create_node: the label
+    slot always, scalar props + blob payload only on the owner."""
+    props: Dict[str, Any] = dict(scalar_props)
+    for k, (bid, content, mime) in blob_specs.items():
+        props[k] = db.graph.blobs.create(content, mime, blob_id=bid)
+    got = db.graph.create_node(label, **props)
+    assert got == nid, (got, nid)
+    db.graph.store.set_owner(nid, owned)
+    return nid
+
+
+def _adopt_node(db: PandaDB, nid: int, scalar_props: Dict[str, Any],
+                blob_specs: Dict[str, Tuple[int, bytes, str]],
+                out_edges: List[Tuple[int, str, Dict[str, Any]]]) -> int:
+    """Rebalance landing path: the slot already exists everywhere; install
+    the shipped property payload + blob content + co-located out-edges and
+    take ownership."""
+    for k, v in scalar_props.items():
+        db.graph.store.node_props.set(nid, k, v)
+    for k, (bid, content, mime) in blob_specs.items():
+        db.graph.blobs.create(content, mime, blob_id=bid)
+        db.graph.store.node_props.set(nid, k, bid, kind="blob")
+    for tgt, rel_type, rprops in out_edges:
+        db.graph.create_relationship(nid, tgt, rel_type, log=False, **rprops)
+    db.graph.store.set_owner(nid, True)
+    return nid
+
+
+def _copy_piece(piece: IVFIndex) -> IVFIndex:
+    """A replica-private view of one index piece: shares the (immutable
+    once compacted) arrays but owns its append buffers, so replicas can
+    absorb DynamicIndexing inserts independently."""
+    piece.compact()
+    return dataclasses.replace(piece, _pend_vecs={}, _pend_ids={},
+                               _pend_codes={}, pending_count=0,
+                               scan_rows=0, scan_time=0.0)
+
+
+def _apply_op(db: PandaDB, op: str, args: tuple, kw: Dict[str, Any]) -> Any:
+    if op == "create_node":
+        return _create_node_slot(db, *args)
+    if op == "create_rel":
+        return db.graph.create_relationship(*args, **kw)
+    if op == "register_extractor":
+        return db.register_extractor(*args, **kw)
+    if op == "index_insert":
+        return db.index_insert(*args)
+    if op == "set_index":
+        sub_key, piece = args
+        db.indexes[sub_key] = _copy_piece(piece)
+        db.stats.note_index_rebuild(sub_key)
+        return db.indexes[sub_key]
+    if op == "set_owner":
+        nid, owned = args
+        db.graph.store.set_owner(nid, owned)
+        return None
+    if op == "adopt_node":
+        return _adopt_node(db, *args)
+    if op == "drop_blob":
+        db.graph.blobs.delete(args[0])
+        return None
+    raise ValueError(f"unknown shard op {op!r}")
+
+
 class ClusterCursor(Cursor):
     """A :class:`~repro.core.session.Cursor` over an already-routed row
     stream (merged fan-out or a single shard's pipeline).  Inherits the
@@ -96,6 +173,20 @@ class ClusterCursor(Cursor):
         if gen is not None:
             self._gen = gen
             self._exhausted = False
+        self._closed = gen is None
+
+    def close(self) -> None:
+        """Exception-safe teardown: whatever ``_gen.close()`` does (a shard
+        erroring during its φ-cancelling close included), this cursor ends
+        up closed and re-closing is a no-op."""
+        if self._closed:
+            return
+        try:
+            super().close()
+        finally:
+            self._closed = True
+            self._exhausted = True
+            self._buf.clear()
 
 
 class ClusterPreparedStatement:
@@ -130,6 +221,7 @@ class ClusterSession:
         self.use_cache = use_cache
         self.prefetch_depth = prefetch_depth
         self._closed = False
+        self._cursors: List[ClusterCursor] = []
 
     def __enter__(self) -> "ClusterSession":
         return self
@@ -138,7 +230,29 @@ class ClusterSession:
         self.close()
 
     def close(self) -> None:
+        """Close the session AND every cursor it handed out: an abandoned
+        mid-iteration cursor still tears its shard pipelines down (each
+        close attempted even if an earlier one raises; first error
+        re-raised)."""
         self._closed = True
+        cursors, self._cursors = self._cursors, []
+        first: Optional[BaseException] = None
+        for cur in cursors:
+            try:
+                cur.close()
+            except BaseException as e:  # noqa: BLE001 -- visit every cursor
+                if first is None:
+                    first = e
+        if first is not None:
+            raise first
+
+    def _track(self, cur: ClusterCursor) -> ClusterCursor:
+        # prune finished cursors so long-lived serving sessions stay O(open)
+        self._cursors = [c for c in self._cursors
+                         if not (c._closed or c._exhausted)]
+        if not cur._closed:
+            self._cursors.append(cur)
+        return cur
 
     def prepare(self, text: str) -> ClusterPreparedStatement:
         return ClusterPreparedStatement(self, text)
@@ -172,21 +286,27 @@ class ClusterSession:
         route, owner, anchor = cdb._route(q, plan, params)
         keys = _projection_keys(q)
         if route == "routed":
-            ctx = ExecutionContext(cdb.shards[owner], params,
+            ctx = ExecutionContext(cdb.read_db(owner), params,
                                    prefetch_depth=self.prefetch_depth)
-            return ClusterCursor(execute_iter(plan, ctx, self.batch_rows),
-                                 keys=keys, rwlock=cdb.rwlock)
+            return self._track(
+                ClusterCursor(execute_iter(plan, ctx, self.batch_rows),
+                              keys=keys, rwlock=cdb.rwlock))
         limit = _root_limit(plan, params)
-        streams = [
-            execute_iter_tagged(plan,
-                                ExecutionContext(sh, params,
-                                                 prefetch_depth=self.prefetch_depth),
-                                anchor, self.batch_rows, limit=limit)
-            for sh in cdb.shards]
+        streams: List[Any] = []
+        try:
+            for s in cdb.active:
+                streams.append(cdb._shard_stream(
+                    plan, s, params, anchor, self.batch_rows, limit,
+                    self.prefetch_depth))
+        except BaseException:
+            # a later shard failing to open must not leak the earlier
+            # shards' pipelines
+            close_streams(streams)
+            raise
         gen = ordered_merge(streams,
                             batch_rows=cdb.cfg.cluster.merge_batch_rows,
                             limit=limit)
-        return ClusterCursor(gen, keys=keys, rwlock=cdb.rwlock)
+        return self._track(ClusterCursor(gen, keys=keys, rwlock=cdb.rwlock))
 
     def explain(self, text: str) -> Dict[str, Any]:
         return self.cdb.explain(text)
@@ -212,8 +332,11 @@ class ShardedPandaDB:
         self.n_shards = int(n_shards or self.cfg.cluster.n_shards)
         if self.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
-        self.shards: List[PandaDB] = [make_shard(self.cfg)
-                                      for _ in range(self.n_shards)]
+        #: the versioned node->shard assignment; its epoch joins the plan
+        #: cache key so topology changes invalidate cached plans
+        self.shard_map = ShardMap(self.n_shards, owner_fn)
+        self.owner_fn = self.shard_map.owner
+        self.shards: List[PandaDB] = self._make_shards()
         #: ONE plan cache for the whole cluster: any worker's prepared
         #: skeleton serves every shard (plans are db-independent trees)
         self.plan_cache = PlanCache()
@@ -223,10 +346,14 @@ class ShardedPandaDB:
         self.stats = StatisticsService(self.cfg.cost)
         self.rwlock = RWLock()
         self.wal = WriteAheadLog(None)    # leader statement log (§VII-A)
-        self.owner_fn = owner_fn or default_owner_fn(self.n_shards)
         self._blob_owner: Dict[int, int] = {}
         self._next_blob_id = 0
         self.route_counts: Dict[str, int] = {"routed": 0, "fanout": 0}
+        #: chaos-test observability: what the failure-masking machinery did
+        self.counters: Dict[str, int] = {
+            "hedges_fired": 0, "hedges_won": 0, "retries": 0,
+            "failovers": 0, "rebalance_moves": 0}
+        self.replica_reads: Dict[str, int] = {}
         self._route_lock = threading.Lock()   # serving workers race _route
         self._pool: Optional[ThreadPoolExecutor] = None
         if self.cfg.cluster.parallel_fanout and self.n_shards > 1:
@@ -234,6 +361,11 @@ class ShardedPandaDB:
                 max_workers=self.n_shards,
                 thread_name_prefix="shard-scatter")
         self._default_session: Optional[ClusterSession] = None
+
+    def _make_shards(self) -> List[PandaDB]:
+        """One PandaDB per shard; the replicated coordinator overrides this
+        to build replica sets and return the primaries."""
+        return [make_shard(self.cfg) for _ in range(self.n_shards)]
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -244,10 +376,60 @@ class ShardedPandaDB:
 
     @property
     def n_nodes(self) -> int:
-        return self.shards[0].graph.store.n_nodes
+        return self.lead_db().graph.store.n_nodes
+
+    @property
+    def active(self) -> List[int]:
+        """Shard ids currently serving (a recovered-away shard drops out)."""
+        return list(self.shard_map.active)
 
     def owner_of(self, node_id: int) -> int:
         return int(self.owner_fn(np.asarray([node_id], np.int64))[0])
+
+    # -- replica hooks (the replicated coordinator overrides these) -----------
+
+    def read_db(self, s: int) -> PandaDB:
+        """The db answering shard ``s``'s reads right now."""
+        return self.shards[s]
+
+    def lead_db(self) -> PandaDB:
+        """A live db for planning / statistics (any shard works: structure
+        and registry serials are replicated)."""
+        return self.read_db(self.shard_map.active[0])
+
+    def _shard_apply(self, s: int, op: str, *args: Any, **kw: Any) -> Any:
+        """Apply one write op to shard ``s`` (all its live replicas, once
+        replicated)."""
+        return _apply_op(self.shards[s], op, args, kw)
+
+    def _shard_stream(self, plan: lp.PlanOp, s: int, params: Dict[str, Any],
+                      anchor: str, batch_rows: int, limit: Optional[int],
+                      prefetch_depth: Optional[int]):
+        """One shard's tagged fan-out stream (replicated: hedged +
+        failover-wrapped)."""
+        ctx = ExecutionContext(self.shards[s], params,
+                               prefetch_depth=prefetch_depth)
+        return execute_iter_tagged(plan, ctx, anchor, batch_rows,
+                                   limit=limit)
+
+    def _count(self, name: str, n: int = 1) -> None:
+        with self._route_lock:
+            self.counters[name] = self.counters.get(name, 0) + n
+
+    def _count_replica_read(self, s: int, r: int) -> None:
+        key = f"s{s}r{r}"
+        with self._route_lock:
+            self.replica_reads[key] = self.replica_reads.get(key, 0) + 1
+
+    def cluster_counters(self) -> Dict[str, int]:
+        """Hedges fired/won, retries, failovers, rebalance moves and
+        per-node replica reads -- chaos tests assert on these instead of
+        timing."""
+        with self._route_lock:
+            out = dict(self.counters)
+            for key in sorted(self.replica_reads):
+                out[f"replica_reads:{key}"] = self.replica_reads[key]
+        return out
 
     # -- data path (routed writes) --------------------------------------------
 
@@ -259,7 +441,8 @@ class ShardedPandaDB:
         creation order."""
         nid = self.n_nodes
         owner = self.owner_of(nid)
-        owner_props: Dict[str, Any] = {}
+        scalar: Dict[str, Any] = {}
+        blob_specs: Dict[str, Tuple[int, bytes, str]] = {}
         for k, v in props.items():
             if isinstance(v, Blob):
                 # a Blob handle points into ONE shard's (or a single-node
@@ -275,31 +458,33 @@ class ShardedPandaDB:
                     content, mime = v.content, v.mime
                 else:
                     content, mime = \
-                        self.shards[owner].graph.blobs.resolve_source(v)
-                v = self.shards[owner].graph.blobs.create(
-                    content, mime, blob_id=self._next_blob_id)
-                self._blob_owner[v.blob_id] = owner
-                self._next_blob_id = v.blob_id + 1
-            owner_props[k] = v
-        for s, sh in enumerate(self.shards):
-            got = sh.graph.create_node(label,
-                                       **(owner_props if s == owner else {}))
-            assert got == nid, (got, nid)
-            sh.graph.store.set_owner(nid, s == owner)
+                        self.lead_db().graph.blobs.resolve_source(v)
+                bid = self._next_blob_id
+                blob_specs[k] = (bid, content, mime)
+                self._blob_owner[bid] = owner
+                self._next_blob_id = bid + 1
+            else:
+                scalar[k] = v
+        for s in self.active:
+            self._shard_apply(s, "create_node", nid, label,
+                              scalar if s == owner else {},
+                              blob_specs if s == owner else {},
+                              s == owner)
         return nid
 
     def create_relationship(self, src: int, dst: int, rel_type: str,
                             **props: Any) -> int:
         """Edges are co-located with their source node's shard."""
-        return self.shards[self.owner_of(src)].graph.create_relationship(
-            src, dst, rel_type, **props)
+        return self._shard_apply(self.owner_of(src), "create_rel",
+                                 src, dst, rel_type, **props)
 
     def register_extractor(self, sub_key: str, fn, batch_size: int = 64) -> int:
         """Models are replicated: every shard extracts φ for its own slice
         (and for query-side blobs), so serials stay aligned cluster-wide."""
         serial = 0
-        for sh in self.shards:
-            serial = sh.register_extractor(sub_key, fn, batch_size)
+        for s in self.active:
+            serial = self._shard_apply(s, "register_extractor", sub_key, fn,
+                                       batch_size)
         return serial
 
     # -- indexing ---------------------------------------------------------------
@@ -314,7 +499,8 @@ class ShardedPandaDB:
         shard its owner-assigned bucket contents via ``IVFIndex.shard``."""
         per: List[Tuple[np.ndarray, List[Any], int]] = []
         column_seen = False
-        for s, sh in enumerate(self.shards):
+        for s in self.active:
+            sh = self.read_db(s)
             try:
                 bids = sh.blob_ids_for(prop_key)
                 column_seen = True
@@ -333,7 +519,7 @@ class ShardedPandaDB:
         order = np.argsort(all_bids, kind="stable")
         all_bids = all_bids[order]
         all_vecs = all_vecs[order]
-        serial = self.shards[0].registry.serial(sub_key)
+        serial = self.lead_db().registry.serial(sub_key)
         cfg = cfg or dataclasses.replace(self.cfg.index,
                                          dim=all_vecs.shape[1])
         index = IVFIndex.build(all_vecs, ids=all_bids, cfg=cfg,
@@ -341,9 +527,8 @@ class ShardedPandaDB:
         assign = np.asarray([self._blob_owner[int(b)] for b in index.ids],
                             np.int64)
         pieces = index.shard(self.n_shards, assign=assign)
-        for s, sh in enumerate(self.shards):
-            sh.indexes[sub_key] = pieces[s]
-            sh.stats.note_index_rebuild(sub_key)
+        for s in self.active:
+            self._shard_apply(s, "set_index", sub_key, pieces[s])
         self.stats.note_index_rebuild(sub_key)
         return pieces
 
@@ -355,10 +540,10 @@ class ShardedPandaDB:
         if owner is None:
             raise KeyError(f"blob {blob_id} was not created through this "
                            f"coordinator")
-        self.shards[owner].index_insert(sub_key, int(blob_id))
+        self._shard_apply(owner, "index_insert", sub_key, int(blob_id))
 
     def index_pieces(self, sub_key: str) -> List[IVFIndex]:
-        return [sh.indexes[sub_key] for sh in self.shards]
+        return [self.read_db(s).indexes[sub_key] for s in self.active]
 
     # -- kNN scatter-gather -----------------------------------------------------
 
@@ -373,7 +558,7 @@ class ShardedPandaDB:
         return scatter_gather_knn(
             self.index_pieces(sub_key), queries, k, nprobe=nprobe,
             mode=mode, rerank=rerank,
-            stats=[sh.stats for sh in self.shards],
+            stats=[self.read_db(s).stats for s in self.active],
             record=self.stats.record_shard_scan,
             pool=self._pool)
 
@@ -414,29 +599,35 @@ class ShardedPandaDB:
         plan = self._plan_cached(skeleton_of(text), q, optimized=True)
         anchor = fanout_anchor(plan)
         routable = id_bound_expr(q, anchor) is not None
-        cost = estimate_plan_cost(plan, self.shards[0].stats)
+        n_active = len(self.active)
+        cost = estimate_plan_cost(plan, self.lead_db().stats)
         return {
             "anchor": anchor,
-            "route": self.stats.choose_shard_route(cost, self.n_shards,
+            "route": self.stats.choose_shard_route(cost, n_active,
                                                    routable),
-            "routed_cost": self.stats.shard_routed_cost(cost, self.n_shards),
-            "fanout_cost": self.stats.shard_fanout_cost(cost, self.n_shards),
+            "routed_cost": self.stats.shard_routed_cost(cost, n_active),
+            "fanout_cost": self.stats.shard_fanout_cost(cost, n_active),
             "n_shards": self.n_shards,
+            "active_shards": self.active,
+            "shard_map_epoch": self.shard_map.epoch,
             "plan": plan.describe(),
             "plan_cache": self.plan_cache.stats(),
             "route_counts": dict(self.route_counts),
+            "counters": self.cluster_counters(),
         }
 
     # -- internals --------------------------------------------------------------
 
     def _plan_cached(self, skeleton: str, q: MatchQuery, optimized: bool,
                      use_cache: bool = True) -> lp.PlanOp:
-        lead = self.shards[0]
+        lead = self.lead_db()
         lead.stats.refresh_from_graph(lead.graph)
         lead.stats.refresh_extractor_stats(lead.registry)
         if not use_cache:
             return plan_query(lead, q, optimized)
-        key = (skeleton, optimized, lead.stats.epoch)
+        # shard_map.epoch in the key: a rebalance/retire invalidates every
+        # cached plan (routing decisions bake in the topology)
+        key = (skeleton, optimized, lead.stats.epoch, self.shard_map.epoch)
         _, plan = self.plan_cache.get_or_build(
             key, lambda: (q, plan_query(lead, q, optimized)))
         return plan
@@ -450,8 +641,8 @@ class ShardedPandaDB:
         and match nothing)."""
         anchor = fanout_anchor(plan)
         bound = id_bound_expr(q, anchor)
-        cost = estimate_plan_cost(plan, self.shards[0].stats)
-        choice = self.stats.choose_shard_route(cost, self.n_shards,
+        cost = estimate_plan_cost(plan, self.lead_db().stats)
+        choice = self.stats.choose_shard_route(cost, len(self.active),
                                                routable=bound is not None)
         with self._route_lock:
             self.route_counts[choice] = self.route_counts.get(choice, 0) + 1
@@ -498,7 +689,7 @@ class ShardedPandaDB:
                             and v.name == "createFromSource":
                         src = resolve(v.args[0])
                         content, mime = \
-                            self.shards[0].graph.blobs.resolve_source(
+                            self.lead_db().graph.blobs.resolve_source(
                                 src if isinstance(src, (str, bytes))
                                 else str(src))
                         # registered on the owner at apply, mime intact

@@ -20,7 +20,7 @@ Layout rules (what lives where):
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -49,3 +49,60 @@ def default_owner_fn(n_shards: int):
     def fn(ids: np.ndarray) -> np.ndarray:
         return owner_shard(np.asarray(ids), n_shards)
     return fn
+
+
+class ShardMap:
+    """Node -> owning shard as a *versioned, mutable* assignment.
+
+    The base function is the stable-hash default (or an injected policy);
+    ``overrides`` records per-node moves (rebalance / dead-shard recovery)
+    and ``active`` the shards currently serving.  Base assignments landing
+    on a retired shard are re-dealt among the survivors by re-hashing --
+    the same rule :meth:`Rebalancer.recovery_targets` uses, so new nodes
+    created after a recovery agree with the recovered layout.
+
+    Every topology change bumps ``epoch``; the coordinator folds it into
+    the plan-cache key and its statistics epoch so no cached plan or
+    shard-positional cost term outlives the assignment it was computed
+    for."""
+
+    def __init__(self, n_shards: int,
+                 base_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None
+                 ) -> None:
+        self.n_shards = int(n_shards)
+        self.base_fn = base_fn or default_owner_fn(self.n_shards)
+        self.overrides: Dict[int, int] = {}
+        self.active: List[int] = list(range(self.n_shards))
+        self.epoch = 0
+
+    def owner(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        out = np.array(self.base_fn(ids), np.int64, copy=True)
+        if len(self.active) != self.n_shards:
+            act = np.asarray(self.active, np.int64)
+            dead = ~np.isin(out, act)
+            if dead.any():
+                out[dead] = act[owner_shard(ids[dead], len(act))]
+        if self.overrides:
+            for i, nid in enumerate(ids.tolist()):
+                ov = self.overrides.get(int(nid))
+                if ov is not None:
+                    out[i] = ov
+        return out
+
+    def reassign(self, targets: Dict[int, int]) -> None:
+        """Move nodes to explicit owners (one epoch bump per batch)."""
+        if not targets:
+            return
+        for nid, shard in targets.items():
+            self.overrides[int(nid)] = int(shard)
+        self.epoch += 1
+
+    def retire(self, shard: int) -> None:
+        """Take a (dead) shard out of serving; its base-hash slice re-deals
+        among the survivors."""
+        if shard in self.active:
+            if len(self.active) == 1:
+                raise ValueError("cannot retire the last active shard")
+            self.active.remove(shard)
+            self.epoch += 1

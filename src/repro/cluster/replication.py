@@ -1,0 +1,526 @@
+"""Self-healing replicated cluster (paper §VII-A high availability).
+
+The paper's cluster keeps R copies of every shard behind the leader's
+versioned WAL; here each shard becomes a :class:`ReplicaSet` of R full
+:class:`~repro.core.database.PandaDB` nodes:
+
+* **writes** go through the replica set's op log (the leader-WAL path):
+  every coordinator write is a named ``(op, args, kwargs)`` tuple recorded
+  with an ascending version and applied to every live replica, so a revived
+  replica replays exactly the ops it missed (:meth:`ReplicaSet.revive` ==
+  the paper's version catch-up for a rejoining node).
+* **reads** pick a replica by observed per-replica latency EWMA
+  (``StatisticsService.choose_replica``) and are failure-masked three ways:
+  retry-with-backoff on transient errors, failover to a sibling replica on
+  fail-stop (streams fast-forward past already-merged anchor ids, so the
+  merged output is byte-identical to a healthy run), and **hedged reads** --
+  if the preferred replica has not answered within a latency-quantile
+  deadline (``stats.hedge_deadline``), a second replica races it and the
+  first responder wins; the loser is cancelled through the φ-cancelling
+  iterator close.
+
+Fault injection (:class:`FaultInjector`: fail-stop, slow-node, error-on-
+call, all driven by a seeded RNG) is part of the subsystem so chaos tests
+and the failover benchmark exercise exactly the production code paths.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.configs.pandadb import PandaDBConfig
+from repro.core.database import PandaDB
+from repro.core.executor import ExecutionContext, execute_iter_tagged
+from repro.core.vector_index import scatter_gather_knn
+from repro.cluster.coordinator import ShardedPandaDB, _apply_op
+from repro.cluster.partition import make_shard
+from repro.graphstore.wal import WriteAheadLog
+
+
+class ReplicaDown(RuntimeError):
+    """The replica is fail-stopped (or a whole shard has no live replica)."""
+
+
+class ReplicaError(RuntimeError):
+    """A transient per-call fault -- retryable on the same replica."""
+
+
+class FaultInjector:
+    """Deterministic fault injection, consulted on every replica access.
+
+    All randomness (probabilistic slow-downs) comes from one seeded
+    generator, so chaos tests and the failover benchmark are exactly
+    reproducible run-to-run."""
+
+    def __init__(self, seed: int = 0) -> None:
+        self.rng = np.random.default_rng(seed)
+        self._down: Set[Tuple[int, int]] = set()
+        self._slow: Dict[Tuple[int, int], Tuple[float, float]] = {}
+        self._errors: Dict[Tuple[int, int], int] = {}
+        self.injected: Dict[str, int] = {"fail_stops": 0, "slow_sleeps": 0,
+                                         "errors": 0}
+        self._lock = threading.Lock()
+
+    def fail_stop(self, shard: int, replica: int) -> None:
+        """Kill (shard, replica): every subsequent access raises
+        :class:`ReplicaDown` until :meth:`heal`."""
+        with self._lock:
+            self._down.add((shard, replica))
+            self.injected["fail_stops"] += 1
+
+    def slow(self, shard: int, replica: int, delay_s: float,
+             prob: float = 1.0) -> None:
+        """Each access sleeps ``delay_s`` with probability ``prob``."""
+        with self._lock:
+            self._slow[(shard, replica)] = (float(delay_s), float(prob))
+
+    def error_on_call(self, shard: int, replica: int, times: int = 1) -> None:
+        """The next ``times`` accesses raise :class:`ReplicaError`."""
+        with self._lock:
+            self._errors[(shard, replica)] = \
+                self._errors.get((shard, replica), 0) + int(times)
+
+    def heal(self, shard: int, replica: int) -> None:
+        with self._lock:
+            self._down.discard((shard, replica))
+            self._slow.pop((shard, replica), None)
+            self._errors.pop((shard, replica), None)
+
+    def is_down(self, shard: int, replica: int) -> bool:
+        with self._lock:
+            return (shard, replica) in self._down
+
+    def check(self, shard: int, replica: int) -> None:
+        """Read-path gate: raise / delay according to the injected faults
+        (the sleep happens outside the lock so slow replicas do not stall
+        fault bookkeeping for the healthy ones)."""
+        key = (shard, replica)
+        delay = 0.0
+        with self._lock:
+            if key in self._down:
+                raise ReplicaDown(f"shard {shard} replica {replica} is down")
+            n = self._errors.get(key, 0)
+            if n > 0:
+                self._errors[key] = n - 1
+                self.injected["errors"] += 1
+                raise ReplicaError(
+                    f"injected transient error on shard {shard} "
+                    f"replica {replica}")
+            sl = self._slow.get(key)
+            if sl is not None:
+                d, p = sl
+                if p >= 1.0 or float(self.rng.random()) < p:
+                    delay = d
+                    self.injected["slow_sleeps"] += 1
+        if delay > 0.0:
+            time.sleep(delay)
+
+
+class ReplicaSet:
+    """R copies of one shard behind a versioned op log (§VII-A).
+
+    Writes append to the log first, then apply to every live replica;
+    ``versions[r]`` tracks how far replica ``r`` has replayed, so
+    :meth:`revive` is exactly the paper's catch-up: replay every logged op
+    past the local version, then rejoin."""
+
+    def __init__(self, shard_id: int, replicas: List[PandaDB],
+                 faults: FaultInjector,
+                 on_dead: Optional[Callable[[int, int], None]] = None) -> None:
+        self.shard_id = shard_id
+        self.replicas = replicas
+        self.faults = faults
+        self.alive = [True] * len(replicas)
+        self.versions = [0] * len(replicas)
+        self.oplog = WriteAheadLog(None)
+        #: notified once per alive->dead transition the set itself observes
+        #: (the coordinator counts these as failovers)
+        self.on_dead = on_dead
+
+    def _fold_down(self, r: int) -> None:
+        self.alive[r] = False
+        if self.on_dead is not None:
+            self.on_dead(self.shard_id, r)
+
+    def live(self) -> List[int]:
+        """Live replica indices; folds fail-stops observed since the last
+        call into ``alive``.  Raises :class:`ReplicaDown` when the whole
+        set is gone (recovery is then the rebalancer's job)."""
+        out: List[int] = []
+        for r in range(len(self.replicas)):
+            if self.alive[r] and self.faults.is_down(self.shard_id, r):
+                self._fold_down(r)
+            if self.alive[r]:
+                out.append(r)
+        if not out:
+            raise ReplicaDown(f"shard {self.shard_id}: no live replicas")
+        return out
+
+    def mark_dead(self, r: int) -> None:
+        if self.alive[r]:
+            self._fold_down(r)
+
+    def apply(self, op: str, args: tuple, kw: Dict[str, Any]) -> Any:
+        """Log the op, then apply it to every live replica (write path:
+        only fail-stop is consulted -- a slow replica still applies every
+        write, so replicas never diverge)."""
+        ver = self.oplog.append((op, args, kw))
+        result: Any = None
+        applied = False
+        for r, db in enumerate(self.replicas):
+            if not self.alive[r]:
+                continue
+            if self.faults.is_down(self.shard_id, r):
+                self._fold_down(r)
+                continue
+            result = _apply_op(db, op, args, kw)
+            self.versions[r] = ver
+            applied = True
+        if not applied:
+            raise ReplicaDown(
+                f"shard {self.shard_id}: write {op!r} found no live replica")
+        return result
+
+    def revive(self, r: int) -> int:
+        """Heal the fault, replay the missed ops in log order, rejoin.
+        Returns the number of ops replayed."""
+        self.faults.heal(self.shard_id, r)
+        db = self.replicas[r]
+        before = self.versions[r]
+        self.versions[r] = self.oplog.catch_up(
+            before, lambda e: _apply_op(db, e[0], e[1], e[2]))
+        self.alive[r] = True
+        return self.versions[r] - before
+
+
+# -- hedged + failover read machinery -----------------------------------------
+
+_DONE = object()
+
+
+def _close_quiet(it: Any) -> None:
+    close = getattr(it, "close", None)
+    if close is None:
+        return
+    try:
+        close()
+    except Exception:  # noqa: BLE001 -- loser teardown is best-effort
+        pass
+
+
+def _loser_reaper(cdb: "ReplicatedPandaDB", shard: int, r: int,
+                  on_loser: Optional[Callable[[Any], None]]):
+    def reap(fu) -> None:
+        exc = fu.exception()
+        if exc is not None:
+            if isinstance(exc, ReplicaDown):
+                cdb.replica_sets[shard].mark_dead(r)
+            return
+        if on_loser is not None:
+            on_loser(fu.result())
+    return reap
+
+
+def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
+                call: Callable[[int], Any],
+                on_loser: Optional[Callable[[Any], None]] = None
+                ) -> Tuple[Any, int]:
+    """Run ``call(replica)`` on the latency-preferred replica; if it has
+    not answered within the shard's hedge deadline, race the next-best
+    replica and take the first *success* (ties in the same wait batch
+    prefer the primary, so an un-faulted cluster behaves exactly
+    un-hedged).  Returns ``(result, winning replica)``.
+
+    Losers are not abandoned: a done-callback closes their result through
+    ``on_loser`` (for streams: the φ-cancelling iterator close) and folds a
+    late :class:`ReplicaDown` into the replica set."""
+    primary = cdb.stats.choose_replica(shard, live)
+    pool = cdb._hedge_pool
+    if pool is None or len(live) < 2:
+        return call(primary), primary
+    futs = {pool.submit(call, primary): primary}
+    done, _ = wait(list(futs), timeout=cdb.stats.hedge_deadline(shard))
+    if not done:
+        backup = min(
+            (r for r in live if r != primary),
+            key=lambda r: (cdb.stats.replica_read_latency(shard, r), r))
+        cdb._count("hedges_fired")
+        futs[pool.submit(call, backup)] = backup
+    winner = None
+    last_exc: Optional[BaseException] = None
+    pending = set(futs)
+    while pending and winner is None:
+        done, pending = wait(pending, return_when=FIRST_COMPLETED)
+        for fu in sorted(done, key=lambda f: futs[f] != primary):
+            exc = fu.exception()
+            if exc is None:
+                winner = fu
+                break
+            last_exc = exc
+            if isinstance(exc, ReplicaDown):
+                cdb.replica_sets[shard].mark_dead(futs[fu])
+    if winner is None:
+        assert last_exc is not None
+        raise last_exc
+    if futs[winner] != primary:
+        cdb._count("hedges_won")
+    for fu, r in futs.items():
+        if fu is not winner:
+            fu.add_done_callback(_loser_reaper(cdb, shard, r, on_loser))
+    return winner.result(), futs[winner]
+
+
+def _pull_first(cdb: "ReplicatedPandaDB", shard: int, r: int,
+                open_on: Callable[[int], Any]) -> Tuple[Any, Any, float]:
+    """Open replica ``r``'s stream and pull its first batch (streams are
+    lazy, so hedging must cover the first real pull, not just iterator
+    construction).  Returns (iterator, first batch or _DONE, seconds)."""
+    t0 = time.perf_counter()
+    cdb.faults.check(shard, r)
+    it = open_on(r)
+    try:
+        first = next(it, _DONE)
+    except BaseException:
+        _close_quiet(it)
+        raise
+    return it, first, time.perf_counter() - t0
+
+
+def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
+                 open_on: Callable[[int], Any]) -> Tuple[Any, Any, int]:
+    """Open a stream on *some* live replica: hedged first pull, transient
+    errors retried with linear backoff, fail-stops failed over until the
+    replica set itself is exhausted."""
+    rs = cdb.replica_sets[shard]
+    attempts = 0
+    while True:
+        live = rs.live()
+        try:
+            (it, first, dt), r = hedged_call(
+                cdb, shard, live,
+                lambda rr: _pull_first(cdb, shard, rr, open_on),
+                on_loser=lambda res: _close_quiet(res[0]))
+        except ReplicaDown:
+            continue        # rs.live() shrinks; raises once the set is gone
+        except ReplicaError:
+            attempts += 1
+            cdb._count("retries")
+            if attempts > cdb.cfg.cluster.read_retries:
+                raise
+            time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
+            continue
+        cdb.stats.record_replica_read(shard, r, dt)
+        cdb._count_replica_read(shard, r)
+        return it, first, r
+
+
+def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
+                     open_on: Callable[[int], Any]):
+    """A tagged per-shard stream that survives replica failure mid-pull.
+
+    Every batch pull is fault-gated and latency-recorded; on fail-stop the
+    stream fails over: a fresh iterator opens on a sibling replica and
+    fast-forwards past the anchor ids already yielded (streams are
+    non-decreasing in anchor id and identical across replicas, so the
+    filter ``ids > last_id`` resumes exactly where the dead replica
+    stopped -- the merged output is byte-identical to a healthy run)."""
+    rs = cdb.replica_sets[shard]
+    last_id = -1
+    it = None
+    r = -1
+    try:
+        while True:
+            if it is None:
+                it, nxt, r = _open_stream(cdb, shard, open_on)
+            else:
+                attempts = 0
+                while True:
+                    t0 = time.perf_counter()
+                    try:
+                        cdb.faults.check(shard, r)
+                        nxt = next(it, _DONE)
+                    except ReplicaDown:
+                        rs.mark_dead(r)
+                        _close_quiet(it)
+                        it = None
+                        break
+                    except ReplicaError:
+                        attempts += 1
+                        cdb._count("retries")
+                        if attempts > cdb.cfg.cluster.read_retries:
+                            rs.mark_dead(r)
+                            _close_quiet(it)
+                            it = None
+                            break
+                        time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
+                        continue
+                    cdb.stats.record_replica_read(
+                        shard, r, time.perf_counter() - t0)
+                    break
+                if it is None:
+                    continue            # reopen on a sibling + fast-forward
+            if nxt is _DONE:
+                return
+            ids, rows = nxt
+            if last_id >= 0 and len(ids) and int(ids[0]) <= last_id:
+                keep = ids > last_id
+                rows = [row for row, kk in zip(rows, keep) if kk]
+                ids = ids[keep]
+            if len(ids):
+                last_id = int(ids[-1])
+                yield ids, rows
+    finally:
+        if it is not None:
+            it.close()
+
+
+class _ResilientIndex:
+    """Duck-typed shard view for :func:`scatter_gather_knn`: ``search_many``
+    hedges across the shard's live replicas with retry + failover, so one
+    merge schedule serves healthy and degraded clusters identically
+    (replicas hold the same piece, so any winner returns the same rows)."""
+
+    def __init__(self, cdb: "ReplicatedPandaDB", shard: int,
+                 sub_key: str) -> None:
+        self.cdb = cdb
+        self.shard = shard
+        self.sub_key = sub_key
+        self.scan_rows = 0
+        rs = cdb.replica_sets[shard]
+        piece = rs.replicas[rs.live()[0]].indexes[sub_key]
+        self.n_total = piece.n_total
+        self.centroids = piece.centroids
+        self.cfg = piece.cfg
+
+    def _search_on(self, r: int, queries, k, nprobe, mode, rerank):
+        cdb, s = self.cdb, self.shard
+        t0 = time.perf_counter()
+        cdb.faults.check(s, r)
+        db = cdb.replica_sets[s].replicas[r]
+        piece = db.indexes[self.sub_key]
+        rows0 = piece.scan_rows
+        v, i = piece.search_many(queries, k, nprobe, stats=db.stats,
+                                 mode=mode, rerank=rerank)
+        cdb.stats.record_replica_read(s, r, time.perf_counter() - t0)
+        cdb._count_replica_read(s, r)
+        return v, i, piece.scan_rows - rows0
+
+    def search_many(self, queries, k, nprobe=None, stats=None, mode="auto",
+                    rerank=True):
+        cdb, s = self.cdb, self.shard
+        rs = cdb.replica_sets[s]
+        attempts = 0
+        while True:
+            live = rs.live()
+            try:
+                (v, i, rows), _ = hedged_call(
+                    cdb, s, live,
+                    lambda rr: self._search_on(rr, queries, k, nprobe, mode,
+                                               rerank))
+            except ReplicaDown:
+                continue
+            except ReplicaError:
+                attempts += 1
+                cdb._count("retries")
+                if attempts > cdb.cfg.cluster.read_retries:
+                    raise
+                time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
+                continue
+            self.scan_rows += rows
+            return v, i
+
+
+class ReplicatedPandaDB(ShardedPandaDB):
+    """:class:`ShardedPandaDB` with R replicas per shard.
+
+    Same coordinator surface (sessions, kNN, CREATE, explain); the replica
+    hooks route reads through latency-based replica choice + hedging +
+    failover and writes through the per-shard op log."""
+
+    def __init__(self, n_shards: Optional[int] = None,
+                 cfg: Optional[PandaDBConfig] = None,
+                 owner_fn=None, replication: Optional[int] = None,
+                 faults: Optional[FaultInjector] = None) -> None:
+        cfg = cfg or PandaDBConfig()
+        self.replication = int(replication or cfg.cluster.replication)
+        if self.replication < 1:
+            raise ValueError(
+                f"replication must be >= 1, got {self.replication}")
+        self.faults = faults or FaultInjector(seed=0)
+        self.replica_sets: List[ReplicaSet] = []
+        self._hedge_pool: Optional[ThreadPoolExecutor] = None
+        super().__init__(n_shards, cfg, owner_fn)
+        for rs in self.replica_sets:
+            for db in rs.replicas:
+                db.plan_cache = self.plan_cache
+        if self.cfg.cluster.hedge_reads and self.replication > 1:
+            # dedicated pool: hedges are issued FROM scatter-pool workers,
+            # so sharing that pool could deadlock at full fan-out
+            self._hedge_pool = ThreadPoolExecutor(
+                max_workers=2 * self.n_shards, thread_name_prefix="hedge")
+
+    def _make_shards(self) -> List[PandaDB]:
+        # every alive->dead transition a replica set observes is a failover
+        # (counters exist by first use: live() only runs post-__init__)
+        on_dead = lambda s, r: self._count("failovers")  # noqa: E731
+        self.replica_sets = [
+            ReplicaSet(s, [make_shard(self.cfg)
+                           for _ in range(self.replication)], self.faults,
+                       on_dead=on_dead)
+            for s in range(self.n_shards)]
+        return [rs.replicas[0] for rs in self.replica_sets]
+
+    def close(self) -> None:
+        super().close()
+        if self._hedge_pool is not None:
+            self._hedge_pool.shutdown(wait=False)
+            self._hedge_pool = None
+
+    def revive(self, shard: int, replica: int) -> int:
+        """Heal + catch up one replica from the shard's op log (§VII-A
+        rejoin).  Returns the number of ops replayed."""
+        return self.replica_sets[shard].revive(replica)
+
+    # -- replica hooks ---------------------------------------------------------
+
+    def read_db(self, s: int) -> PandaDB:
+        rs = self.replica_sets[s]
+        r = self.stats.choose_replica(s, rs.live())
+        self._count_replica_read(s, r)
+        return rs.replicas[r]
+
+    def _shard_apply(self, s: int, op: str, *args: Any, **kw: Any) -> Any:
+        return self.replica_sets[s].apply(op, args, kw)
+
+    def _shard_stream(self, plan, s, params, anchor, batch_rows, limit,
+                      prefetch_depth):
+        rs = self.replica_sets[s]
+
+        def open_on(r: int):
+            ctx = ExecutionContext(rs.replicas[r], params,
+                                   prefetch_depth=prefetch_depth)
+            return execute_iter_tagged(plan, ctx, anchor, batch_rows,
+                                       limit=limit)
+
+        return resilient_stream(self, s, open_on)
+
+    def knn(self, sub_key: str, queries, k: int, nprobe: Optional[int] = None,
+            mode: str = "auto", rerank: bool = True):
+        views = [_ResilientIndex(self, s, sub_key) for s in self.active]
+        return scatter_gather_knn(views, queries, k, nprobe=nprobe,
+                                  mode=mode, rerank=rerank, stats=None,
+                                  record=self.stats.record_shard_scan,
+                                  pool=self._pool)
+
+    def explain(self, text: str) -> Dict[str, Any]:
+        out = super().explain(text)
+        out["replication"] = self.replication
+        out["alive"] = {s: list(self.replica_sets[s].alive)
+                        for s in range(self.n_shards)}
+        out["hedge_deadline_s"] = {s: self.stats.hedge_deadline(s)
+                                   for s in self.active}
+        return out

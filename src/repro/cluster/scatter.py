@@ -25,6 +25,7 @@ hits the cap.
 from __future__ import annotations
 
 import heapq
+import sys
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -199,5 +200,24 @@ def ordered_merge(streams: List[Iterator[Tuple[np.ndarray, List[Dict]]]],
         if out:
             yield out
     finally:
-        for st in streams:
-            st.close()
+        close_streams(streams)
+
+
+def close_streams(streams: List[Any]) -> None:
+    """Close every per-shard iterator, even when one ``close()`` raises
+    (a shard erroring mid-scatter must not leak the other shards' pipeline
+    workers / in-flight φ batches).  The first close error is re-raised --
+    unless an exception is already propagating (including the GeneratorExit
+    of a cursor teardown), which keeps priority."""
+    first: Optional[BaseException] = None
+    for st in streams:
+        close = getattr(st, "close", None)
+        if close is None:
+            continue
+        try:
+            close()
+        except BaseException as e:  # noqa: BLE001 -- teardown must visit all
+            if first is None:
+                first = e
+    if first is not None and sys.exc_info()[0] is None:
+        raise first

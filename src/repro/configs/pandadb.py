@@ -81,6 +81,19 @@ class CostModelConfig:
     #                                          (ctx setup + queueing); the
     #                                          fan-out term routed plans
     #                                          avoid
+    # -- replica sets (§VII-A replication) --
+    default_replica_read_s: float = 5e-3     # per-read latency prior until a
+    #                                          replica has been measured
+    hedge_quantile: float = 0.5              # latency quantile the hedge
+    #                                          deadline is derived from (the
+    #                                          median stays honest even when
+    #                                          a minority of reads are
+    #                                          fault-slowed; p9x would learn
+    #                                          the outliers it should mask)
+    hedge_deadline_mult: float = 3.0         # deadline = quantile * mult
+    hedge_floor_s: float = 5e-3              # minimum deadline (cold start /
+    #                                          very fast shards: don't hedge
+    #                                          on scheduler noise)
 
 
 @dataclass(frozen=True)
@@ -93,6 +106,16 @@ class ClusterConfig:
     #                                (results are merged in shard order, so
     #                                output is deterministic either way)
     merge_batch_rows: int = 256    # coordinator's ordered-merge chunk size
+    # -- self-healing replication (ReplicatedPandaDB) --
+    replication: int = 1           # replicas per shard (1 = no replica sets)
+    hedge_reads: bool = True       # race a second replica once a read leg
+    #                                misses the latency-quantile deadline
+    #                                (first responder wins, loser closed)
+    read_retries: int = 2          # transient-error retries per read leg
+    #                                before failing over to another replica
+    retry_backoff_s: float = 0.002  # linear backoff between retries
+    rebalance_skew: float = 2.0    # max/mean owned-rows ratio above which
+    #                                the Rebalancer proposes moves
 
 
 @dataclass(frozen=True)

@@ -9,7 +9,8 @@ over input table T (Definition 5.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from collections import deque
+from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -37,6 +38,9 @@ class StatisticsService:
         self.epoch = 0
         self._graph_sig: Optional[tuple] = None
         self._extractor_serials: Dict[str, int] = {}
+        # per-shard recent read latencies (replica sets): the hedge deadline
+        # is a quantile over this window
+        self._replica_lat: Dict[int, "deque[float]"] = {}
 
     # -- speed statistics ------------------------------------------------------
 
@@ -217,6 +221,56 @@ class StatisticsService:
         routed = self.shard_routed_cost(plan_cost, n_shards)
         return ("routed" if routed
                 <= self.shard_fanout_cost(plan_cost, n_shards) else "fanout")
+
+    # -- replica sets (per-replica latency EWMAs + hedge pricing) --------------
+
+    def record_replica_read(self, shard: int, replica: int,
+                            latency_s: float) -> None:
+        """One read leg's observed wall latency on (shard, replica).  Keyed
+        per replica (NOT per row: replica choice compares whole-leg
+        latencies, however many rows the leg scanned) and folded into the
+        shared EWMA table; the shard's recent-latency window additionally
+        feeds :meth:`hedge_deadline`."""
+        key = f"shard{shard}r{replica}:read"
+        a = self.cfg.ewma_alpha
+        old = self.speeds.get(key)
+        self.speeds[key] = (latency_s if old is None
+                            else a * latency_s + (1 - a) * old)
+        self.counts[key] = self.counts.get(key, 0) + 1
+        self._replica_lat.setdefault(
+            shard, deque(maxlen=64)).append(float(latency_s))
+
+    def replica_read_latency(self, shard: int, replica: int) -> float:
+        """EWMA read latency of one replica; config prior until measured."""
+        return self.speeds.get(f"shard{shard}r{replica}:read",
+                               self.cfg.default_replica_read_s)
+
+    def choose_replica(self, shard: int, live: Sequence[int]) -> int:
+        """The live replica with the lowest observed read latency (ties to
+        the lowest replica index, so cold-start choice is deterministic)."""
+        if not live:
+            raise ValueError(f"shard {shard}: no live replicas to choose")
+        return min(live,
+                   key=lambda r: (self.replica_read_latency(shard, r), r))
+
+    def hedge_deadline(self, shard: int) -> float:
+        """How long a read leg may run on its chosen replica before a
+        hedge fires on a second one: ``hedge_quantile`` of the shard's
+        recent read latencies x ``hedge_deadline_mult``, floored at
+        ``hedge_floor_s`` -- priced from observations, so a shard whose
+        reads are genuinely slow is not hedged into double work while a
+        stalled replica on a fast shard is raced almost immediately."""
+        lat = self._replica_lat.get(shard)
+        if not lat or len(lat) < 4:
+            return self.cfg.hedge_floor_s
+        q = float(np.quantile(np.asarray(lat), self.cfg.hedge_quantile))
+        return max(self.cfg.hedge_floor_s,
+                   q * self.cfg.hedge_deadline_mult)
+
+    def note_topology_change(self) -> None:
+        """The shard map changed (rebalance move / shard retirement): every
+        cached plan and shard-positional cost term may be stale."""
+        self.epoch += 1
 
     def suggest_prefetch_depth(self, sem_op: lp.PlanOp,
                                cap: int) -> Optional[int]:

@@ -956,6 +956,36 @@ class IVFIndex:
                                           else None)))
         return shards
 
+    @staticmethod
+    def merge_pieces(pieces: Sequence["IVFIndex"]) -> "IVFIndex":
+        """Reassemble one global index from shard pieces (the rebalance /
+        dead-shard-recovery path: gather surviving pieces, merge, then
+        re-deal with ``shard(assign=)`` under the new owner map).
+
+        Pieces must share centroids + codebooks (``shard()`` slices one
+        build, so they do).  Rows are re-sorted by (bucket, external id),
+        which reproduces the original batch-build layout exactly -- the
+        build groups blob-id-sorted input stably by bucket -- so a merged
+        index re-sharded under the same assignment is bit-identical to the
+        original pieces.  Rows appended by DynamicIndexing sit in insertion
+        order within their bucket, so after dynamic inserts the merged
+        layout can differ from the pre-merge one in tie order only."""
+        pieces = list(pieces)
+        if not pieces:
+            raise ValueError("merge_pieces needs at least one piece")
+        for p in pieces:
+            p.compact()
+        base = pieces[0]
+        bucket = np.concatenate([p.bucket_of for p in pieces])
+        vecs = np.concatenate([p.vectors for p in pieces])
+        ids = np.concatenate([p.ids for p in pieces])
+        codes = (np.concatenate([p.codes for p in pieces])
+                 if base.codes is not None else None)
+        order = np.lexsort((ids, bucket))
+        return IVFIndex(base.cfg, base.centroids, bucket[order], vecs[order],
+                        ids[order], serial=base.serial, pq=base.pq,
+                        codes=(codes[order] if codes is not None else None))
+
 
 def _exact_scores_np(queries: np.ndarray, cand: np.ndarray, metric: str
                      ) -> np.ndarray:

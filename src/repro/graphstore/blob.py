@@ -49,6 +49,10 @@ class BlobValueManager:
         row, col = self.locate(blob_id)
         return self._rows.get(row, {}).get(col)
 
+    def delete(self, blob_id: int) -> None:
+        row, col = self.locate(blob_id)
+        self._rows.get(row, {}).pop(col, None)
+
     def stream(self, blob_id: int) -> Iterator[bytes]:
         """Streaming read (paper: BLOB transfer engine<->manager is streaming)."""
         content = self.get(blob_id)
@@ -120,6 +124,13 @@ class BlobStore:
         if blob_id in self._inline:
             return self._inline[blob_id]
         return self.manager.get(blob_id)
+
+    def delete(self, blob_id: int) -> None:
+        """Drop content + metadata (a rebalance move takes the payload off
+        the old owner once the new owner has registered it)."""
+        self.meta.pop(blob_id, None)
+        self._inline.pop(blob_id, None)
+        self.manager.delete(blob_id)
 
     def stream(self, blob_id: int) -> Iterator[bytes]:
         if blob_id in self._inline:

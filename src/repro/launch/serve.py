@@ -2,12 +2,22 @@
 mixed CypherPlus workload (Fig 8's harness as a CLI).
 
   PYTHONPATH=src python -m repro.launch.serve --persons 200 --clients 8
+
+Cluster modes (paper §VII-A):
+
+  # sharded:
+  PYTHONPATH=src python -m repro.launch.serve --shards 4
+  # replicated + chaos: a replica is fail-stopped mid-run; the server must
+  # stay up (failover + hedged reads mask it) and reports what it did
+  PYTHONPATH=src python -m repro.launch.serve --shards 2 --replicas 2 --chaos
 """
 import argparse
 import json
+import threading
 
 import numpy as np
 
+from repro.cluster import FaultInjector, ReplicatedPandaDB, ShardedPandaDB
 from repro.configs.pandadb import PandaDBConfig, VectorIndexConfig
 from repro.core import PandaDB
 from repro.core.aipm import feature_hash_extractor, label_extractor
@@ -25,12 +35,43 @@ def build_db(n_persons: int) -> PandaDB:
     return db
 
 
+def build_cluster(n_persons: int, n_shards: int, replicas: int,
+                  faults: FaultInjector):
+    """Cluster population goes through the coordinator's routed write path
+    (``build_snb`` writes straight into a single node's graph store)."""
+    if replicas > 1:
+        db = ReplicatedPandaDB(n_shards=n_shards, replication=replicas,
+                               faults=faults)
+    else:
+        db = ShardedPandaDB(n_shards=n_shards)
+    rng = np.random.default_rng(0)
+    for i in range(n_persons):
+        nid = db.create_node("Person", name=f"person_{i}",
+                             age=float(20 + i % 50),
+                             photo=rng.bytes(256))
+        if i:
+            db.create_relationship(nid - 1, nid, "knows")
+    db.register_extractor("face", feature_hash_extractor(dim=64))
+    db.build_index("face", "photo")
+    return db
+
+
 QUERIES = [
     "MATCH (n:Person)-[:workFor]->(t:Team) WHERE n.name='person_3' RETURN t.name",
     "MATCH (n:Person) WHERE n.age > 40 RETURN n.name LIMIT 5",
     "MATCH (n:Person)-[:knows]->(m:Person) WHERE n.name='person_1' RETURN m.name",
     "MATCH (n:Person), (m:Person) WHERE n.name='person_2' "
     "AND n.photo->face ~: m.photo->face RETURN m.name",
+]
+
+#: single-anchor pipelines only: cluster fan-out cannot read a non-anchor
+#: node's properties (they live on that node's owner shard)
+CLUSTER_QUERIES = [
+    "MATCH (n:Person) WHERE n.age > 40 RETURN n.name LIMIT 5",
+    "MATCH (n:Person) WHERE n.name = 'person_1' RETURN n.age",
+    ("MATCH (p:Person) WHERE p = $id RETURN p.name", {"id": 3}),
+    "MATCH (n:Person)-[:knows]->(m:Person) WHERE n.age > 60 "
+    "RETURN n.name, m.__self__",
 ]
 
 
@@ -40,14 +81,43 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--duration", type=float, default=3.0)
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve a sharded cluster with this many shards")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replicas per shard (with --shards)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fail-stop shard 0 replica 0 mid-run (needs "
+                         "--replicas >= 2)")
     args = ap.parse_args()
 
-    db = build_db(args.persons)
+    if args.chaos and args.replicas < 2:
+        ap.error("--chaos needs --replicas >= 2 (a lone replica cannot "
+                 "fail over)")
+
+    if args.shards > 0:
+        faults = FaultInjector(seed=0)
+        db = build_cluster(args.persons, args.shards, args.replicas, faults)
+        queries = CLUSTER_QUERIES
+    else:
+        db = build_db(args.persons)
+        queries = QUERIES
+
     server = QueryServer(db, n_workers=args.workers)
-    stats = server.run_closed_loop(QUERIES, n_clients=args.clients,
+    killer = None
+    if args.chaos:
+        killer = threading.Timer(args.duration / 2,
+                                 faults.fail_stop, args=(0, 0))
+        killer.start()
+    stats = server.run_closed_loop(queries, n_clients=args.clients,
                                    duration_s=args.duration)
+    if killer is not None:
+        killer.cancel()
     print(json.dumps(stats.summary(), indent=1))
-    print("cache:", db.cache.stats())
+    if args.shards > 0:
+        print("routing:", json.dumps(server.route_counts(), indent=1))
+        db.close()
+    else:
+        print("cache:", db.cache.stats())
 
 
 if __name__ == "__main__":

@@ -141,8 +141,14 @@ class QueryServer:
 
     def route_counts(self) -> Dict[str, int]:
         """Routed-vs-fanout statement counts when serving a sharded
-        coordinator ({} on a single-node db)."""
-        return dict(getattr(self.db, "route_counts", {}))
+        coordinator ({} on a single-node db), merged with the cluster's
+        failure-masking counters (hedges fired/won, retries, failovers,
+        rebalance moves, per-node replica reads) when available."""
+        out = dict(getattr(self.db, "route_counts", {}))
+        counters = getattr(self.db, "cluster_counters", None)
+        if callable(counters):
+            out.update(counters())
+        return out
 
     def shutdown(self) -> None:
         self._stop = True

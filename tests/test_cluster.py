@@ -460,3 +460,129 @@ def test_shared_plan_cache_across_shards():
     assert pc["misses"] == m0                # one optimize for the cluster
     assert pc["hits"] >= 2
     c.close()
+
+
+# -- ordered_merge / close_streams edge cases ---------------------------------
+
+
+def _stream(ids_rows):
+    for ids, rows in ids_rows:
+        yield np.asarray(ids, np.int64), rows
+
+
+def _merge_all(streams, **kw):
+    from repro.cluster import ordered_merge
+    return [r for batch in ordered_merge(streams, **kw) for r in batch]
+
+
+def test_ordered_merge_empty_shards():
+    """Shards contributing nothing (no streams, empty streams, streams of
+    empty batches) never stall or corrupt the merge."""
+    assert _merge_all([]) == []
+    assert _merge_all([_stream([])]) == []
+    assert _merge_all([_stream([([], [])])]) == []
+    got = _merge_all([_stream([]),
+                      _stream([([2, 5], [{"i": 2}, {"i": 5}])]),
+                      _stream([([], []), ([3], [{"i": 3}])])])
+    assert got == [{"i": 2}, {"i": 3}, {"i": 5}]
+
+
+def test_ordered_merge_all_equal_keys_tie_order():
+    """Equal anchor ids (impossible under disjoint ownership, but the
+    merge must still be deterministic): lower stream index drains first."""
+    got = _merge_all([_stream([([7, 7], [{"s": 0, "j": 0}, {"s": 0, "j": 1}])]),
+                      _stream([([7], [{"s": 1, "j": 0}])])])
+    assert got == [{"s": 0, "j": 0}, {"s": 0, "j": 1}, {"s": 1, "j": 0}]
+
+
+def test_ordered_merge_property_sorted_concat():
+    """Property: for disjoint non-decreasing per-shard streams, the merge
+    equals the sorted concatenation, under any per-shard LIMIT cap."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.integers(0, 200), unique=True, max_size=60),
+           st.integers(1, 4), st.integers(1, 5), st.integers(0, 1),
+           st.data())
+    def check(ids, n_shards, chunk, use_limit, data):
+        parts = [[] for _ in range(n_shards)]
+        for i in sorted(ids):
+            parts[data.draw(st.integers(0, n_shards - 1))].append(i)
+        limit = (data.draw(st.integers(0, len(ids) + 2))
+                 if use_limit else None)
+        streams = []
+        for p in parts:
+            capped = p if limit is None else p[:limit]   # per-shard cap
+            batches = [(capped[o:o + chunk],
+                        [{"i": v} for v in capped[o:o + chunk]])
+                       for o in range(0, len(capped), chunk)]
+            streams.append(_stream(batches))
+        got = [r["i"] for r in _merge_all(streams, batch_rows=3,
+                                          limit=limit)]
+        want = sorted(ids)
+        if limit is not None:
+            want = want[:limit]
+        assert got == want
+
+    check()
+
+
+def test_close_streams_visits_all_and_reraises():
+    """A stream whose close() raises must not stop the teardown of the
+    others; the first error resurfaces."""
+    from repro.cluster import close_streams
+    closed = []
+
+    class S:
+        def __init__(self, i, err=False):
+            self.i, self.err = i, err
+
+        def close(self):
+            closed.append(self.i)
+            if self.err:
+                raise RuntimeError(f"close {self.i}")
+
+    with pytest.raises(RuntimeError, match="close 1"):
+        close_streams([S(0), S(1, err=True), S(2, err=True)])
+    assert closed == [0, 1, 2]
+
+
+def test_session_close_closes_open_cursors():
+    """An abandoned mid-iteration cursor is torn down by session close."""
+    c = make_cluster(2)
+    with c.session(batch_rows=4) as s:
+        cur1 = s.run("MATCH (p:Person) RETURN p.name")
+        cur2 = s.run("MATCH (p:Person) WHERE p.rank > 2 RETURN p.name")
+        assert cur1.fetchone() is not None
+        assert cur2.fetchone() is not None
+    assert cur1._closed and cur2._closed
+    # re-closing is a no-op, not an error
+    cur1.close()
+    c.close()
+
+
+def test_ordered_merge_property_seeded_fallback():
+    """Same property as above on 80 seeded random cases -- runs even where
+    hypothesis is not installed."""
+    rng = np.random.default_rng(42)
+    for _ in range(80):
+        ids = sorted(rng.choice(200, size=rng.integers(0, 50),
+                                replace=False).tolist())
+        n_shards = int(rng.integers(1, 5))
+        chunk = int(rng.integers(1, 6))
+        limit = int(rng.integers(0, len(ids) + 2)) \
+            if rng.random() < 0.5 else None
+        parts = [[] for _ in range(n_shards)]
+        for i in ids:
+            parts[int(rng.integers(0, n_shards))].append(i)
+        streams = []
+        for p in parts:
+            capped = p if limit is None else p[:limit]
+            streams.append(_stream(
+                [(capped[o:o + chunk],
+                  [{"i": v} for v in capped[o:o + chunk]])
+                 for o in range(0, len(capped), chunk)]))
+        got = [r["i"] for r in _merge_all(streams, batch_rows=3,
+                                          limit=limit)]
+        assert got == (ids if limit is None else ids[:limit])

@@ -1,0 +1,393 @@
+"""Self-healing replicated cluster: failover, hedging, catch-up, rebalance.
+
+The contract under test: a ``ReplicatedPandaDB`` under injected faults
+(fail-stop, slow-node, transient errors) returns BYTE-IDENTICAL results to
+a healthy single-node ``PandaDB`` -- failure masking is a serving-layer
+concern, never a semantics change.  All fault randomness is seeded, so
+every scenario is exactly reproducible.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import PandaDBConfig
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor
+from repro.cluster import (
+    FaultInjector,
+    Rebalancer,
+    ReplicaDown,
+    ReplicatedPandaDB,
+    ShardedPandaDB,
+)
+
+N_NODES = 72
+DIM = 32
+
+
+def _payloads(n=N_NODES, seed=4):
+    rng = np.random.default_rng(seed)
+    return [rng.bytes(256) for i in range(n)]
+
+
+#: all-distinct photos: kNN parity asserts byte-identical top-k
+PAYLOADS = _payloads()
+
+
+def _populate(db, payloads=PAYLOADS):
+    """Same creation order on every topology (ids must align)."""
+    db.register_extractor("face", feature_hash_extractor(dim=DIM))
+    cn = db.create_node if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_node
+    cr = db.create_relationship if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_relationship
+    nodes = [cn("Person", name=f"n{i}", rank=float(i % 7),
+                photo=payloads[i]) for i in range(N_NODES)]
+    for i in range(N_NODES - 1):
+        cr(nodes[i], nodes[i + 1], "KNOWS")
+    return db
+
+
+@pytest.fixture(scope="module")
+def single():
+    db = _populate(PandaDB())
+    db.build_index("face", "photo")
+    return db
+
+
+def make_replicated(n_shards=2, replication=2, seed=0, hedge=True,
+                    indexed=True, merge_rows=None):
+    faults = FaultInjector(seed=seed)
+    cfg = PandaDBConfig()
+    cluster = dataclasses.replace(cfg.cluster, hedge_reads=hedge)
+    if merge_rows is not None:
+        cluster = dataclasses.replace(cluster, merge_batch_rows=merge_rows)
+    cfg = dataclasses.replace(cfg, cluster=cluster)
+    c = _populate(ReplicatedPandaDB(n_shards=n_shards, cfg=cfg,
+                                    replication=replication, faults=faults))
+    if indexed:
+        c.build_index("face", "photo")
+    return c, faults
+
+
+SCAN_Q = "MATCH (p:Person) WHERE p.rank > 1 RETURN p.name, p.rank"
+
+
+def _queries(db):
+    rng = np.random.default_rng(9)
+    return rng.standard_normal((4, DIM)).astype(np.float32)
+
+
+def _knn_full(db, q, k=6):
+    """Full-probe kNN (exact parity needs the same probe set on every
+    topology)."""
+    if isinstance(db, ShardedPandaDB):
+        nprobe = db.index_pieces("face")[0].centroids.shape[0]
+        return db.knn("face", q, k, nprobe=max(
+            p.centroids.shape[0] for p in db.index_pieces("face")))
+    index = db.indexes["face"]
+    return index.search_many(q, k, nprobe=index.centroids.shape[0])
+
+
+# -- healthy-cluster parity ----------------------------------------------------
+
+
+@pytest.mark.parametrize("replication", [1, 2, 3])
+def test_replicated_healthy_parity(single, replication):
+    """R replicas change nothing about results -- scans, routed lookups,
+    kNN are all byte-identical to one node."""
+    c, _ = make_replicated(replication=replication)
+    assert c.query(SCAN_Q) == single.query(SCAN_Q)
+    rows = c.query("MATCH (p:Person) WHERE p = $id RETURN p.name", {"id": 7})
+    assert rows == [{"p.name": "n7"}]
+    q = _queries(c)
+    v_s, i_s = _knn_full(single, q)
+    v_c, i_c = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_c))
+    assert np.array_equal(np.asarray(v_s), np.asarray(v_c))
+    c.close()
+
+
+# -- fail-stop + failover ------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_kill_replica_mid_scan(single):
+    """Fail-stop the serving replica while a fan-out scan is half-consumed:
+    the stream fails over to the sibling, fast-forwards past the rows
+    already merged, and the full result is byte-identical."""
+    want = single.query(SCAN_Q)
+    # hedge off => deterministic primary r0; small batches so the cursor
+    # holds genuinely unfinished shard streams when the kill lands
+    c, faults = make_replicated(hedge=False, merge_rows=4)
+    with c.session(batch_rows=8) as s:
+        cur = s.run(SCAN_Q)
+        head = [cur.fetchone() for _ in range(5)]
+        faults.fail_stop(0, 0)
+        faults.fail_stop(1, 0)
+        rows = head + cur.fetchall()
+    assert rows == want
+    assert c.cluster_counters()["failovers"] >= 1
+    # the cluster keeps serving new statements after the kill
+    assert c.query(SCAN_Q) == want
+    c.close()
+
+
+@pytest.mark.chaos
+def test_kill_replica_mid_knn(single):
+    """Fail-stop between kNN calls: scatter-gather fails over per shard and
+    the merged top-k stays byte-identical."""
+    q = _queries(single)
+    v_s, i_s = _knn_full(single, q)
+    c, faults = make_replicated(hedge=False)
+    v_0, i_0 = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_0))
+    faults.fail_stop(0, 0)
+    v_1, i_1 = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_1))
+    assert np.array_equal(np.asarray(v_s), np.asarray(v_1))
+    assert c.cluster_counters()["failovers"] >= 1
+    c.close()
+
+
+@pytest.mark.chaos
+def test_all_replicas_dead_raises(single):
+    c, faults = make_replicated(hedge=False)
+    faults.fail_stop(0, 0)
+    faults.fail_stop(0, 1)
+    with pytest.raises(ReplicaDown):
+        c.query(SCAN_Q)
+    c.close()
+
+
+# -- transient errors + retry --------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_transient_error_retried(single):
+    """An error-on-call fault is retried on the same replica with backoff;
+    the statement still succeeds and the retry is counted."""
+    want = single.query(SCAN_Q)
+    c, faults = make_replicated(hedge=False)
+    faults.error_on_call(0, 0, times=1)
+    assert c.query(SCAN_Q) == want
+    assert c.cluster_counters()["retries"] >= 1
+    # both replicas still alive: the fault was transient
+    assert c.replica_sets[0].alive == [True, True]
+    c.close()
+
+
+# -- hedged reads --------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_hedged_read_masks_slow_replica(single):
+    """A slow-node fault on the preferred replica trips the hedge deadline;
+    the backup answers and results stay byte-identical."""
+    want = single.query(SCAN_Q)
+    c, faults = make_replicated(hedge=True)
+    faults.slow(0, 0, delay_s=0.25)
+    assert c.query(SCAN_Q) == want
+    counters = c.cluster_counters()
+    assert counters["hedges_fired"] >= 1
+    assert counters["hedges_won"] >= 1
+    # the slow replica's EWMA now steers reads to the healthy sibling
+    assert c.stats.replica_read_latency(0, 0) \
+        > c.stats.replica_read_latency(0, 1)
+    c.close()
+
+
+@pytest.mark.chaos
+def test_hedged_knn_masks_slow_replica(single):
+    q = _queries(single)
+    v_s, i_s = _knn_full(single, q)
+    c, faults = make_replicated(hedge=True)
+    # warm the latency EWMAs so the hedge deadline is data-driven
+    for _ in range(3):
+        _knn_full(c, q)
+    faults.slow(0, 0, delay_s=0.25)
+    v_c, i_c = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_c))
+    assert c.cluster_counters()["hedges_fired"] >= 1
+    c.close()
+
+
+def test_hedge_deadline_from_quantile():
+    """Below 4 samples: the floor.  With samples: quantile x multiplier,
+    floored."""
+    c, _ = make_replicated(indexed=False)
+    cost = c.cfg.cost
+    stats = c.stats
+    shard = 3  # untouched by population
+    assert stats.hedge_deadline(shard) == cost.hedge_floor_s
+    for lat in (0.010, 0.012, 0.014, 0.016):
+        stats.record_replica_read(shard, 0, lat)
+    dl = stats.hedge_deadline(shard)
+    assert dl == pytest.approx(0.013 * cost.hedge_deadline_mult)
+    assert dl >= cost.hedge_floor_s
+    c.close()
+
+
+def test_choose_replica_prefers_low_ewma():
+    c, _ = make_replicated(indexed=False)
+    c.stats.record_replica_read(0, 0, 0.050)
+    c.stats.record_replica_read(0, 1, 0.001)
+    assert c.stats.choose_replica(0, [0, 1]) == 1
+    # ties (no data) break to the lowest index
+    assert c.stats.choose_replica(1, [0, 1]) == 0
+    c.close()
+
+
+# -- op-log catch-up (§VII-A rejoin) ------------------------------------------
+
+
+@pytest.mark.chaos
+def test_replica_catch_up_after_revive(single):
+    """A dead replica misses writes; revive() replays exactly the missed
+    ops from the shard op log and the replica rejoins consistent."""
+    c, faults = make_replicated(hedge=False)
+    rs = c.replica_sets[0]
+    v_before = rs.versions[0]
+    faults.fail_stop(0, 0)
+    c.query(SCAN_Q)                          # fold the fail-stop into alive
+    nid = c.create_node("Person", name="late", rank=6.5)
+    c.create_relationship(nid - 1, nid, "KNOWS")
+    assert rs.versions[0] == v_before        # dead: saw nothing
+    replayed = c.revive(0, 0)
+    assert replayed == rs.oplog.version - v_before
+    assert rs.versions[0] == rs.oplog.version
+    assert rs.alive[0]
+    # the revived replica serves identical rows
+    got = sorted(r["p.name"] for r in c.query(SCAN_Q))
+    sdb = _populate(PandaDB())
+    sn = sdb.graph.create_node("Person", name="late", rank=6.5)
+    sdb.graph.create_relationship(sn - 1, sn, "KNOWS")
+    assert got == sorted(r["p.name"] for r in sdb.query(SCAN_Q))
+    c.close()
+
+
+# -- rebalancing ---------------------------------------------------------------
+
+
+def test_rebalance_explicit_moves(single):
+    """Moving ownership preserves scan + routed + kNN parity; the shard map
+    epoch bump invalidates cached plans."""
+    c, _ = make_replicated()
+    c.query(SCAN_Q)                          # prime the plan cache
+    epoch0 = c.shard_map.epoch
+    rb = Rebalancer(c)
+    target = {0: 1, 1: 1, 12: 0, 13: 0}
+    expected = sum(1 for n, d in target.items() if c.owner_of(n) != d)
+    assert expected > 0
+    moves = rb.rebalance(target)
+    assert len(moves) == expected
+    assert c.shard_map.epoch == epoch0 + 1
+    assert c.cluster_counters()["rebalance_moves"] == len(moves)
+    for nid, dst in target.items():
+        assert c.owner_of(nid) == dst
+    assert c.query(SCAN_Q) == single.query(SCAN_Q)
+    assert c.query("MATCH (p:Person) WHERE p = $id RETURN p.name",
+                   {"id": 0}) == [{"p.name": "n0"}]
+    q = _queries(c)
+    v_s, i_s = _knn_full(single, q)
+    v_c, i_c = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_c))
+    # idempotent: re-running the same target plans zero moves
+    assert rb.rebalance(target) == []
+    assert c.shard_map.epoch == epoch0 + 1
+    c.close()
+
+
+def test_rebalance_skew_trigger(single):
+    """A pathologically skewed owner_fn trips the skew detector; after the
+    move the spread tightens and parity holds."""
+    faults = FaultInjector(seed=2)
+    c = _populate(ReplicatedPandaDB(
+        n_shards=2, replication=2, faults=faults,
+        owner_fn=lambda ids: np.zeros(len(ids), np.int64)))
+    rb = Rebalancer(c)
+    before = rb.owned_counts()
+    assert before[0] == N_NODES and before[1] == 0
+    target = rb.skew_targets()
+    assert target and set(target.values()) == {1}
+    rb.rebalance(target)
+    after = rb.owned_counts()
+    assert after[1] > 0 and after[0] < before[0]
+    assert sum(after.values()) == N_NODES
+    assert c.query(SCAN_Q) == single.query(SCAN_Q)
+    # balanced clusters plan no further moves
+    assert rb.skew_targets() == {}
+    c.close()
+
+
+@pytest.mark.chaos
+def test_dead_shard_recovery(single):
+    """Shard 1 loses a replica permanently: recovery reads its rows from
+    the survivor, spreads them over the other shards, retires the shard --
+    and scans, routed lookups and kNN all keep single-node parity at the
+    new topology."""
+    c, faults = make_replicated(n_shards=3, hedge=False)
+    c.query(SCAN_Q)
+    epoch0 = c.shard_map.epoch
+    faults.fail_stop(1, 0)                   # degraded, survivor remains
+    rb = Rebalancer(c)
+    target = rb.recovery_targets(1)
+    assert target and all(d in (0, 2) for d in target.values())
+    moves = rb.rebalance(target, retire=1)
+    assert len(moves) == len(target)
+    assert c.active == [0, 2]
+    assert c.shard_map.epoch >= epoch0 + 2   # reassign + retire
+    assert c.query(SCAN_Q) == single.query(SCAN_Q)
+    assert c.query("MATCH (p:Person) WHERE p = $id RETURN p.name",
+                   {"id": 10}) == [{"p.name": "n10"}]
+    q = _queries(c)
+    v_s, i_s = _knn_full(single, q)
+    v_c, i_c = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_c))
+    assert np.array_equal(np.asarray(v_s), np.asarray(v_c))
+    # writes after the retirement land on active shards consistently
+    nid = c.create_node("Person", name="post", rank=1.0)
+    assert c.owner_of(nid) in (0, 2)
+    assert c.query("MATCH (p:Person) WHERE p = $id RETURN p.name",
+                   {"id": nid}) == [{"p.name": "post"}]
+    c.close()
+
+
+# -- serving under chaos -------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_query_server_survives_replica_kill(single):
+    """A QueryServer keeps serving through a mid-run replica fail-stop: no
+    request errors, and post-kill statements stay byte-identical."""
+    from repro.serving.engine import QueryServer
+
+    want = single.query(SCAN_Q)
+    c, faults = make_replicated(hedge=False)
+    server = QueryServer(c, n_workers=2)
+    errors = []
+
+    def _submit_and_check(text, params=None):
+        rows, err = server.submit(text, params=params).get()
+        if err is not None:
+            errors.append(err)
+        return rows
+
+    killer = threading.Timer(0.3, faults.fail_stop, args=(0, 0))
+    killer.start()
+    try:
+        stats = server.run_closed_loop(
+            [SCAN_Q,
+             ("MATCH (p:Person) WHERE p = $id RETURN p.name", {"id": 5})],
+            n_clients=3, duration_s=0.8)
+    finally:
+        killer.cancel()
+    assert stats.summary()["requests"] > 0
+    assert not c.replica_sets[0].alive[0]    # the kill really landed
+    assert c.query(SCAN_Q) == want           # ...and service continued
+    counts = server.route_counts()
+    assert counts.get("failovers", 0) >= 0   # surfaced through serving
+    assert "replica_reads:s0r1" in counts
+    c.close()
