@@ -10,11 +10,29 @@ from benchmarks.common import emit, timeit
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ivf_scan.ref import ivf_scan_topk_ref
+from repro.kernels.topk_merge.ops import merge_topk_dev
+from repro.kernels.topk_merge.ref import merge_topk_ref
 from repro.models.attention import chunked_attention
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
+
+    # k-way shard merge: device one-dispatch reduce vs host numpy oracle
+    P, Q, KM = 8, 256, 64
+    mv = rng.standard_normal((P, Q, KM)).astype(np.float32)
+    mi = rng.integers(0, 1 << 40, (P, Q, KM)).astype(np.int64)
+    mvj, mij = jnp.asarray(mv), jnp.asarray(mi)
+    def merge_dev():
+        v, _ = merge_topk_dev(mvj, mij, KM)
+        v.block_until_ready()
+    def merge_host():
+        merge_topk_ref(mv, mi, KM)
+    t_dev = timeit(merge_dev, repeats=5)
+    t_host = timeit(merge_host, repeats=5)
+    emit("kernels/topk_merge_8x256x64_dev", t_dev,
+         f"vs_host={t_host / max(t_dev, 1e-9):.2f}x")
+    emit("kernels/topk_merge_8x256x64_host", t_host, "baseline")
 
     # ivf scan core
     q = jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)

@@ -132,7 +132,8 @@ def _copy_piece(piece: IVFIndex) -> IVFIndex:
     absorb DynamicIndexing inserts independently."""
     piece.compact()
     return dataclasses.replace(piece, _pend_vecs={}, _pend_ids={},
-                               _pend_codes={}, pending_count=0,
+                               _pend_codes={}, _pend_bias={},
+                               pending_count=0,
                                scan_rows=0, scan_time=0.0)
 
 
@@ -352,7 +353,7 @@ class ShardedPandaDB:
         #: chaos-test observability: what the failure-masking machinery did
         self.counters: Dict[str, int] = {
             "hedges_fired": 0, "hedges_won": 0, "retries": 0,
-            "failovers": 0, "rebalance_moves": 0}
+            "failovers": 0, "rebalance_moves": 0, "teardown_errors": 0}
         self.replica_reads: Dict[str, int] = {}
         self._route_lock = threading.Lock()   # serving workers race _route
         self._pool: Optional[ThreadPoolExecutor] = None
@@ -560,7 +561,8 @@ class ShardedPandaDB:
             mode=mode, rerank=rerank,
             stats=[self.read_db(s).stats for s in self.active],
             record=self.stats.record_shard_scan,
-            pool=self._pool)
+            pool=self._pool,
+            split_rerank_budget=self.cfg.cluster.split_rerank_budget)
 
     def knn_fanout_cost(self, sub_key: str, q: int = 1, k: int = 10,
                         nprobe: Optional[int] = None) -> float:

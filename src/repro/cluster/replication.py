@@ -27,7 +27,8 @@ from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from concurrent.futures import (CancelledError, FIRST_COMPLETED,
+                                ThreadPoolExecutor, wait)
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -201,27 +202,52 @@ class ReplicaSet:
 
 _DONE = object()
 
+#: what a loser's φ-cancelling close is ALLOWED to raise: the stream resuming
+#: into an injected fault (ReplicaDown/ReplicaError), generator shutdown
+#: protocol noise (GeneratorExit escaping a nested close, RuntimeError from
+#: "generator ignored GeneratorExit" / "already executing").  Anything else
+#: is a real teardown bug -- counted, not swallowed silently.
+_EXPECTED_TEARDOWN = (ReplicaDown, ReplicaError, GeneratorExit, RuntimeError,
+                      ValueError)
 
-def _close_quiet(it: Any) -> None:
+
+def _close_quiet(it: Any, cdb: Optional["ReplicatedPandaDB"] = None) -> None:
     close = getattr(it, "close", None)
     if close is None:
         return
     try:
         close()
-    except Exception:  # noqa: BLE001 -- loser teardown is best-effort
-        pass
+    except _EXPECTED_TEARDOWN:
+        pass                        # loser teardown is best-effort
+    except Exception:  # noqa: BLE001 -- surfaced via cluster counters
+        if cdb is None:
+            raise
+        cdb._count("teardown_errors")
 
 
 def _loser_reaper(cdb: "ReplicatedPandaDB", shard: int, r: int,
                   on_loser: Optional[Callable[[Any], None]]):
     def reap(fu) -> None:
-        exc = fu.exception()
+        try:
+            exc = fu.exception()
+        except CancelledError:
+            return                  # close() cancelled it before it ran
         if exc is not None:
             if isinstance(exc, ReplicaDown):
                 cdb.replica_sets[shard].mark_dead(r)
+            elif not isinstance(exc, ReplicaError):
+                # a loser failing with anything but an injected fault is a
+                # teardown bug; fold it into the chaos-test counters
+                cdb._count("teardown_errors")
             return
-        if on_loser is not None:
+        if on_loser is None:
+            return
+        try:
             on_loser(fu.result())
+        except _EXPECTED_TEARDOWN:
+            pass
+        except Exception:  # noqa: BLE001 -- done-callbacks must not raise
+            cdb._count("teardown_errors")
     return reap
 
 
@@ -242,14 +268,14 @@ def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
     pool = cdb._hedge_pool
     if pool is None or len(live) < 2:
         return call(primary), primary
-    futs = {pool.submit(call, primary): primary}
+    futs = {cdb._track_hedge(pool.submit(call, primary)): primary}
     done, _ = wait(list(futs), timeout=cdb.stats.hedge_deadline(shard))
     if not done:
         backup = min(
             (r for r in live if r != primary),
             key=lambda r: (cdb.stats.replica_read_latency(shard, r), r))
         cdb._count("hedges_fired")
-        futs[pool.submit(call, backup)] = backup
+        futs[cdb._track_hedge(pool.submit(call, backup))] = backup
     winner = None
     last_exc: Optional[BaseException] = None
     pending = set(futs)
@@ -285,7 +311,7 @@ def _pull_first(cdb: "ReplicatedPandaDB", shard: int, r: int,
     try:
         first = next(it, _DONE)
     except BaseException:
-        _close_quiet(it)
+        _close_quiet(it, cdb)
         raise
     return it, first, time.perf_counter() - t0
 
@@ -303,7 +329,7 @@ def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
             (it, first, dt), r = hedged_call(
                 cdb, shard, live,
                 lambda rr: _pull_first(cdb, shard, rr, open_on),
-                on_loser=lambda res: _close_quiet(res[0]))
+                on_loser=lambda res: _close_quiet(res[0], cdb))
         except ReplicaDown:
             continue        # rs.live() shrinks; raises once the set is gone
         except ReplicaError:
@@ -345,7 +371,7 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
                         nxt = next(it, _DONE)
                     except ReplicaDown:
                         rs.mark_dead(r)
-                        _close_quiet(it)
+                        _close_quiet(it, cdb)
                         it = None
                         break
                     except ReplicaError:
@@ -353,7 +379,7 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
                         cdb._count("retries")
                         if attempts > cdb.cfg.cluster.read_retries:
                             rs.mark_dead(r)
-                            _close_quiet(it)
+                            _close_quiet(it, cdb)
                             it = None
                             break
                         time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
@@ -396,7 +422,8 @@ class _ResilientIndex:
         self.centroids = piece.centroids
         self.cfg = piece.cfg
 
-    def _search_on(self, r: int, queries, k, nprobe, mode, rerank):
+    def _search_on(self, r: int, queries, k, nprobe, mode, rerank,
+                   rerank_mult=None):
         cdb, s = self.cdb, self.shard
         t0 = time.perf_counter()
         cdb.faults.check(s, r)
@@ -404,13 +431,14 @@ class _ResilientIndex:
         piece = db.indexes[self.sub_key]
         rows0 = piece.scan_rows
         v, i = piece.search_many(queries, k, nprobe, stats=db.stats,
-                                 mode=mode, rerank=rerank)
+                                 mode=mode, rerank=rerank,
+                                 rerank_mult=rerank_mult)
         cdb.stats.record_replica_read(s, r, time.perf_counter() - t0)
         cdb._count_replica_read(s, r)
         return v, i, piece.scan_rows - rows0
 
     def search_many(self, queries, k, nprobe=None, stats=None, mode="auto",
-                    rerank=True):
+                    rerank=True, rerank_mult=None):
         cdb, s = self.cdb, self.shard
         rs = cdb.replica_sets[s]
         attempts = 0
@@ -420,7 +448,7 @@ class _ResilientIndex:
                 (v, i, rows), _ = hedged_call(
                     cdb, s, live,
                     lambda rr: self._search_on(rr, queries, k, nprobe, mode,
-                                               rerank))
+                                               rerank, rerank_mult))
             except ReplicaDown:
                 continue
             except ReplicaError:
@@ -453,6 +481,8 @@ class ReplicatedPandaDB(ShardedPandaDB):
         self.faults = faults or FaultInjector(seed=0)
         self.replica_sets: List[ReplicaSet] = []
         self._hedge_pool: Optional[ThreadPoolExecutor] = None
+        self._hedge_inflight: Set[Any] = set()
+        self._hedge_lock = threading.Lock()
         super().__init__(n_shards, cfg, owner_fn)
         for rs in self.replica_sets:
             for db in rs.replicas:
@@ -474,11 +504,36 @@ class ReplicatedPandaDB(ShardedPandaDB):
             for s in range(self.n_shards)]
         return [rs.replicas[0] for rs in self.replica_sets]
 
+    def _track_hedge(self, fu):
+        """Register an in-flight hedge leg so :meth:`close` can drain the
+        legs still running on pool threads (a discard-on-done callback
+        keeps the set O(open legs))."""
+        with self._hedge_lock:
+            self._hedge_inflight.add(fu)
+
+        def _untrack(f) -> None:
+            with self._hedge_lock:
+                self._hedge_inflight.discard(f)
+
+        fu.add_done_callback(_untrack)
+        return fu
+
     def close(self) -> None:
+        """Idempotent teardown.  ``cancel_futures=True`` drops every hedge
+        leg still queued (they would otherwise run against retiring
+        replicas after close returns); legs already RUNNING on a pool
+        thread cannot be cancelled, so close drains them with a bounded
+        wait instead of abandoning them mid-read -- a hedge landing after
+        close neither deadlocks nor touches a retired replica."""
         super().close()
-        if self._hedge_pool is not None:
-            self._hedge_pool.shutdown(wait=False)
-            self._hedge_pool = None
+        pool, self._hedge_pool = self._hedge_pool, None
+        if pool is None:
+            return
+        pool.shutdown(wait=False, cancel_futures=True)
+        with self._hedge_lock:
+            running = [fu for fu in self._hedge_inflight if not fu.done()]
+        if running:
+            wait(running, timeout=2.0)
 
     def revive(self, shard: int, replica: int) -> int:
         """Heal + catch up one replica from the shard's op log (§VII-A
@@ -511,10 +566,12 @@ class ReplicatedPandaDB(ShardedPandaDB):
     def knn(self, sub_key: str, queries, k: int, nprobe: Optional[int] = None,
             mode: str = "auto", rerank: bool = True):
         views = [_ResilientIndex(self, s, sub_key) for s in self.active]
-        return scatter_gather_knn(views, queries, k, nprobe=nprobe,
-                                  mode=mode, rerank=rerank, stats=None,
-                                  record=self.stats.record_shard_scan,
-                                  pool=self._pool)
+        return scatter_gather_knn(
+            views, queries, k, nprobe=nprobe,
+            mode=mode, rerank=rerank, stats=None,
+            record=self.stats.record_shard_scan,
+            pool=self._pool,
+            split_rerank_budget=self.cfg.cluster.split_rerank_budget)
 
     def explain(self, text: str) -> Dict[str, Any]:
         out = super().explain(text)

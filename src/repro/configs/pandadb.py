@@ -30,6 +30,13 @@ class VectorIndexConfig:
     #                               rerank_mult * k codes, exact re-rank
     #                               against original vectors returns top-k
     #                               (recall@10 >= 0.95 on clustered corpora)
+    pq_residual: bool = False     # quantize vector - centroid[bucket] instead
+    #                               of the raw vector: residuals are smaller
+    #                               and better centered, so the same codebook
+    #                               budget yields tighter ADC ordering (and a
+    #                               smaller rerank_mult holds recall).  Scores
+    #                               decompose as LUT sum + per-row bias +
+    #                               per-query centroid term (see pq_scan/ref)
 
 
 @dataclass(frozen=True)
@@ -76,6 +83,11 @@ class CostModelConfig:
     #                                          (prior; the uint8 scan is
     #                                          bandwidth-bound, ~4-8x the
     #                                          float throughput)
+    default_fused_scan_speed: float = 5e-10  # s per code row of the fused
+    #                                          probe->ADC->top-k scan (prior
+    #                                          only: choose_knn_scan never
+    #                                          picks fused before observing
+    #                                          a real measurement)
     shard_dispatch_s: float = 1e-4           # fixed cost of scattering one
     #                                          statement/scan to one shard
     #                                          (ctx setup + queueing); the
@@ -114,6 +126,12 @@ class ClusterConfig:
     read_retries: int = 2          # transient-error retries per read leg
     #                                before failing over to another replica
     retry_backoff_s: float = 0.002  # linear backoff between retries
+    split_rerank_budget: bool = False  # divide the global re-rank candidate
+    #                                budget ceil(rerank_mult/P) per shard so
+    #                                total exact-re-rank work stays constant
+    #                                as P grows (pair with pq_residual=True:
+    #                                tighter ADC ordering keeps the smaller
+    #                                per-shard pools exact in practice)
     rebalance_skew: float = 2.0    # max/mean owned-rows ratio above which
     #                                the Rebalancer proposes moves
 

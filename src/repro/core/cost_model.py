@@ -85,6 +85,7 @@ class StatisticsService:
 
     _KNN_KEY = "knn_scan"
     _PQ_KEY = "pq_scan"
+    _FUSED_KEY = "fused_scan"
 
     def _record_scan(self, key: str, total_time: float,
                      rows_scanned: int) -> None:
@@ -113,11 +114,28 @@ class StatisticsService:
         prices the *whole* two-stage path per scanned row)."""
         self._record_scan(self._PQ_KEY, total_time, rows_scanned)
 
+    def record_fused_scan(self, total_time: float, rows_scanned: int) -> None:
+        """Fused probe->ADC->top-k throughput feedback: ``rows_scanned`` is
+        q x the *whole* code table (the fused scan touches every row and
+        masks in-kernel), so the EWMA prices its single-dispatch batch cost
+        against the staged path's per-signature-group dispatches."""
+        self._record_scan(self._FUSED_KEY, total_time, rows_scanned)
+
     def knn_scan_speed(self) -> float:
         return self.speeds.get(self._KNN_KEY, self.cfg.default_knn_scan_speed)
 
     def pq_scan_speed(self) -> float:
         return self.speeds.get(self._PQ_KEY, self.cfg.default_pq_scan_speed)
+
+    def fused_scan_speed(self) -> float:
+        return self.speeds.get(self._FUSED_KEY,
+                               self.cfg.default_fused_scan_speed)
+
+    def has_fused_truth(self) -> bool:
+        """Whether a fused scan has actually been observed (the prior is
+        not evidence: ``choose_knn_scan`` only picks "fused" on truth, so
+        a cold service never routes a batch through an unmeasured path)."""
+        return self._FUSED_KEY in self.speeds
 
     def knn_cost(self, n_total: int, m: int, nprobe: int, q: int = 1) -> float:
         """Estimated cost of a kNN over ``q`` queries: centroid probe
@@ -153,11 +171,30 @@ class StatisticsService:
         rerank = self.knn_scan_speed() * q * k_prime
         return probe + scan + rerank
 
+    def fused_cost(self, n_total: int, m: int, q: int = 1,
+                   k_prime: int = 0) -> float:
+        """Estimated cost of the fused probe->ADC->top-k path: the centroid
+        probe (shared with the staged paths), one whole-table masked ADC
+        scan at the observed fused throughput (no per-signature gathers or
+        dispatches -- the mask is in-kernel), and the exact re-rank of
+        ``k_prime`` candidates per query."""
+        probe = self.knn_scan_speed() * q * m
+        scan = self.fused_scan_speed() * q * n_total
+        rerank = self.knn_scan_speed() * q * k_prime
+        return probe + scan + rerank
+
     def choose_knn_scan(self, index, q: int = 1, k: int = 10) -> str:
-        """ADC + re-rank vs plain float scan for this query batch, from the
-        observed throughputs: the ADC scan saves bandwidth proportionally
-        to the corpus size, the re-rank adds a fixed per-query k' cost --
-        so big corpora go ``"adc"`` and tiny ones stay ``"float"``."""
+        """Scan layout for this query batch, from the observed throughputs:
+        ``"adc"`` (staged per-signature ADC + re-rank), ``"float"`` (plain
+        float scan) or ``"fused"`` (one masked whole-table ADC dispatch).
+
+        The ADC scan saves bandwidth proportionally to the corpus size and
+        the re-rank adds a fixed per-query k' cost -- so big corpora go
+        ``"adc"`` and tiny ones stay ``"float"``.  The fused path trades
+        scanning *every* code row for dispatching exactly once per batch;
+        it is only chosen once its throughput has actually been observed
+        (``record_fused_scan``), for multi-query batches on a compacted
+        index (pending appends fall back to staged gathers)."""
         if index.pq is None or index.codes is None:
             return "float"
         m = index.centroids.shape[0]
@@ -165,6 +202,10 @@ class StatisticsService:
         k_prime = index.cfg.rerank_mult * k
         cost_adc = self.pq_cost(index.n_total, m, nprobe, q, k_prime)
         cost_float = self.knn_cost(index.n_total, m, nprobe, q)
+        if (q > 1 and index.pending_count == 0 and self.has_fused_truth()):
+            cost_fused = self.fused_cost(index.n_total, m, q, k_prime)
+            if cost_fused <= min(cost_adc, cost_float):
+                return "fused"
         return "adc" if cost_adc <= cost_float else "float"
 
     # -- sharded serving (cluster scatter-gather vs routed plans) --------------

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.configs.pandadb import VectorIndexConfig
 from repro.kernels.ivf_scan.ops import ivf_scan_topk
 from repro.kernels.pq_scan.ops import pq_adc_topk
+from repro.kernels.topk_merge.ops import merge_topk_dev
 
 
 # ---------------------------------------------------------------------------
@@ -149,12 +150,20 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
                        k: int, nprobe: Optional[int] = None,
                        mode: str = "auto", rerank: bool = True,
                        stats=None, record: Optional[Callable] = None,
-                       pool=None) -> Tuple[np.ndarray, np.ndarray]:
-    """THE cluster merge schedule: per-shard ``search_many`` (ADC or float,
-    per each shard's cost-model call) -> ``merge_topk`` reduce -> truncation
-    of shard padding to min(k, total rows).  Every scatter-gather kNN in the
-    tree -- ``ShardedPandaDB.knn``, :func:`distributed_knn`, the serving
-    path -- routes through here, so the merge semantics cannot drift.
+                       pool=None, split_rerank_budget: bool = False
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """THE cluster merge schedule: per-shard ``search_many`` (ADC, float or
+    fused, per each shard's cost-model call) -> one-dispatch k-way
+    ``merge_topk_dev`` reduce (the Pallas merge kernel on TPU, its jitted
+    XLA twin elsewhere) -> truncation of shard padding to min(k, total
+    rows).  Every scatter-gather kNN in the tree -- ``ShardedPandaDB.knn``,
+    :func:`distributed_knn`, the serving path -- routes through here, so
+    the merge semantics cannot drift.
+
+    Output invariant (the ``merge_topk`` padding contract, enforced here
+    rather than trusted): a position holds id=-1 exactly where its value is
+    -inf, i.e. where fewer real candidates existed than ``k`` -- no shard's
+    -1 padding can ever surface with a finite score attached.
 
     ``stats`` is either one StatisticsService (shared feedback) or a
     sequence with one entry per shard (each shard's ADC-vs-float choice then
@@ -162,7 +171,16 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
     if given, receives per-shard wall time + rows scanned (the
     coordinator's per-shard EWMAs).  ``pool`` is an optional
     ``concurrent.futures`` executor: shards scatter in parallel; results
-    are merged in shard order either way, so the output is deterministic."""
+    are merged in shard order either way, so the output is deterministic.
+
+    ``split_rerank_budget=True`` divides the *global* re-rank candidate
+    budget across shards -- each shard scans ADC top-``ceil(rerank_mult/P)
+    * k`` instead of ``rerank_mult * k`` -- so total exact-re-rank work
+    (the host-side term that otherwise grows linearly with P) stays
+    constant as shards are added.  The merged result is the exact top-k of
+    a candidate pool that hash-sharding spreads ~budget/P per shard, so
+    it matches the unsharded pool in practice (the bench asserts it);
+    residual PQ tightens ADC ordering precisely so this split is safe."""
     queries = np.asarray(queries, np.float32)
     qn = queries.shape[0]
     out_v = np.full((qn, k), -np.inf, np.float32)
@@ -171,12 +189,17 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
         return out_v, out_i
     per_stats = (list(stats) if isinstance(stats, (list, tuple))
                  else [stats] * len(shards))
+    rm = None
+    if split_rerank_budget and rerank and len(shards) > 1:
+        rm = max(1, -(-max(sh.cfg.rerank_mult for sh in shards)
+                      // len(shards)))
 
     def scan_one(s: int):
         t0 = time.perf_counter()
         rows0 = shards[s].scan_rows
         v, i = shards[s].search_many(queries, k, nprobe, stats=per_stats[s],
-                                     mode=mode, rerank=rerank)
+                                     mode=mode, rerank=rerank,
+                                     rerank_mult=rm)
         if record is not None:
             record(s, time.perf_counter() - t0, shards[s].scan_rows - rows0)
         return v, i
@@ -185,12 +208,17 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
         parts = list(pool.map(scan_one, range(len(shards))))
     else:
         parts = [scan_one(s) for s in range(len(shards))]
-    v, i = merge_topk(jnp.stack([jnp.asarray(p[0]) for p in parts]),
-                      jnp.stack([jnp.asarray(p[1]) for p in parts]), k)
+    v, i = merge_topk_dev(jnp.stack([jnp.asarray(p[0]) for p in parts]),
+                          jnp.stack([jnp.asarray(p[1]) for p in parts]), k)
     total = sum(sh.n_total for sh in shards)
-    kk = min(k, total)
-    out_v[:, :kk] = np.asarray(v)[:, :kk]
-    out_i[:, :kk] = np.asarray(i)[:, :kk]
+    kk = min(k, total, v.shape[1])
+    v = np.asarray(v)[:, :kk]
+    i = np.asarray(i)[:, :kk]
+    out_v[:, :kk] = v
+    # pin the padding invariant structurally: wherever the merged window
+    # still holds -inf (a query whose probed buckets had < k real rows
+    # in total), the id is -1 -- whatever payload the shard windows carried
+    out_i[:, :kk] = np.where(np.isfinite(v), i, -1)
     return out_v[:, :k], out_i[:, :k]
 
 
@@ -349,6 +377,26 @@ def _nearest_l2(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
     return d.argmin(axis=1)
 
 
+def _residual_bias(pq: PQCodebook, codes: np.ndarray, centroids: np.ndarray,
+                   buckets: np.ndarray, metric: str) -> np.ndarray:
+    """Per-row additive constant of the residual-PQ score decomposition
+
+        s(q, row) = cterm[q, bucket] + sum_j lut[q, j, code_j] + bias[row]
+
+    For L2, expanding -||q - (c_b + r_hat)||^2 leaves the query-independent
+    ``-2 c_b . r_hat - ||r_hat||^2`` on the row (r_hat = decode(codes), the
+    reconstructed residual); for ip/cosine the cross term vanishes and the
+    bias is zero.  Precomputed at encode time so the ADC scan stays one LUT
+    sum + two adds per row."""
+    n = len(codes)
+    if metric != "l2":
+        return np.zeros(n, np.float32)
+    r = pq.decode(codes)                                     # [N, d]
+    c = centroids[np.asarray(buckets).astype(np.int64)]      # [N, d]
+    return (-2.0 * np.einsum("nd,nd->n", c, r)
+            - np.einsum("nd,nd->n", r, r)).astype(np.float32)
+
+
 # ---------------------------------------------------------------------------
 # IVF-Flat / IVF-PQ
 # ---------------------------------------------------------------------------
@@ -364,9 +412,14 @@ class IVFIndex:
     serial: int = 1                       # model serial this index was built for
     # IVF-PQ mode (cfg.pq_m > 0): trained codebooks + uint8 codes aligned
     # row-for-row with ``vectors``; the ADC scan reads only ``codes``, the
-    # exact re-rank reads ``vectors`` (primary storage)
+    # exact re-rank reads ``vectors`` (primary storage).  Residual mode
+    # (cfg.pq_residual) quantizes vector - centroid[bucket]; ``code_bias``
+    # then carries each row's precomputed score constant (L2's
+    # -2*c_b.r_hat - ||r_hat||^2 term; zeros for ip/cosine) so the ADC scan
+    # stays one LUT sum + adds per row
     pq: Optional[PQCodebook] = None
     codes: Optional[np.ndarray] = None    # [N, pq_m] uint8
+    code_bias: Optional[np.ndarray] = None  # [N] f32 (residual mode only)
     # dynamic-insert append buffers (bucket -> uncompacted rows); searches
     # always include these, compaction folds them into the sorted layout
     _pend_vecs: Dict[int, List[np.ndarray]] = dataclasses.field(
@@ -374,6 +427,8 @@ class IVFIndex:
     _pend_ids: Dict[int, List[int]] = dataclasses.field(
         default_factory=dict, repr=False)
     _pend_codes: Dict[int, List[np.ndarray]] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _pend_bias: Dict[int, List[float]] = dataclasses.field(
         default_factory=dict, repr=False)
     pending_count: int = 0
     # observed scan throughput (feeds the cost model's kNN term)
@@ -428,16 +483,26 @@ class IVFIndex:
             # normalize once so PQ codes / IP LUTs realize cosine exactly
             sorted_vecs = sorted_vecs / np.maximum(
                 np.linalg.norm(sorted_vecs, axis=-1, keepdims=True), 1e-9)
-        pq = codes = None
+        pq = codes = bias = None
         if cfg.pq_m > 0:
+            train_rows = sorted_vecs
+            pq_metric = "ip" if cfg.metric in ("ip", "cosine") else "l2"
+            if cfg.pq_residual:
+                # quantize the residual vector - centroid[bucket]: smaller,
+                # better-centered inputs for the same codebook budget.  The
+                # LUTs then carry plain sub dot products against the query
+                # (the metric lives in the decomposition, not the LUT).
+                train_rows = sorted_vecs - cores[assign[order]]
+                pq_metric = "ip"
             pq = PQCodebook.train(
-                sorted_vecs, cfg.pq_m, bits=cfg.pq_bits,
-                iters=cfg.pq_kmeans_iters,
-                metric="ip" if cfg.metric in ("ip", "cosine") else "l2",
-                seed=seed)
-            codes = pq.encode(sorted_vecs)
+                train_rows, cfg.pq_m, bits=cfg.pq_bits,
+                iters=cfg.pq_kmeans_iters, metric=pq_metric, seed=seed)
+            codes = pq.encode(train_rows)
+            if cfg.pq_residual:
+                bias = _residual_bias(pq, codes, cores, assign[order],
+                                      cfg.metric)
         return IVFIndex(cfg, cores, assign[order], sorted_vecs, ids[order],
-                        serial=serial, pq=pq, codes=codes)
+                        serial=serial, pq=pq, codes=codes, code_bias=bias)
 
     # -- Algorithm 2: DynamicIndexing ------------------------------------------
 
@@ -456,8 +521,15 @@ class IVFIndex:
         self._pend_vecs.setdefault(b, []).append(vec)
         self._pend_ids.setdefault(b, []).append(int(ext_id))
         if self.pq is not None:
-            self._pend_codes.setdefault(b, []).append(
-                self.pq.encode(vec[None])[0])
+            enc = vec[None]
+            if self.cfg.pq_residual:
+                enc = enc - self.centroids[b][None]
+            code = self.pq.encode(enc)[0]
+            self._pend_codes.setdefault(b, []).append(code)
+            if self.cfg.pq_residual:
+                self._pend_bias.setdefault(b, []).append(float(
+                    _residual_bias(self.pq, code[None], self.centroids,
+                                   np.asarray([b]), self.cfg.metric)[0]))
         self.pending_count += 1
         if self.pending_count >= self._compact_threshold():
             self.compact()
@@ -472,7 +544,15 @@ class IVFIndex:
         assign = np.asarray(jnp.argmax(pairwise_scores(
             jnp.asarray(vecs), jnp.asarray(self.centroids), self.cfg.metric),
             axis=1))
-        codes = self.pq.encode(vecs) if self.pq is not None else None
+        codes = bias = None
+        if self.pq is not None:
+            enc = vecs
+            if self.cfg.pq_residual:
+                enc = vecs - self.centroids[assign]
+            codes = self.pq.encode(enc)
+            if self.cfg.pq_residual:
+                bias = _residual_bias(self.pq, codes, self.centroids,
+                                      assign, self.cfg.metric)
         for i, (v, b, eid) in enumerate(zip(vecs, assign,
                                             np.asarray(ext_ids))):
             b = int(b)
@@ -480,6 +560,8 @@ class IVFIndex:
             self._pend_ids.setdefault(b, []).append(int(eid))
             if codes is not None:
                 self._pend_codes.setdefault(b, []).append(codes[i])
+            if bias is not None:
+                self._pend_bias.setdefault(b, []).append(float(bias[i]))
         self.pending_count += len(vecs)
         if self.pending_count >= self._compact_threshold():
             self.compact()
@@ -498,12 +580,14 @@ class IVFIndex:
         add_v: List[np.ndarray] = []
         add_i: List[int] = []
         add_c: List[np.ndarray] = []
+        add_s: List[float] = []
         for b in sorted(self._pend_vecs):
             add_b += [b] * len(self._pend_vecs[b])
             add_v += self._pend_vecs[b]
             add_i += self._pend_ids[b]
             if self.pq is not None:
                 add_c += self._pend_codes.get(b, [])
+                add_s += self._pend_bias.get(b, [])
         bucket_of = np.concatenate(
             [self.bucket_of, np.asarray(add_b, self.bucket_of.dtype)])
         order = np.argsort(bucket_of, kind="stable")
@@ -515,9 +599,13 @@ class IVFIndex:
         if self.pq is not None and self.codes is not None:
             self.codes = np.concatenate(
                 [self.codes, np.stack(add_c)])[order]
+        if self.code_bias is not None:
+            self.code_bias = np.concatenate(
+                [self.code_bias, np.asarray(add_s, np.float32)])[order]
         self._pend_vecs.clear()
         self._pend_ids.clear()
         self._pend_codes.clear()
+        self._pend_bias.clear()
         self.pending_count = 0
 
     # -- kNN search -------------------------------------------------------------
@@ -562,7 +650,8 @@ class IVFIndex:
 
     def search_many(self, queries: np.ndarray, k: int,
                     nprobe: Optional[int] = None, stats=None,
-                    mode: str = "auto", rerank: bool = True
+                    mode: str = "auto", rerank: bool = True,
+                    rerank_mult: Optional[int] = None
                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Batched two-phase kNN over the whole query set.
 
@@ -593,16 +682,30 @@ class IVFIndex:
         probe-signature grouping, block padding and device dispatch
         entirely (the per-call overhead dominates one small scan).
 
+        * **fused probe->ADC->top-k** (PQ mode) -- ONE masked whole-table
+          ADC dispatch for the entire batch: every code row is scanned and
+          rows of non-probed buckets are pinned to -inf *in-kernel*
+          (``probe_mask``), so there are no per-signature gathers and no
+          per-group dispatches at all.  Requires a compacted index (the
+          candidate positions must be table rows); pending appends fall
+          back to the staged ADC path.  Candidates, scores and tie order
+          are identical to the staged path.
+
         ``mode`` is ``"auto"`` (consult ``stats.choose_knn_scan`` when
-        given, else ADC whenever PQ codebooks exist), ``"adc"`` or
-        ``"float"``.  ``rerank=False`` returns raw ADC scores/ids truncated
-        to ``k`` (recall instrumentation).  Positions with no candidate
-        (probe set smaller than ``k``) hold val=-inf / id=-1.  ``stats``,
-        if given, receives the observed scan throughput via
-        ``record_knn_scan`` / ``record_pq_scan`` (cost-model feedback)."""
-        if mode not in ("auto", "adc", "float"):
+        given, else ADC whenever PQ codebooks exist), ``"adc"``,
+        ``"float"`` or ``"fused"`` (a hint: batches that cannot fuse --
+        single query, pending appends, no codebooks -- silently take the
+        staged path).  ``rerank=False`` returns raw ADC scores/ids
+        truncated to ``k`` (recall instrumentation).  ``rerank_mult``
+        overrides ``cfg.rerank_mult`` for this call (the shard scatter
+        splits the global candidate budget this way).  Positions with no
+        candidate (probe set smaller than ``k``) hold val=-inf / id=-1.
+        ``stats``, if given, receives the observed scan throughput via
+        ``record_knn_scan`` / ``record_pq_scan`` / ``record_fused_scan``
+        (cost-model feedback)."""
+        if mode not in ("auto", "adc", "float", "fused"):
             raise ValueError(f"unknown scan mode {mode!r}; "
-                             f"expected auto | adc | float")
+                             f"expected auto | adc | float | fused")
         queries = np.asarray(queries, np.float32)
         qn = queries.shape[0]
         out_v = np.full((qn, k), -np.inf, np.float32)
@@ -611,50 +714,69 @@ class IVFIndex:
             return out_v, out_i
         m = self.centroids.shape[0]
         nprobe = min(nprobe or self.cfg.nprobe, m)
-        use_adc = self._use_adc(mode, stats, qn, k)
+        kind = self._pick_scan(mode, stats, qn, k)
         if qn == 1:
             t0 = time.perf_counter()
             rows_scanned = self._search_one(queries, k, nprobe, out_v, out_i,
-                                            use_adc, rerank)
+                                            kind == "adc", rerank,
+                                            rerank_mult)
             self._note_scan(stats, time.perf_counter() - t0, rows_scanned,
-                            use_adc)
+                            kind)
             return out_v, out_i
         q = jnp.asarray(queries)
         cscores = pairwise_scores(q, jnp.asarray(self.centroids),
                                   self.cfg.metric)
         _, probe = jax.lax.top_k(cscores, nprobe)          # [Q, nprobe]
+        cterm = None
+        if self.cfg.pq_residual and kind in ("adc", "fused"):
+            cterm = self._cterm_np(queries, np.asarray(cscores))
         # probe *signature* = the bucket set; sort so order never splits groups
         probe = np.sort(np.asarray(probe), axis=1)
-        sigs, inverse = np.unique(probe, axis=0, return_inverse=True)
         t0 = time.perf_counter()
-        if use_adc:
-            rows_scanned = self._scan_groups_pq(queries, sigs, inverse, k,
-                                                out_v, out_i, rerank)
-        elif sigs.shape[0] > 1 and sigs.shape[0] * nprobe >= m:
-            rows_scanned = self._scan_dense(queries, probe, k,
-                                            out_v, out_i)
+        if kind == "fused":
+            rows_scanned = self._scan_fused(queries, cterm, probe, k,
+                                            out_v, out_i, rerank,
+                                            rerank_mult)
         else:
-            rows_scanned = self._scan_groups(queries, sigs, inverse, k,
-                                             out_v, out_i)
+            sigs, inverse = np.unique(probe, axis=0, return_inverse=True)
+            if kind == "adc":
+                rows_scanned = self._scan_groups_pq(queries, sigs, inverse,
+                                                    k, out_v, out_i, rerank,
+                                                    cterm, rerank_mult)
+            elif sigs.shape[0] > 1 and sigs.shape[0] * nprobe >= m:
+                rows_scanned = self._scan_dense(queries, probe, k,
+                                                out_v, out_i)
+            else:
+                rows_scanned = self._scan_groups(queries, sigs, inverse, k,
+                                                 out_v, out_i)
         self._note_scan(stats, time.perf_counter() - t0, rows_scanned,
-                        use_adc)
+                        kind)
         return out_v, out_i
 
-    def _use_adc(self, mode: str, stats, qn: int, k: int) -> bool:
+    def _pick_scan(self, mode: str, stats, qn: int, k: int) -> str:
+        """Resolve the scan layout: "float" | "adc" | "fused".  The fused
+        hint degrades to staged ADC whenever its preconditions fail (one
+        query, pending appends); "auto" asks the cost model, which only
+        returns "fused" after observing a real fused measurement."""
         if self.pq is None or self.codes is None or mode == "float":
-            return False
+            return "float"
+        if mode == "fused":
+            return ("fused" if qn > 1 and self.pending_count == 0
+                    else "adc")
         if mode == "adc":
-            return True
+            return "adc"
         if stats is not None:
-            return stats.choose_knn_scan(self, q=qn, k=k) == "adc"
-        return True
+            return stats.choose_knn_scan(self, q=qn, k=k)
+        return "adc"
 
     def _note_scan(self, stats, dt: float, rows_scanned: int,
-                   used_adc: bool) -> None:
+                   kind: str) -> None:
         self.scan_rows += rows_scanned
         self.scan_time += dt
         if stats is not None and rows_scanned:
-            if used_adc:
+            if kind == "fused":
+                stats.record_fused_scan(dt, rows_scanned)
+            elif kind == "adc":
                 stats.record_pq_scan(dt, rows_scanned)
             else:
                 stats.record_knn_scan(dt, rows_scanned)
@@ -667,26 +789,60 @@ class IVFIndex:
         return queries / np.maximum(
             np.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
 
-    def _kprime(self, k_eff: int, n_real: int, rerank: bool) -> int:
-        """ADC candidate fanout: the re-rank stage reads this many rows."""
+    def _kprime(self, k_eff: int, n_real: int, rerank: bool,
+                rerank_mult: Optional[int] = None) -> int:
+        """ADC candidate fanout: the re-rank stage reads this many rows.
+        ``rerank_mult`` overrides the config multiplier -- the shard
+        scatter path splits the *global* candidate budget across shards
+        (``ceil(cfg.rerank_mult / P)`` each) so total re-rank work stays
+        constant as the shard count grows."""
         if not rerank:
             return k_eff
-        return min(n_real, max(k_eff, self.cfg.rerank_mult * k_eff))
+        rm = self.cfg.rerank_mult if rerank_mult is None else rerank_mult
+        return min(n_real, max(k_eff, rm * k_eff))
+
+    def _pq_luts(self, queries: np.ndarray) -> np.ndarray:
+        """Score LUTs for the ADC scan.  Residual L2 doubles the IP LUTs:
+        the decomposition's query term is ``2 q . r_hat`` (the codebook is
+        trained metric="ip", so ``pq.luts`` yields plain sub dot
+        products)."""
+        luts = self.pq.luts(self._norm_queries(queries))
+        if self.cfg.pq_residual and self.cfg.metric == "l2":
+            luts = luts * np.float32(2.0)
+        return luts
+
+    def _cterm_np(self, queries: np.ndarray, cscores: np.ndarray
+                  ) -> np.ndarray:
+        """[Q, m] per-query centroid term of the residual decomposition.
+        For l2/ip it IS the probe score (``-||q - c_b||^2`` / ``q . c_b``);
+        cosine probes score against *normalized* centroids but the residual
+        sits on the raw centroid, so recompute q_hat . c_b here."""
+        if self.cfg.metric != "cosine":
+            return np.asarray(cscores, np.float32)
+        qn_ = self._norm_queries(queries)
+        return (qn_ @ self.centroids.T).astype(np.float32)
 
     def _gather_codes(self, buckets: np.ndarray
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 Optional[np.ndarray], Optional[np.ndarray],
                                  Optional[np.ndarray]]:
         """ADC view of the probed buckets: (codes, ids, comp_rows,
-        pend_stack).  Only the uint8 codes are copied; original float rows
-        stay in place -- re-rank fetches just the k' candidates through
-        :meth:`_fetch_rows`.  Result positions < len(comp_rows) map to
-        compacted table rows ``comp_rows[pos]``; later positions map into
-        ``pend_stack[pos - len(comp_rows)]`` (uncompacted appends)."""
+        pend_stack, row_bucket, bias).  Only the uint8 codes are copied;
+        original float rows stay in place -- re-rank fetches just the k'
+        candidates through :meth:`_fetch_rows`.  Result positions <
+        len(comp_rows) map to compacted table rows ``comp_rows[pos]``;
+        later positions map into ``pend_stack[pos - len(comp_rows)]``
+        (uncompacted appends).  ``row_bucket`` / ``bias`` carry the
+        residual decomposition's per-row terms and are None unless
+        ``cfg.pq_residual``."""
+        residual = self.cfg.pq_residual
         if len(buckets) == self.centroids.shape[0]:
             # exact mode: identity row map, no table copy
             comp_rows = np.arange(len(self.ids))
             pend_sel = sorted(self._pend_vecs)
             codes, ids = self.codes, self.ids
+            rb = self.bucket_of if residual else None
+            bias = self.code_bias if residual else None
         else:
             segs = [self.bucket_slice(int(b)) for b in buckets]
             comp_rows = (np.concatenate([np.arange(lo, hi)
@@ -695,19 +851,31 @@ class IVFIndex:
             pend_sel = [int(b) for b in buckets if int(b) in self._pend_vecs]
             codes = self.codes[comp_rows]
             ids = self.ids[comp_rows]
+            rb = self.bucket_of[comp_rows] if residual else None
+            bias = (self.code_bias[comp_rows] if residual else None)
         pend_v: List[np.ndarray] = []
         pend_i: List[int] = []
         pend_c: List[np.ndarray] = []
+        pend_s: List[float] = []
+        pend_b: List[int] = []
         for b in pend_sel:
             pend_v += self._pend_vecs[b]
             pend_i += self._pend_ids[b]
             pend_c += self._pend_codes.get(b, [])
+            if residual:
+                pend_s += self._pend_bias.get(b, [])
+                pend_b += [b] * len(self._pend_vecs[b])
         pend_stack = None
         if pend_v:
             pend_stack = np.stack(pend_v)
             codes = np.concatenate([codes, np.stack(pend_c)])
             ids = np.concatenate([ids, np.asarray(pend_i, ids.dtype)])
-        return codes, ids, comp_rows, pend_stack
+            if residual:
+                rb = np.concatenate(
+                    [rb, np.asarray(pend_b, self.bucket_of.dtype)])
+                bias = np.concatenate(
+                    [bias, np.asarray(pend_s, np.float32)])
+        return codes, ids, comp_rows, pend_stack, rb, bias
 
     def _fetch_rows(self, comp_rows: np.ndarray,
                     pend_stack: Optional[np.ndarray],
@@ -725,7 +893,8 @@ class IVFIndex:
 
     def _search_one(self, queries: np.ndarray, k: int, nprobe: int,
                     out_v: np.ndarray, out_i: np.ndarray,
-                    use_adc: bool, rerank: bool) -> int:
+                    use_adc: bool, rerank: bool,
+                    rerank_mult: Optional[int] = None) -> int:
         """Single-query fast path: numpy end-to-end.  One centroid scoring,
         one bucket gather, one scan -- no signature grouping, no block
         padding, no device round-trip.  Candidate order matches the batched
@@ -738,15 +907,20 @@ class IVFIndex:
         else:
             buckets = np.sort(np.argpartition(-cscores, nprobe - 1)[:nprobe])
         if use_adc:
-            codes, ids, comp_rows, pend_stack = self._gather_codes(buckets)
+            codes, ids, comp_rows, pend_stack, rb, bias = \
+                self._gather_codes(buckets)
             n_real = codes.shape[0]
             if n_real == 0:
                 return 0
             k_eff = min(k, n_real)
-            lut = self.pq.luts(self._norm_queries(queries))[0]  # [m, ksub]
+            lut = self._pq_luts(queries)[0]                  # [m, ksub]
             s = lut[np.arange(self.pq.m)[None, :],
                     codes.astype(np.int64)].sum(axis=1)
-            kprime = self._kprime(k_eff, n_real, rerank)
+            if rb is not None:
+                # residual decomposition: + per-row bias + centroid term
+                cterm = self._cterm_np(queries, cscores[None])[0]
+                s = s + bias + cterm[rb.astype(np.int64)]
+            kprime = self._kprime(k_eff, n_real, rerank, rerank_mult)
             # sort candidate positions ascending so score ties resolve to
             # the lower row index (argpartition's order is arbitrary; the
             # batched path's lax.top_k is stable)
@@ -808,24 +982,33 @@ class IVFIndex:
     def _scan_groups_pq(self, queries: np.ndarray, sigs: np.ndarray,
                         inverse: np.ndarray, k: int,
                         out_v: np.ndarray, out_i: np.ndarray,
-                        rerank: bool) -> int:
+                        rerank: bool, cterm: Optional[np.ndarray] = None,
+                        rerank_mult: Optional[int] = None) -> int:
         """PQ two-stage scan, one dispatch per distinct probe signature:
         ADC top-k' over the gathered uint8 codes (``pq_adc_topk``: Pallas
         kernel on TPU, fused XLA gathers elsewhere), then exact re-rank of
-        the k' candidates against the original float rows."""
-        luts = self.pq.luts(self._norm_queries(queries))     # [Q, m, ksub]
+        the k' candidates against the original float rows.  ``cterm``
+        ([Q, m], residual mode) carries each query's centroid term; the
+        per-row bias + bucket id ride along from :meth:`_gather_codes`."""
+        luts = self._pq_luts(queries)                        # [Q, m, ksub]
         rows_scanned = 0
         for g in range(sigs.shape[0]):
             qsel = np.nonzero(inverse == g)[0]
-            codes, ids, comp_rows, pend_stack = self._gather_codes(sigs[g])
+            codes, ids, comp_rows, pend_stack, rb, bias = \
+                self._gather_codes(sigs[g])
             n_real = codes.shape[0]
             if n_real == 0:
                 continue
             k_eff = min(k, n_real)
-            kprime = self._kprime(k_eff, n_real, rerank)
+            kprime = self._kprime(k_eff, n_real, rerank, rerank_mult)
             vals, idx = pq_adc_topk(
                 jnp.asarray(luts[qsel]), jnp.asarray(codes), kprime,
-                block_n=self.cfg.block_n)
+                block_n=self.cfg.block_n,
+                bias=(None if bias is None else jnp.asarray(bias)),
+                row_bucket=(None if rb is None
+                            else jnp.asarray(rb, jnp.int32)),
+                cscores=(None if cterm is None
+                         else jnp.asarray(cterm[qsel])))
             idx = np.asarray(idx).astype(np.int64)           # [Qg, k']
             if rerank:
                 cand = self._fetch_rows(comp_rows, pend_stack,
@@ -845,6 +1028,58 @@ class IVFIndex:
                     ids[idx[:, :k_eff]]
             rows_scanned += n_real * len(qsel)
         return rows_scanned
+
+    def _scan_fused(self, queries: np.ndarray, cterm: Optional[np.ndarray],
+                    probe: np.ndarray, k: int,
+                    out_v: np.ndarray, out_i: np.ndarray,
+                    rerank: bool, rerank_mult: Optional[int] = None) -> int:
+        """Fused probe->ADC->top-k': ONE ``pq_adc_topk`` dispatch over the
+        whole code table for the entire batch, each query's non-probed
+        buckets pinned to -inf in-kernel via ``probe_mask`` -- no signature
+        grouping, no per-group gathers or dispatches.  Precondition (held
+        by :meth:`_pick_scan`): the index is compacted, so candidate
+        positions ARE table rows and the re-rank fetch is an identity
+        gather.  Candidates, tie order and returned scores are identical
+        to the staged ADC path: probed rows enter the top-k' in the same
+        ascending-row order the per-signature gathers would produce, and a
+        query probing fewer than k' rows surfaces the same (-inf, -1)
+        tail."""
+        m = self.centroids.shape[0]
+        qn = queries.shape[0]
+        n_real = len(self.ids)
+        if n_real == 0:
+            return 0
+        k_eff = min(k, n_real)
+        kprime = self._kprime(k_eff, n_real, rerank, rerank_mult)
+        pm = np.zeros((qn, m), bool)
+        pm[np.arange(qn)[:, None], probe] = True
+        luts = self._pq_luts(queries)                        # [Q, m, ksub]
+        residual = cterm is not None
+        vals, idx = pq_adc_topk(
+            jnp.asarray(luts), jnp.asarray(self.codes), kprime,
+            block_n=self.cfg.block_n,
+            bias=(jnp.asarray(self.code_bias) if residual else None),
+            row_bucket=jnp.asarray(self.bucket_of, jnp.int32),
+            cscores=(jnp.asarray(cterm) if residual else None),
+            probe_mask=jnp.asarray(pm))
+        vals = np.asarray(vals)
+        idx = np.asarray(idx).astype(np.int64)               # [Q, k']; -1 pad
+        valid = idx >= 0
+        safe = np.where(valid, idx, 0)
+        rows = np.arange(qn)[:, None]
+        if rerank:
+            cand = self.vectors[safe]                        # [Q, k', d]
+            exact = _exact_scores_np(queries, cand, self.cfg.metric)
+            exact = np.where(valid, exact, -np.inf)
+            order = np.argsort(-exact, axis=1, kind="stable")[:, :k_eff]
+            v = exact[rows, order]
+            gid = self.ids[safe][rows, order]
+        else:
+            v = vals[:, :k_eff]
+            gid = self.ids[safe[:, :k_eff]]
+        out_v[:, :k_eff] = v
+        out_i[:, :k_eff] = np.where(np.isfinite(v), gid, -1)
+        return qn * n_real
 
     def _scan_dense(self, queries: np.ndarray, probe: np.ndarray, k: int,
                     out_v: np.ndarray, out_i: np.ndarray) -> int:
@@ -908,12 +1143,20 @@ class IVFIndex:
         if self.cfg.pq_m <= 0:
             return
         self.compact()
+        train_rows = self.vectors
+        pq_metric = "ip" if self.cfg.metric in ("ip", "cosine") else "l2"
+        if self.cfg.pq_residual:
+            train_rows = self.vectors - self.centroids[
+                self.bucket_of.astype(np.int64)]
+            pq_metric = "ip"
         self.pq = PQCodebook.train(
-            self.vectors, self.cfg.pq_m, bits=self.cfg.pq_bits,
-            iters=self.cfg.pq_kmeans_iters,
-            metric="ip" if self.cfg.metric in ("ip", "cosine") else "l2",
-            seed=seed)
-        self.codes = self.pq.encode(self.vectors)
+            train_rows, self.cfg.pq_m, bits=self.cfg.pq_bits,
+            iters=self.cfg.pq_kmeans_iters, metric=pq_metric, seed=seed)
+        self.codes = self.pq.encode(train_rows)
+        if self.cfg.pq_residual:
+            self.code_bias = _residual_bias(self.pq, self.codes,
+                                            self.centroids, self.bucket_of,
+                                            self.cfg.metric)
         if stats is not None:
             stats.note_index_rebuild("pq_retrain")
 
@@ -953,7 +1196,10 @@ class IVFIndex:
                                    pq=self.pq,
                                    codes=(self.codes[sel]
                                           if self.codes is not None
-                                          else None)))
+                                          else None),
+                                   code_bias=(self.code_bias[sel]
+                                              if self.code_bias is not None
+                                              else None)))
         return shards
 
     @staticmethod
@@ -981,10 +1227,13 @@ class IVFIndex:
         ids = np.concatenate([p.ids for p in pieces])
         codes = (np.concatenate([p.codes for p in pieces])
                  if base.codes is not None else None)
+        bias = (np.concatenate([p.code_bias for p in pieces])
+                if base.code_bias is not None else None)
         order = np.lexsort((ids, bucket))
         return IVFIndex(base.cfg, base.centroids, bucket[order], vecs[order],
                         ids[order], serial=base.serial, pq=base.pq,
-                        codes=(codes[order] if codes is not None else None))
+                        codes=(codes[order] if codes is not None else None),
+                        code_bias=(bias[order] if bias is not None else None))
 
 
 def _exact_scores_np(queries: np.ndarray, cand: np.ndarray, metric: str

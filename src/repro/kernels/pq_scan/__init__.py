@@ -1,6 +1,7 @@
 from repro.kernels.pq_scan.ops import pq_adc_topk
-from repro.kernels.pq_scan.pq_scan import pq_adc_topk_pallas
+from repro.kernels.pq_scan.pq_scan import (pq_adc_topk_ext_pallas,
+                                           pq_adc_topk_pallas)
 from repro.kernels.pq_scan.ref import pq_adc_topk_ref, pq_scores_ref
 
-__all__ = ["pq_adc_topk", "pq_adc_topk_pallas", "pq_adc_topk_ref",
-           "pq_scores_ref"]
+__all__ = ["pq_adc_topk", "pq_adc_topk_ext_pallas", "pq_adc_topk_pallas",
+           "pq_adc_topk_ref", "pq_scores_ref"]

@@ -10,18 +10,26 @@ to one and passes ``n_valid`` through: padded rows are masked to ``NEG``
 inside the kernel (or to -inf on the XLA path) and can never appear in the
 returned top-k.  Callers may also pre-pad for shape stability and pass their
 own ``n_valid``.
+
+The optional ``bias`` / ``row_bucket`` / ``cscores`` / ``probe_mask``
+arguments carry the residual-PQ score decomposition and the fused
+whole-table scan (see ref.py); with ``probe_mask``, queries whose probed
+buckets hold fewer than k rows surface (val=-inf, id=-1) padding at the
+tail -- the same contract the shard merge already truncates.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pq_scan.pq_scan import pq_adc_topk_pallas
+from repro.kernels.pq_scan.pq_scan import (pq_adc_topk_ext_pallas,
+                                           pq_adc_topk_pallas)
 
 _KERNEL_MAX_K = 64
+_NEG_THRESH = -1.5e38   # kernel NEG mask values live below this
 
 
 def _on_tpu() -> bool:
@@ -48,29 +56,94 @@ def _pq_topk_xla(luts: jnp.ndarray, codes: jnp.ndarray, n_valid: jnp.ndarray,
     return vals, idx.astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "masked"))
+def _pq_topk_xla_ext(luts: jnp.ndarray, codes: jnp.ndarray,
+                     n_valid: jnp.ndarray, bias: jnp.ndarray,
+                     row_bucket: jnp.ndarray, cscores: jnp.ndarray,
+                     probe_mask: jnp.ndarray, k: int, masked: bool
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Extended XLA twin: LUT gathers + bias + per-row bucket term (+ probe
+    mask) + padding mask + top-k, one dispatch for the whole batch."""
+    qn, m, _ksub = luts.shape
+    codes = codes.astype(jnp.int32)
+    s = jnp.zeros((qn, codes.shape[0]), jnp.float32)
+    for j in range(m):                      # static unroll: M is small
+        s = s + luts[:, j, :][:, codes[:, j]]
+    rb = row_bucket.astype(jnp.int32)
+    s = s + bias[None, :] + cscores[:, rb]
+    if masked:
+        s = jnp.where(probe_mask[:, rb] > 0.5, s, -jnp.inf)
+    cols = jnp.arange(codes.shape[0])[None, :]
+    s = jnp.where(cols >= n_valid, -jnp.inf, s)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)
+
+
 def pq_adc_topk(luts: jnp.ndarray, codes: jnp.ndarray, k: int,
                 block_n: int = 512, n_valid: int = -1,
-                force_pallas: bool = False
+                force_pallas: bool = False,
+                bias: Optional[jnp.ndarray] = None,
+                row_bucket: Optional[jnp.ndarray] = None,
+                cscores: Optional[jnp.ndarray] = None,
+                probe_mask: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """[Q, M, K] x [N, M] -> (vals [Q, k'], ids [Q, k']), k' = min(k, n_valid).
 
     Rows at positions >= ``n_valid`` (default: all of ``codes``) are treated
     as padding and excluded from the result; returned indices are always
-    < ``n_valid``.
-    """
+    < ``n_valid``.  ``cscores`` / ``probe_mask`` require ``row_bucket``
+    (see ref.py for the extended score decomposition); with ``probe_mask``,
+    per-query positions past that query's probed row count come back as
+    (val=-inf, id=-1) padding."""
     n = codes.shape[0]
+    qn = luts.shape[0]
     if n_valid < 0 or n_valid > n:
         n_valid = n
     k = min(k, n_valid)
     if k <= 0:
-        return (jnp.zeros((luts.shape[0], 0), jnp.float32),
-                jnp.zeros((luts.shape[0], 0), jnp.int32))
+        return (jnp.zeros((qn, 0), jnp.float32),
+                jnp.zeros((qn, 0), jnp.int32))
+    ext = any(a is not None for a in (bias, row_bucket, cscores, probe_mask))
+    if (cscores is not None or probe_mask is not None) and row_bucket is None:
+        raise ValueError("cscores/probe_mask require row_bucket")
     use_kernel = (force_pallas or _on_tpu()) and k <= _KERNEL_MAX_K
+    if not ext:
+        if use_kernel:
+            pad = (-n) % block_n
+            if pad:
+                codes = jnp.pad(codes, ((0, pad), (0, 0)))
+            return pq_adc_topk_pallas(luts, codes, k, block_n=block_n,
+                                      n_valid=n_valid,
+                                      interpret=not _on_tpu())
+        return _pq_topk_xla(luts, codes, jnp.int32(n_valid), k)
+
+    masked = probe_mask is not None
+    mb = (cscores.shape[1] if cscores is not None
+          else probe_mask.shape[1] if probe_mask is not None else 1)
+    bias = (jnp.zeros(n, jnp.float32) if bias is None
+            else jnp.asarray(bias, jnp.float32))
+    rb = (jnp.zeros(n, jnp.int32) if row_bucket is None
+          else jnp.asarray(row_bucket, jnp.int32))
+    cs = (jnp.zeros((qn, mb), jnp.float32) if cscores is None
+          else jnp.asarray(cscores, jnp.float32))
+    pm = (jnp.ones((qn, mb), jnp.float32) if probe_mask is None
+          else jnp.asarray(probe_mask).astype(jnp.float32))
     if use_kernel:
         pad = (-n) % block_n
         if pad:
             codes = jnp.pad(codes, ((0, pad), (0, 0)))
-        return pq_adc_topk_pallas(luts, codes, k, block_n=block_n,
-                                  n_valid=n_valid,
-                                  interpret=not _on_tpu())
-    return _pq_topk_xla(luts, codes, jnp.int32(n_valid), k)
+            bias = jnp.pad(bias, (0, pad))
+            rb = jnp.pad(rb, (0, pad))
+        v, i = pq_adc_topk_ext_pallas(luts, codes, bias, rb, cs, pm, k,
+                                      block_n=block_n, n_valid=n_valid,
+                                      interpret=not _on_tpu())
+        if masked:
+            # in-kernel NEG masking stands in for -inf: restore it and pin
+            # the id payload of empty positions to -1 (the merge contract)
+            v = jnp.where(v <= _NEG_THRESH, -jnp.inf, v)
+    else:
+        v, i = _pq_topk_xla_ext(luts, codes, jnp.int32(n_valid), bias, rb,
+                                cs, pm, k, masked)
+    if masked:
+        i = jnp.where(jnp.isfinite(v), i, -1)
+    return v, i

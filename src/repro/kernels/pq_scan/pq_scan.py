@@ -10,6 +10,17 @@ runs the same L vectorized max/mask sweeps as ``ivf_scan`` -- no
 data-dependent control flow, no cross-tile traffic -- and a tiny jnp
 epilogue merges the [n_tiles, L] partials.
 
+The *extended* kernel adds the residual / fused score decomposition
+
+    s[q, n] = LUT sum + bias[n] + cscores[q, row_bucket[n]],
+    masked to -inf where probe_mask[q, row_bucket[n]] is False
+
+with the same one-hot trick on the bucket axis: a [BN, MB] bucket one-hot
+contracts against ``cscores`` / ``probe_mask`` [Q, MB] in two more MXU
+passes -- no per-lane gather, and the fused probe->ADC->top-k pipeline can
+scan the *whole* code table in one call with non-probed buckets masked
+in-kernel.
+
 VMEM working set per grid step (Q<=128, BN=512, M=8, K=256, fp32):
   luts 128x2048 (1 MB) + codes 512x8 (16 kB int32) + onehot 512x2048 (4 MB)
   + scores 128x512 (256 kB)  -> comfortably under the ~16 MB VMEM budget.
@@ -24,6 +35,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG = -3.0e38
+
+
+def _topl_sweep(s, base, cols, topl, vals_ref, idx_ref):
+    """Tile-local top-L via repeated max-extract (vectorized, L small)."""
+    for l in range(topl):
+        mx = jnp.max(s, axis=-1)                                  # [Q]
+        a = jnp.argmax(s, axis=-1).astype(jnp.int32)              # [Q]
+        vals_ref[:, l] = mx
+        idx_ref[:, l] = a + base
+        s = jnp.where(cols == a[:, None], NEG, s)
 
 
 def _pq_kernel(luts_ref, codes_ref, vals_ref, idx_ref, *, topl: int,
@@ -45,12 +66,39 @@ def _pq_kernel(luts_ref, codes_ref, vals_ref, idx_ref, *, topl: int,
         # rows past n_valid are padding (code table padded up to a block_n
         # multiple by the dispatcher): mask them out of every sweep
         s = jnp.where(cols + base >= n_valid, NEG, s)
-    for l in range(topl):
-        mx = jnp.max(s, axis=-1)                                  # [Q]
-        a = jnp.argmax(s, axis=-1).astype(jnp.int32)              # [Q]
-        vals_ref[:, l] = mx
-        idx_ref[:, l] = a + base
-        s = jnp.where(cols == a[:, None], NEG, s)
+    _topl_sweep(s, base, cols, topl, vals_ref, idx_ref)
+
+
+def _pq_kernel_ext(luts_ref, codes_ref, bias_ref, rb_ref, cs_ref, pm_ref,
+                   vals_ref, idx_ref, *, topl: int, block_n: int, ksub: int,
+                   mb: int, n_valid: int, n_total: int):
+    luts = luts_ref[...]                                  # [Q, M*K] f32
+    codes = codes_ref[...].astype(jnp.int32)              # [BN, M]
+    bn, m = codes.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, m, ksub), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+    onehot = onehot.reshape(bn, m * ksub)
+    s = jax.lax.dot_general(luts, onehot, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, BN]
+    # bucket terms: one-hot the per-row bucket id and contract the per-query
+    # centroid scores / probe mask against it -- two more MXU passes instead
+    # of a per-lane gather
+    rb = rb_ref[...].astype(jnp.int32)                    # [BN]
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (bn, mb), 1)
+    onehot_b = (rb[:, None] == iota_b).astype(jnp.float32)        # [BN, MB]
+    cterm = jax.lax.dot_general(cs_ref[...], onehot_b,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    mterm = jax.lax.dot_general(pm_ref[...], onehot_b,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s = s + cterm + bias_ref[...][None, :]
+    s = jnp.where(mterm > 0.5, s, NEG)
+    base = pl.program_id(0) * block_n
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if n_valid < n_total:
+        s = jnp.where(cols + base >= n_valid, NEG, s)
+    _topl_sweep(s, base, cols, topl, vals_ref, idx_ref)
 
 
 @functools.partial(jax.jit,
@@ -94,6 +142,63 @@ def pq_adc_topk_pallas(luts: jnp.ndarray, codes: jnp.ndarray, k: int,
         ],
         interpret=interpret,
     )(luts_flat, codes)
+
+    # epilogue: merge per-tile partials (tiny)
+    mv, mi = jax.lax.top_k(vals, k)
+    return mv, jnp.take_along_axis(idx, mi, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "n_valid", "interpret"))
+def pq_adc_topk_ext_pallas(luts: jnp.ndarray, codes: jnp.ndarray,
+                           bias: jnp.ndarray, row_bucket: jnp.ndarray,
+                           cscores: jnp.ndarray, probe_mask: jnp.ndarray,
+                           k: int, block_n: int = 512, n_valid: int = -1,
+                           interpret: bool = True
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Extended ADC scan: LUT sum + bias[n] + cscores[q, row_bucket[n]],
+    rows of non-probed buckets (probe_mask False) pinned to ``NEG``.
+    Shapes: luts [Q, M, K], codes [N, M], bias [N], row_bucket [N] in
+    [0, MB), cscores/probe_mask [Q, MB]; N % block_n == 0."""
+    qn, m, ksub = luts.shape
+    n = codes.shape[0]
+    mb = cscores.shape[1]
+    assert codes.shape[1] == m, (codes.shape, m)
+    assert n % block_n == 0, (n, block_n)
+    assert probe_mask.shape == cscores.shape, (probe_mask.shape,
+                                               cscores.shape)
+    if n_valid < 0:
+        n_valid = n
+    assert k <= n_valid, (k, n_valid)
+    n_tiles = n // block_n
+    luts_flat = luts.astype(jnp.float32).reshape(qn, m * ksub)
+    codes = codes.astype(jnp.int32)
+
+    kernel = functools.partial(_pq_kernel_ext, topl=k, block_n=block_n,
+                               ksub=ksub, mb=mb, n_valid=n_valid, n_total=n)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((qn, m * ksub), lambda i: (0, 0)),  # luts: resident
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),    # code tile
+            pl.BlockSpec((block_n,), lambda i: (i,)),        # bias tile
+            pl.BlockSpec((block_n,), lambda i: (i,)),        # bucket tile
+            pl.BlockSpec((qn, mb), lambda i: (0, 0)),        # cscores: res
+            pl.BlockSpec((qn, mb), lambda i: (0, 0)),        # mask: res
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, k), lambda i: (0, i)),         # per-tile topL
+            pl.BlockSpec((qn, k), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, n_tiles * k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, n_tiles * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts_flat, codes, bias.astype(jnp.float32),
+      row_bucket.astype(jnp.int32), cscores.astype(jnp.float32),
+      probe_mask.astype(jnp.float32))
 
     # epilogue: merge per-tile partials (tiny)
     mv, mi = jax.lax.top_k(vals, k)

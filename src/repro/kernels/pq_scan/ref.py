@@ -7,6 +7,19 @@ for L2 the LUT holds negative squared sub-distances, for IP the sub dot
 products).  The scan is then M table gathers + an add per corpus row --
 no floats from the corpus are ever touched.
 
+Three optional extensions carry the residual-encoding / fused-pipeline
+score decomposition (score = LUT sum + per-row bias + per-query bucket
+term, masked to the probed buckets):
+
+* ``bias [N]`` -- a per-row additive constant (residual PQ's
+  ``-2*c_b.r_hat - ||r_hat||^2`` term, precomputed at encode time).
+* ``row_bucket [N]`` + ``cscores [Q, MB]`` -- adds ``cscores[q,
+  row_bucket[n]]`` per row (residual PQ's ``-||q - c_b||^2`` / ``q.c_b``
+  centroid term, already computed by the probe).
+* ``row_bucket [N]`` + ``probe_mask [Q, MB]`` -- pins rows whose bucket a
+  query did not probe to -inf (the fused path scans the whole code table
+  in one call instead of gathering per signature).
+
 Tie-breaking matches ``jax.lax.top_k`` (equal scores -> lower row index),
 so candidate ids are byte-comparable against the kernel and the XLA twin.
 """
@@ -17,28 +30,43 @@ from typing import Tuple
 import numpy as np
 
 
-def pq_scores_ref(luts, codes) -> np.ndarray:
-    """[Q, M, K] x [N, M] -> [Q, N]: s[q, n] = sum_m luts[q, m, codes[n, m]]."""
+def pq_scores_ref(luts, codes, bias=None, row_bucket=None, cscores=None,
+                  probe_mask=None) -> np.ndarray:
+    """[Q, M, K] x [N, M] -> [Q, N]: s[q, n] = sum_m luts[q, m, codes[n, m]]
+    (+ bias[n] + cscores[q, row_bucket[n]], non-probed buckets -> -inf)."""
     luts = np.asarray(luts, np.float32)
     codes = np.asarray(codes).astype(np.int64)
     q, m, _k = luts.shape
     s = np.zeros((q, codes.shape[0]), np.float32)
     for j in range(m):
         s += luts[:, j, :][:, codes[:, j]]
+    if bias is not None:
+        s += np.asarray(bias, np.float32)[None, :]
+    if row_bucket is not None:
+        rb = np.asarray(row_bucket).astype(np.int64)
+        if cscores is not None:
+            s += np.asarray(cscores, np.float32)[:, rb]
+        if probe_mask is not None:
+            s = np.where(np.asarray(probe_mask, bool)[:, rb], s, -np.inf)
     return s
 
 
-def pq_adc_topk_ref(luts, codes, k: int, n_valid: int = -1
+def pq_adc_topk_ref(luts, codes, k: int, n_valid: int = -1, bias=None,
+                    row_bucket=None, cscores=None, probe_mask=None
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """[Q, M, K] x [N, M] -> (scores [Q, k], indices [Q, k]), higher = better.
 
     ``n_valid`` (< N) masks trailing padding rows to -inf, mirroring the
     kernel's contract so the dispatcher can pad code tables freely."""
-    s = pq_scores_ref(luts, codes)
+    s = pq_scores_ref(luts, codes, bias=bias, row_bucket=row_bucket,
+                      cscores=cscores, probe_mask=probe_mask)
     n = s.shape[1]
     if 0 <= n_valid < n:
         s[:, n_valid:] = -np.inf
     # stable descending sort == lax.top_k tie order (lower index first)
     idx = np.argsort(-s, axis=1, kind="stable")[:, :k]
     vals = np.take_along_axis(s, idx, axis=1)
+    if probe_mask is not None:
+        # a query probing fewer than k rows pads its tail: (val=-inf, id=-1)
+        idx = np.where(np.isfinite(vals), idx, -1)
     return vals.astype(np.float32), idx.astype(np.int32)

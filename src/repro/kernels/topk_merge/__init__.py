@@ -1,0 +1,5 @@
+from repro.kernels.topk_merge.ops import merge_topk_dev
+from repro.kernels.topk_merge.ref import merge_topk_ref
+from repro.kernels.topk_merge.topk_merge import merge_topk_pallas
+
+__all__ = ["merge_topk_dev", "merge_topk_pallas", "merge_topk_ref"]

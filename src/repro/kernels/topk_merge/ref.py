@@ -1,0 +1,49 @@
+"""Pure-numpy oracle for the k-way top-k merge kernel.
+
+The cluster reduce step: P shards each return a per-query top-k window
+``(vals [P, Q, K], ids [P, Q, K])`` (val=-inf / id=-1 padding where a shard
+holds fewer than K real rows) and the coordinator needs the global top-k per
+query.  The merge flattens the shard axis into ``C = P * K`` candidate
+columns per query and takes the top ``min(k, C)`` -- associative, so any
+merge tree yields the same set.
+
+Tie-breaking matches ``jax.lax.top_k`` (equal scores -> lower flattened
+column index, i.e. lower shard first, then that shard's rank order), so the
+merged ids are byte-comparable against the kernel and the XLA twin.  Padding
+columns are all -inf ties: they sink below every real candidate and, among
+themselves, surface in ascending column order carrying their id=-1 payload
+-- callers truncate to the real candidate count (see
+``scatter_gather_knn``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def merge_topk_ref(vals, ids, k: int, n_valid: int = -1
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """[P, Q, K] x [P, Q, K] -> (vals [Q, k'], ids [Q, k']), k' = min(k, C).
+
+    ``n_valid`` (< C = P*K) masks trailing flattened candidate columns to
+    -inf, mirroring the kernel's contract so the dispatcher can pad the
+    shard axis freely (flattened column ``p * K + j`` is shard p's rank-j
+    candidate)."""
+    vals = np.asarray(vals, np.float32)
+    ids = np.asarray(ids)
+    p, qn, kk = vals.shape
+    c = p * kk
+    flat_v = vals.transpose(1, 0, 2).reshape(qn, c).copy()
+    flat_i = ids.transpose(1, 0, 2).reshape(qn, c)
+    if 0 <= n_valid < c:
+        flat_v[:, n_valid:] = -np.inf
+        c_valid = n_valid
+    else:
+        c_valid = c
+    k = min(k, c_valid)
+    # stable descending sort == lax.top_k tie order (lower index first)
+    pos = np.argsort(-flat_v, axis=1, kind="stable")[:, :k]
+    mv = np.take_along_axis(flat_v, pos, axis=1)
+    mi = np.take_along_axis(flat_i, pos, axis=1)
+    return mv.astype(np.float32), mi

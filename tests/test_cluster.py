@@ -586,3 +586,54 @@ def test_ordered_merge_property_seeded_fallback():
         got = [r["i"] for r in _merge_all(streams, batch_rows=3,
                                           limit=limit)]
         assert got == (ids if limit is None else ids[:limit])
+
+
+# -- merge padding contract (device-side k-way merge) -------------------------
+
+
+def test_scatter_gather_padding_contract_starved_shards():
+    """The retire/recovery shape: shards holding FEWER than k rows each
+    (one completely empty).  The merged output must satisfy the padding
+    invariant -- id=-1 exactly where val=-inf, never a -1 with a finite
+    score and never a real id past the real candidate count."""
+    from repro.core.vector_index import scatter_gather_knn, flat_shard_view
+
+    rng = np.random.default_rng(21)
+    qs = rng.standard_normal((5, 8)).astype(np.float32)
+    rows = rng.standard_normal((5, 8)).astype(np.float32)
+    shards = [
+        flat_shard_view(rows[:2], np.asarray([10, 11])),
+        flat_shard_view(rows[2:2], np.asarray([], np.int64)),  # empty shard
+        flat_shard_view(rows[2:], np.asarray([12, 13, 14])),
+    ]
+    k = 10                                   # > 5 total real rows
+    v, i = scatter_gather_knn(shards, qs, k)
+    assert v.shape == (5, k) and i.shape == (5, k)
+    assert np.array_equal(i == -1, ~np.isfinite(v))
+    assert np.isfinite(v[:, :5]).all() and (i[:, :5] >= 10).all()
+    assert (i[:, 5:] == -1).all() and np.isinf(v[:, 5:]).all()
+    # the merged head is the true exact top-5 of the union
+    allv, alli = np.concatenate([rows[:2], rows[2:]]), np.arange(10, 15)
+    s = -((qs[:, None, :] - allv[None]) ** 2).sum(-1)
+    want = np.argsort(-s, axis=1, kind="stable")
+    assert np.array_equal(i[:, :5], alli[want])
+
+
+def test_cluster_knn_fused_mode_passthrough():
+    """mode="fused" rides the coordinator path end-to-end (knn ->
+    scatter_gather_knn -> each shard's search_many) and stays
+    byte-identical to the staged ADC scan."""
+    cfg = VectorIndexConfig(dim=DIM, metric="l2", vectors_per_bucket=16,
+                            min_buckets=4, nprobe=4, pq_m=8,
+                            pq_residual=True)
+    c = make_cluster(2, payloads=PAYLOADS_UNIQ)
+    c.build_index("face", "photo", cfg=cfg)
+    for piece in c.index_pieces("face"):
+        assert piece.cfg.pq_residual and piece.code_bias is not None
+    rng = np.random.default_rng(17)
+    q = rng.standard_normal((6, DIM)).astype(np.float32)
+    v_a, i_a = c.knn("face", q, 5, mode="adc")
+    v_f, i_f = c.knn("face", q, 5, mode="fused")
+    assert np.array_equal(i_a, i_f)
+    assert np.array_equal(v_a, v_f)   # exact re-ranked scores merge exactly
+    c.close()

@@ -250,3 +250,217 @@ def test_decode_matches_model_decode():
     o2 = model_decode(q, k, v, pos)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
                                atol=1e-5)
+
+
+# -- topk_merge (k-way shard reduce) ------------------------------------------
+
+
+from repro.kernels.topk_merge.ops import merge_topk_dev  # noqa: E402
+from repro.kernels.topk_merge.ref import merge_topk_ref  # noqa: E402
+from repro.kernels.topk_merge.topk_merge import merge_topk_pallas  # noqa: E402
+
+
+def _merge_inputs(p, qn, kk, pad_frac=0.0, seed=0):
+    """Per-shard top-k windows with optional (-inf, -1) tail padding --
+    exactly the shape scatter_gather_knn stacks before merging."""
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal((p, qn, kk)).astype(np.float32)
+    vals = -np.sort(-vals, axis=2)           # descending, as top-k windows are
+    ids = rng.integers(0, 10_000, (p, qn, kk)).astype(np.int64)
+    if pad_frac > 0:
+        n_pad = max(1, int(kk * pad_frac))
+        vals[:, :, kk - n_pad:] = -np.inf
+        ids[:, :, kk - n_pad:] = -1
+    return vals, ids
+
+
+@pytest.mark.parametrize("p,qn,kk,k", [(2, 1, 1, 1), (2, 4, 10, 10),
+                                       (8, 16, 10, 10), (4, 130, 16, 7),
+                                       (3, 8, 5, 32)])
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_topk_merge_shapes(p, qn, kk, k, force_pallas):
+    vals, ids = _merge_inputs(p, qn, kk, seed=p * 100 + qn)
+    v1, i1 = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), k,
+                            force_pallas=force_pallas)
+    v2, i2 = merge_topk_ref(vals, ids, k)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(i1), i2)
+
+
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_topk_merge_padded_shards(force_pallas):
+    """Shard windows carrying (-inf, -1) padding: the padding sinks to the
+    tail and -1 only ever appears where the merged value is -inf."""
+    vals, ids = _merge_inputs(2, 8, 10, pad_frac=0.8, seed=3)
+    v1, i1 = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), 10,
+                            force_pallas=force_pallas)
+    v2, i2 = merge_topk_ref(vals, ids, 10)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(i1), i2)
+    v1, i1 = np.asarray(v1), np.asarray(i1)
+    # 2 shards x 2 real rows = 4 real candidates < k=10: the tail pads
+    assert np.isinf(v1[:, 4:]).all() and (i1[:, 4:] == -1).all()
+    assert np.isfinite(v1[:, :4]).all() and (i1[:, :4] >= 0).all()
+
+
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_topk_merge_all_padding_shard(force_pallas):
+    """One shard contributes NOTHING (an all-padding window -- the retired
+    / empty shard case).  A naive NEG-masked merge would re-select that
+    shard's columns k times; the kernel must consume each exactly once."""
+    vals, ids = _merge_inputs(3, 6, 8, seed=5)
+    vals[1] = -np.inf
+    ids[1] = -1
+    v1, i1 = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), 8,
+                            force_pallas=force_pallas)
+    v2, i2 = merge_topk_ref(vals, ids, 8)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(i1), i2)
+    # 2 live shards x 8 real entries >= k=8: no -1 may surface at all
+    assert (np.asarray(i1) >= 0).all()
+
+
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_topk_merge_everything_padding(force_pallas):
+    """Every shard empty: the merge returns pure (-inf, -1) padding."""
+    vals = np.full((2, 3, 4), -np.inf, np.float32)
+    ids = np.full((2, 3, 4), -1, np.int64)
+    v, i = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), 4,
+                          force_pallas=force_pallas)
+    assert np.isinf(np.asarray(v)).all() and (np.asarray(i) == -1).all()
+
+
+@pytest.mark.parametrize("n_valid", [1, 7, 13, 19])
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_topk_merge_n_valid_non_multiple(n_valid, force_pallas):
+    """n_valid not a multiple of any shard width: trailing flat columns are
+    masked out and k clamps to the surviving column count."""
+    vals, ids = _merge_inputs(4, 5, 5, seed=n_valid)       # 20 flat columns
+    v1, i1 = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), 16,
+                            n_valid=n_valid, force_pallas=force_pallas)
+    v2, i2 = merge_topk_ref(vals, ids, 16, n_valid=n_valid)
+    assert v1.shape[1] == min(16, n_valid) == v2.shape[1]
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(i1), i2)
+
+
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_topk_merge_tie_order_matches_lax_topk(force_pallas):
+    """Equal scores across shards resolve to the LOWER flat column -- the
+    lax.top_k order the staged merge produced, so results stay
+    byte-identical after the kernel swap."""
+    vals = np.zeros((3, 4, 6), np.float32)                 # all ties
+    ids = np.arange(3 * 4 * 6).reshape(3, 4, 6).astype(np.int64)
+    v1, i1 = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), 9,
+                            force_pallas=force_pallas)
+    flat_i = np.transpose(ids, (1, 0, 2)).reshape(4, 18)
+    assert np.array_equal(np.asarray(i1), flat_i[:, :9])
+    v2, i2 = merge_topk_ref(vals, ids, 9)
+    assert np.array_equal(np.asarray(i1), i2)
+
+
+def test_topk_merge_kernel_blocks():
+    """Q not a multiple of block_q: the wrapper pads the query axis and
+    slices the result back."""
+    vals, ids = _merge_inputs(4, 130, 16, pad_frac=0.25, seed=9)
+    v1, i1 = merge_topk_dev(jnp.asarray(vals), jnp.asarray(ids), 16,
+                            block_q=128, force_pallas=True)
+    v2, i2 = merge_topk_ref(vals, ids, 16)
+    assert v1.shape == (130, 16)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(i1), i2)
+
+
+# -- pq_scan extended decomposition (residual bias / cterm / fused mask) ------
+
+
+def _ext_inputs(qn, n, m, ksub, mb, seed=0):
+    rng = np.random.default_rng(seed)
+    luts = rng.standard_normal((qn, m, ksub)).astype(np.float32)
+    codes = rng.integers(0, ksub, (n, m)).astype(np.int32)
+    bias = rng.standard_normal(n).astype(np.float32)
+    rb = rng.integers(0, mb, n).astype(np.int32)
+    cs = rng.standard_normal((qn, mb)).astype(np.float32)
+    pm = rng.random((qn, mb)) < 0.5
+    # every query probes at least one bucket
+    pm[np.arange(qn), rng.integers(0, mb, qn)] = True
+    return luts, codes, bias, rb, cs, pm
+
+
+@pytest.mark.parametrize("qn,n,mb,k", [(2, 300, 4, 5), (5, 1024, 8, 16),
+                                       (3, 700, 6, 64)])
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_pq_ext_bias_cterm_parity(qn, n, mb, k, force_pallas):
+    """score = LUT sum + bias[row] + cscores[q, bucket[row]]: the staged
+    residual-PQ decomposition, kernel/XLA vs oracle."""
+    luts, codes, bias, rb, cs, _ = _ext_inputs(qn, n, 8, 64, mb, seed=k)
+    v1, i1 = pq_adc_topk(jnp.asarray(luts), jnp.asarray(codes), k,
+                         bias=jnp.asarray(bias), row_bucket=jnp.asarray(rb),
+                         cscores=jnp.asarray(cs), force_pallas=force_pallas)
+    v2, i2 = pq_adc_topk_ref(luts, codes, k, bias=bias, row_bucket=rb,
+                             cscores=cs)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(i1), i2)
+
+
+@pytest.mark.parametrize("qn,n,mb,k", [(2, 300, 4, 5), (5, 1024, 8, 16)])
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_pq_ext_probe_mask_parity(qn, n, mb, k, force_pallas):
+    """The fused whole-table scan: probe_mask pins non-probed rows to -inf
+    in-kernel; a query probing fewer than k rows surfaces (-inf, -1)."""
+    luts, codes, bias, rb, cs, pm = _ext_inputs(qn, n, 8, 64, mb, seed=k + 7)
+    v1, i1 = pq_adc_topk(jnp.asarray(luts), jnp.asarray(codes), k,
+                         bias=jnp.asarray(bias), row_bucket=jnp.asarray(rb),
+                         cscores=jnp.asarray(cs), probe_mask=jnp.asarray(pm),
+                         force_pallas=force_pallas)
+    v2, i2 = pq_adc_topk_ref(luts, codes, k, bias=bias, row_bucket=rb,
+                             cscores=cs, probe_mask=pm)
+    v1, i1 = np.asarray(v1), np.asarray(i1)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(i1, i2)
+    # the padding contract: id=-1 exactly where the value is -inf
+    assert np.array_equal(i1 == -1, ~np.isfinite(v1))
+
+
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_pq_ext_starved_query_pads(force_pallas):
+    """One query probes a single tiny bucket: its tail MUST come back as
+    (-inf, -1), never a masked row's id with a NEG score attached."""
+    qn, n, mb, k = 3, 400, 5, 12
+    luts, codes, bias, rb, cs, pm = _ext_inputs(qn, n, 8, 64, mb, seed=11)
+    rb[:] = np.where(np.arange(n) < 4, 0, 1 + (np.arange(n) % (mb - 1)))
+    pm[0, :] = False
+    pm[0, 0] = True                    # query 0 sees only rows 0..3
+    v, i = pq_adc_topk(jnp.asarray(luts), jnp.asarray(codes), k,
+                       bias=jnp.asarray(bias), row_bucket=jnp.asarray(rb),
+                       cscores=jnp.asarray(cs), probe_mask=jnp.asarray(pm),
+                       force_pallas=force_pallas)
+    v, i = np.asarray(v), np.asarray(i)
+    v2, i2 = pq_adc_topk_ref(luts, codes, k, bias=bias, row_bucket=rb,
+                             cscores=cs, probe_mask=pm)
+    np.testing.assert_allclose(v, v2, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(i, i2)
+    assert set(i[0, :4]) == {0, 1, 2, 3}
+    assert np.isinf(v[0, 4:]).all() and (i[0, 4:] == -1).all()
+
+
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_pq_ext_block_padding(force_pallas):
+    """Non-multiple code tables still pad cleanly with the extended args
+    (bias / row_bucket padded alongside the codes)."""
+    luts, codes, bias, rb, cs, pm = _ext_inputs(4, 777, 8, 64, 6, seed=2)
+    v1, i1 = pq_adc_topk(jnp.asarray(luts), jnp.asarray(codes), 10,
+                         bias=jnp.asarray(bias), row_bucket=jnp.asarray(rb),
+                         cscores=jnp.asarray(cs), probe_mask=jnp.asarray(pm),
+                         force_pallas=force_pallas)
+    v2, i2 = pq_adc_topk_ref(luts, codes, 10, bias=bias, row_bucket=rb,
+                             cscores=cs, probe_mask=pm)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(i1), i2)
+
+
+def test_pq_ext_requires_row_bucket():
+    luts, codes, bias, rb, cs, pm = _ext_inputs(2, 100, 4, 16, 4)
+    with pytest.raises(ValueError, match="row_bucket"):
+        pq_adc_topk(jnp.asarray(luts), jnp.asarray(codes), 5,
+                    cscores=jnp.asarray(cs))

@@ -391,3 +391,120 @@ def test_query_server_survives_replica_kill(single):
     assert counts.get("failovers", 0) >= 0   # surfaced through serving
     assert "replica_reads:s0r1" in counts
     c.close()
+
+
+# -- close(): hedge cancellation + bounded drain ------------------------------
+
+
+@pytest.mark.chaos
+def test_close_drains_running_hedges(single):
+    """A hedge leg still sleeping on a slowed replica when close() lands:
+    close cancels the queued legs, DRAINS the running one (bounded wait)
+    instead of abandoning it mid-read, and is idempotent.  No deadlock, no
+    teardown errors, and results before close are still byte-identical."""
+    import time as _time
+    q = _queries(single)
+    v_s, i_s = _knn_full(single, q)
+    c, faults = make_replicated()
+    # primary r0 sleeps past the hedge deadline: the backup answers, the
+    # r0 leg keeps running on a pool thread as the loser
+    faults.slow(0, 0, 0.4)
+    faults.slow(1, 0, 0.4)
+    t0 = _time.perf_counter()
+    v_c, i_c = _knn_full(c, q)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_c))
+    assert c.cluster_counters()["hedges_fired"] >= 1
+    t_close0 = _time.perf_counter()
+    c.close()
+    t_close = _time.perf_counter() - t_close0
+    # pre-fix close() returned without draining: the slowed loser legs were
+    # still reading retiring replicas after shutdown.  Post-fix, close
+    # blocks until the running legs finish -- but never past the bound.
+    total = _time.perf_counter() - t0
+    if total < 0.4:      # the losers could not have finished on their own
+        assert t_close > 0.0 and c._hedge_pool is None
+    assert t_close < 2.5
+    with c._hedge_lock:
+        assert all(fu.done() for fu in c._hedge_inflight)
+    c.close()            # idempotent: second close is a no-op
+    assert c.cluster_counters()["teardown_errors"] == 0
+
+
+@pytest.mark.chaos
+def test_hedge_after_close_is_inert(single):
+    """kNN issued after close(): the hedge pool is gone, so reads run
+    serially on the calling thread -- no deadlock, same results."""
+    q = _queries(single)
+    v_s, i_s = _knn_full(single, q)
+    c, _ = make_replicated()
+    c.close()
+    v_c, i_c = _knn_full(c, q)     # serial path: pool is None
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_c))
+    assert c.cluster_counters()["hedges_fired"] == 0
+
+
+# -- loser teardown: narrowed excepts + counted surprises ---------------------
+
+
+def test_loser_reaper_narrowed_exceptions(single):
+    """The reaper swallows expected close/cancel noise (CancelledError,
+    injected faults) silently, folds a ReplicaDown loser into failovers,
+    and counts anything unexpected into teardown_errors."""
+    from concurrent.futures import Future
+    from repro.cluster.replication import ReplicaError, _loser_reaper
+
+    c, _ = make_replicated(indexed=False)
+    base = c.cluster_counters()
+
+    fu = Future()
+    fu.cancel()                                  # close() cancelled it
+    _loser_reaper(c, 0, 1, None)(fu)
+    fu = Future()
+    fu.set_exception(ReplicaError("transient"))  # expected fault
+    _loser_reaper(c, 0, 1, None)(fu)
+    now = c.cluster_counters()
+    assert now["teardown_errors"] == base["teardown_errors"]
+    assert now["failovers"] == base["failovers"]
+
+    fu = Future()
+    fu.set_exception(ReplicaDown("gone"))        # late death -> failover
+    _loser_reaper(c, 0, 1, None)(fu)
+    assert not c.replica_sets[0].alive[1]
+    assert c.cluster_counters()["failovers"] == base["failovers"] + 1
+
+    fu = Future()
+    fu.set_exception(KeyError("boom"))           # a real teardown bug
+    _loser_reaper(c, 0, 1, None)(fu)
+    fu = Future()
+    fu.set_result("res")                         # on_loser itself explodes
+    _loser_reaper(c, 0, 1, lambda res: (_ for _ in ()).throw(
+        OSError("fd gone")))(fu)
+    assert c.cluster_counters()["teardown_errors"] == \
+        base["teardown_errors"] + 2
+    c.close()
+
+
+def test_close_quiet_counts_unexpected(single):
+    """_close_quiet: expected teardown noise passes silently; anything else
+    lands in the cluster counters surfaced by explain()."""
+    from repro.cluster.replication import ReplicaError, _close_quiet
+
+    c, _ = make_replicated(indexed=False)
+
+    class _Noisy:
+        def __init__(self, exc):
+            self.exc = exc
+
+        def close(self):
+            raise self.exc
+
+    base = c.cluster_counters()["teardown_errors"]
+    _close_quiet(_Noisy(RuntimeError("generator ignored GeneratorExit")), c)
+    _close_quiet(_Noisy(ReplicaError("fault mid-close")), c)
+    assert c.cluster_counters()["teardown_errors"] == base
+    _close_quiet(_Noisy(KeyError("boom")), c)
+    assert c.cluster_counters()["teardown_errors"] == base + 1
+    # surfaced through the coordinator's explain() counters
+    out = c.explain(SCAN_Q)
+    assert out["counters"]["teardown_errors"] == base + 1
+    c.close()
