@@ -1,0 +1,196 @@
+"""Proxy-first φ cascades: accuracy-targeted semantic predicates (PR 8).
+
+The perf claim: a cheap proxy scorer routes most rows of a ``~:`` predicate
+(reject below the calibrated band, accept above it) and only the uncertain
+middle escalates to the expensive extractor, so ``WITH ACCURACY 0.95``
+trades a bounded error budget for most of the φ wall time.  This bench
+runs the shared mixed workload (semantic probes interleaved with
+structured-only MATCHes, :func:`benchmarks.common.mixed_semantic_workload`)
+three ways against a seeded >=20 ms/batch extractor:
+
+* ``direct``   -- no accuracy clause: every candidate pays exact φ,
+* ``cascade``  -- ``WITH ACCURACY 0.95``: calibrated proxy routing,
+* ``exact1``   -- ``WITH ACCURACY 1.0``: must be byte-identical to direct
+  (asserted single-node AND at P=2 shards -- the clause is a pure opt-in).
+
+Gates (the bench FAILS, not just reports, when missed): cascade >= 2x
+faster than direct on the mixed workload, measured achieved accuracy >=
+the 0.95 target, escalation fraction reported.  Lands in
+``BENCH_cascade.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit, mixed_semantic_workload
+
+SUB = "slowface"
+TARGET = 0.95
+
+
+def slow_extractor(dim: int, latency_s: float):
+    from repro.core.aipm import feature_hash_extractor
+    inner = feature_hash_extractor(dim)
+
+    def fn(raws):
+        time.sleep(latency_s)
+        return inner(raws)
+
+    return fn
+
+
+def fast_proxy(dim: int = 16):
+    """The cheap tier: a smaller random projection of the same byte
+    histogram, no model-service round-trip."""
+    from repro.core.aipm import feature_hash_extractor
+    return feature_hash_extractor(dim=dim, seed=99)
+
+
+def _populate(db, payloads):
+    cn = getattr(db, "create_node", None) or db.graph.create_node
+    rng = np.random.default_rng(11)
+    for i, p in enumerate(payloads):
+        cn("Person", name=f"person_{i}", age=float(rng.integers(18, 80)),
+           photo=p)
+    return db
+
+
+def _payloads(n: int, n_identities: int, seed: int = 7):
+    """Identity duplicates (real semantic matches) among random photos."""
+    rng = np.random.default_rng(seed)
+    pool = [rng.bytes(256) for _ in range(n_identities)]
+    out = [pool[int(rng.integers(n_identities))] if i % 3 == 0
+           else rng.bytes(256) for i in range(n)]
+    return pool, out
+
+
+def build_db(n_persons: int, latency_s: float, workers: int):
+    from repro.configs.pandadb import AIPMConfig, PandaDBConfig
+    from repro.core import PandaDB
+
+    pool, payloads = _payloads(n_persons, n_identities=12)
+    cfg = PandaDBConfig(aipm=AIPMConfig(workers=workers, max_inflight=16))
+    db = PandaDB(cfg)
+    db.register_extractor(SUB, slow_extractor(64, latency_s), batch_size=64)
+    db.register_proxy(SUB, fast_proxy())
+    return _populate(db, payloads), pool, payloads
+
+
+def _run_workload(db, work, suffix: str, batch_rows: int, depth: int):
+    """Total wall time + per-semantic-query result sets and candidate
+    counts (proxy_scored on the cascade path, else structured-pass size)."""
+    rows_by_q = {}
+    candidates = {}
+    t0 = time.perf_counter()
+    for qi, (text, params, is_sem) in enumerate(work):
+        db.cache.clear()                 # cold regime: every query pays φ
+        session = db.session(batch_rows=batch_rows, prefetch_depth=depth)
+        cur = session.run(text + (suffix if is_sem else ""), **params)
+        rows = cur.fetchall()
+        if is_sem:
+            rows_by_q[qi] = {tuple(sorted(r.items())) for r in rows}
+            candidates[qi] = cur.context.proxy_scored or None
+        cur.close()
+    return time.perf_counter() - t0, rows_by_q, candidates
+
+
+def run(n_persons: int = 480, latency_s: float = 0.02,
+        batch_rows: int = 64, prefetch_depth: int = 6,
+        workers: int = 4, n_queries: int = 10) -> Dict[str, float]:
+    assert latency_s >= 0.02, "gate regime: seeded >=20ms extractor latency"
+    db, _, payloads = build_db(n_persons, latency_s, workers)
+    # probes drawn from the corpus itself: the distribution calibration
+    # pairs are sampled from (a probe population unlike the stored corpus
+    # would need its own calibration sample)
+    work = mixed_semantic_workload(payloads, n_queries=n_queries, seed=3,
+                                   semantic_frac=0.7, sub_key=SUB)
+    n_sem = sum(1 for _, _, s in work if s)
+
+    t0 = time.perf_counter()
+    thr = db.calibrate_cascade(SUB, "photo", seed=0)
+    t_calib = time.perf_counter() - t0
+    emit("cascade/calibrate", t_calib * 1e6,
+         f"band=[{thr.lo:.3f},{thr.hi:.3f}];"
+         f"exp_esc={thr.expected_escalation:.3f}")
+
+    t_direct, truth, _ = _run_workload(db, work, "", batch_rows,
+                                       prefetch_depth)
+    emit("cascade/direct", t_direct * 1e6, f"semantic_queries={n_sem}")
+    t_casc, got, cands = _run_workload(db, work, f" WITH ACCURACY {TARGET}",
+                                       batch_rows, prefetch_depth)
+    errors = sum(len(truth[q] ^ got[q]) for q in truth)
+    n_cand = sum(c for c in cands.values() if c)
+    achieved = 1.0 - errors / max(n_cand, 1)
+    esc = db.stats.escalation_fraction(SUB)
+    speedup = t_direct / max(t_casc, 1e-9)
+    emit("cascade/cascade", t_casc * 1e6,
+         f"speedup={speedup:.2f}x;accuracy={achieved:.4f};"
+         f"escalation={esc:.3f}")
+
+    # ACCURACY 1.0 is a byte-identical bypass -- single node and P=2
+    t_exact, exact_rows, _ = _run_workload(db, work, " WITH ACCURACY 1.0",
+                                           batch_rows, prefetch_depth)
+    parity_single = exact_rows == truth
+    from repro.cluster import ShardedPandaDB
+    _, _, payloads = build_db(n_persons, latency_s, workers)
+    cdb = ShardedPandaDB(n_shards=2)
+    cdb.register_extractor(SUB, slow_extractor(64, latency_s), batch_size=64)
+    cdb.register_proxy(SUB, fast_proxy())
+    _populate(cdb, payloads)
+    parity_cluster = True
+    for text, params, is_sem in work:
+        if not is_sem:
+            continue
+        plain = db.query(text, params)
+        parity_cluster &= cdb.query(text + " WITH ACCURACY 1.0",
+                                    params) == plain
+    emit("cascade/exact1_parity", t_exact * 1e6,
+         f"single={parity_single};cluster_p2={parity_cluster}")
+
+    payload = {
+        "n_persons": n_persons,
+        "latency_s": latency_s,
+        "batch_rows": batch_rows,
+        "prefetch_depth": prefetch_depth,
+        "aipm_workers": workers,
+        "n_queries": n_queries,
+        "n_semantic_queries": n_sem,
+        "accuracy_target": TARGET,
+        "t_calibrate_s": t_calib,
+        "t_direct_s": t_direct,
+        "t_cascade_s": t_casc,
+        "t_exact1_s": t_exact,
+        "speedup": speedup,
+        "achieved_accuracy": achieved,
+        "escalation_fraction": esc,
+        "band": [thr.lo, thr.hi],
+        "expected_escalation": thr.expected_escalation,
+        "accuracy1_parity_single": parity_single,
+        "accuracy1_parity_p2": parity_cluster,
+    }
+    out = Path(__file__).resolve().parent.parent / "BENCH_cascade.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    db.aipm.shutdown()
+    for s in range(cdb.n_shards):
+        cdb.read_db(s).aipm.shutdown()
+
+    if speedup < 2.0:
+        raise SystemExit(
+            f"cascade speedup {speedup:.2f}x < 2x over direct φ")
+    if achieved < TARGET:
+        raise SystemExit(
+            f"achieved accuracy {achieved:.4f} < target {TARGET}")
+    if not (parity_single and parity_cluster):
+        raise SystemExit("ACCURACY 1.0 diverged from the direct path")
+    return payload
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -42,3 +42,29 @@ def build_snb_db(n_persons: int = 120, seed: int = 0):
     build_snb(db, SNBConfig(n_persons=n_persons,
                             n_identities=max(2, n_persons // 3), seed=seed))
     return db
+
+
+def mixed_semantic_workload(payload_pool, n_queries: int = 10, seed: int = 0,
+                            semantic_frac: float = 0.7,
+                            sub_key: str = "face"):
+    """Seeded mixed query workload: semantic-predicate MATCHes (photo ~:
+    createFromSource probe) interleaved with structured-only MATCHes, the
+    shape both the async-AIPM and cascade benches measure.  Returns a list
+    of ``(text, params, is_semantic)`` triples; callers append suffixes
+    (``WITH ACCURACY a``) per variant without re-drawing the workload."""
+    rng = np.random.default_rng(seed)
+    work = []
+    for _ in range(n_queries):
+        if rng.random() < semantic_frac:
+            text = (f"MATCH (n:Person) WHERE n.age < $max_age AND "
+                    f"n.photo->{sub_key} ~: "
+                    f"createFromSource($src)->{sub_key} RETURN n.name")
+            params = {"max_age": float(rng.integers(45, 80)),
+                      "src": payload_pool[int(rng.integers(
+                          len(payload_pool)))]}
+            work.append((text, params, True))
+        else:
+            text = "MATCH (n:Person) WHERE n.age < $max_age RETURN n.name"
+            work.append((text, {"max_age": float(rng.integers(30, 70))},
+                         False))
+    return work

@@ -14,6 +14,7 @@ from benchmarks.common import header
 
 SUITES = {
     "async_aipm": "benchmarks.bench_async_aipm",
+    "cascade": "benchmarks.bench_cascade",
     "fig8": "benchmarks.bench_throughput",
     "fig9": "benchmarks.bench_vs_pipeline",
     "fig10": "benchmarks.bench_optimizer",

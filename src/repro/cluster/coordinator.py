@@ -46,6 +46,7 @@ from repro.core.cypherplus import (
     parse_query,
     query_params,
 )
+from repro.core.aipm import proxy_key
 from repro.core.database import PandaDB
 from repro.core.executor import (
     DEFAULT_BATCH_ROWS,
@@ -144,6 +145,13 @@ def _apply_op(db: PandaDB, op: str, args: tuple, kw: Dict[str, Any]) -> Any:
         return db.graph.create_relationship(*args, **kw)
     if op == "register_extractor":
         return db.register_extractor(*args, **kw)
+    if op == "register_proxy":
+        return db.register_proxy(*args, **kw)
+    if op == "set_calibration":
+        sub_key, es, ps, scores, labels = args
+        db.calibrator.set_curve(sub_key, es, ps, scores, labels)
+        db.stats.epoch += 1      # cascade path unlocked: re-optimize plans
+        return None
     if op == "index_insert":
         return db.index_insert(*args)
     if op == "set_index":
@@ -488,6 +496,74 @@ class ShardedPandaDB:
                                        batch_size)
         return serial
 
+    def register_proxy(self, sub_key: str, fn, batch_size: int = 256) -> int:
+        """Proxy tiers replicate like extractors: every shard scores its own
+        slice, so proxy serials (and hence cascade cache/calibration keys)
+        stay aligned cluster-wide."""
+        serial = 0
+        for s in self.active:
+            serial = self._shard_apply(s, "register_proxy", sub_key, fn,
+                                       batch_size)
+        return serial
+
+    def calibrate_cascade(self, sub_key: str, prop_key: str,
+                          sample: Optional[int] = None,
+                          pairs: Optional[int] = None,
+                          seed: Optional[int] = None):
+        """Cluster cascade calibration, the ``build_index`` pattern: gather
+        every shard's owned blob ids, sort globally (the exact single-node
+        sampling input, so the seeded sample -- and therefore the fitted
+        curve -- is bit-identical to ``PandaDB.calibrate_cascade`` on the
+        same data), extract both tiers on the owner shards, fit ONE curve,
+        and install it on every shard via the replayable ``set_calibration``
+        op.  Every shard then derives identical thresholds for any target."""
+        from repro.core.cascade import curve_from_vectors
+        from repro.core.executor import SIM_THRESHOLD
+
+        ccfg = self.cfg.cascade
+        sample = ccfg.calibration_sample if sample is None else sample
+        pairs = ccfg.calibration_pairs if pairs is None else pairs
+        seed = ccfg.calibration_seed if seed is None else seed
+        per_bids: Dict[int, np.ndarray] = {}
+        column_seen = False
+        for s in self.active:
+            try:
+                per_bids[s] = self.read_db(s).blob_ids_for(prop_key)
+                column_seen = True
+            except KeyError:
+                per_bids[s] = np.empty(0, np.int64)
+        if not column_seen:
+            raise KeyError(f"no property {prop_key!r}")
+        all_bids = np.sort(np.concatenate(list(per_bids.values())))
+        if all_bids.size == 0:
+            raise ValueError(f"no blobs under property {prop_key!r}")
+        rng = np.random.default_rng(seed)
+        if len(all_bids) > sample:
+            pick = rng.choice(len(all_bids), size=sample, replace=False)
+            all_bids = all_bids[np.sort(pick)]
+        exact: Dict[int, Any] = {}
+        prox: Dict[int, Any] = {}
+        for s in self.active:
+            sh = self.read_db(s)
+            mine = all_bids[np.isin(all_bids, per_bids[s])]
+            if mine.size == 0:
+                continue
+            for b, v in zip(mine, sh.phi_for_blobs(sub_key, mine)):
+                exact[int(b)] = v
+            for b, v in zip(mine, sh.proxy_for_blobs(sub_key, mine)):
+                prox[int(b)] = v
+        exact_vecs = np.stack([exact[int(b)] for b in all_bids])
+        prox_vecs = np.stack([prox[int(b)] for b in all_bids])
+        scores, labels = curve_from_vectors(exact_vecs, prox_vecs, pairs,
+                                            seed, SIM_THRESHOLD)
+        lead = self.lead_db()
+        es = lead.registry.serial(sub_key)
+        ps = lead.registry.serial(proxy_key(sub_key))
+        for s in self.active:
+            self._shard_apply(s, "set_calibration", sub_key, es, ps,
+                              scores, labels)
+        return lead.calibrator.thresholds(sub_key, es, ps, 0.95)
+
     # -- indexing ---------------------------------------------------------------
 
     def build_index(self, sub_key: str, prop_key: str,
@@ -616,6 +692,7 @@ class ShardedPandaDB:
             "plan_cache": self.plan_cache.stats(),
             "route_counts": dict(self.route_counts),
             "counters": self.cluster_counters(),
+            "cascade": self.lead_db()._explain_cascade(plan),
         }
 
     # -- internals --------------------------------------------------------------

@@ -106,6 +106,14 @@ class CostModelConfig:
     hedge_floor_s: float = 5e-3              # minimum deadline (cold start /
     #                                          very fast shards: don't hedge
     #                                          on scheduler noise)
+    # -- proxy-first φ cascades (ROADMAP item 3) --
+    default_proxy_scan_speed: float = 1e-5   # s/row prior for the cheap proxy
+    #                                          scorer (replaced by observed
+    #                                          throughput via record_proxy_scan)
+    default_escalation_frac: float = 0.35    # fraction of rows expected to
+    #                                          fall in [lo, hi] and escalate to
+    #                                          the exact φ before any cascade
+    #                                          has been observed
 
 
 @dataclass(frozen=True)
@@ -137,6 +145,17 @@ class ClusterConfig:
 
 
 @dataclass(frozen=True)
+class CascadeConfig:
+    """Proxy-first φ cascades: accuracy-targeted semantic predicates."""
+
+    calibration_sample: int = 128   # blobs sampled for threshold fitting
+    calibration_pairs: int = 1024   # (i, j) score/label pairs drawn from them
+    calibration_seed: int = 0       # deterministic sampling (shard parity)
+    min_curve_pairs: int = 16       # below this the calibrator refuses to fit
+    #                                 (escalate everything instead of guessing)
+
+
+@dataclass(frozen=True)
 class PandaDBConfig:
     index: VectorIndexConfig = field(default_factory=VectorIndexConfig)
     blob: BlobStoreConfig = field(default_factory=BlobStoreConfig)
@@ -144,6 +163,7 @@ class PandaDBConfig:
     aipm: AIPMConfig = field(default_factory=AIPMConfig)
     cost: CostModelConfig = field(default_factory=CostModelConfig)
     cluster: ClusterConfig = field(default_factory=ClusterConfig)
+    cascade: CascadeConfig = field(default_factory=CascadeConfig)
     # distributed layout (§VII-A): structure replicated, properties sharded
     replicate_graph_structure: bool = True
     shard_axis: str = "data"

@@ -49,6 +49,20 @@ class AIPMRequest:
     future: Future = dataclasses.field(default_factory=Future)
 
 
+PROXY_SUFFIX = "#proxy"
+
+
+def proxy_key(sub_key: str) -> str:
+    """Registry/cache key of the proxy tier attached to ``sub_key``.
+
+    The suffix cannot appear in a parsed sub-property name (``->`` names are
+    identifiers), so proxy entries can never alias exact entries anywhere the
+    (item, sub_key, serial) key scheme is used -- SemanticCache, InflightTable,
+    cost-model EWMAs all inherit the tiering for free.
+    """
+    return sub_key + PROXY_SUFFIX
+
+
 class ModelRegistry:
     """sub-property key -> extractor; serial bumps on model update."""
 
@@ -64,6 +78,25 @@ class ModelRegistry:
         self._extractors[sub_key] = spec
         return spec
 
+    def register_proxy(self, sub_key: str,
+                       fn: Callable[[List[np.ndarray]], np.ndarray],
+                       batch_size: int = 256) -> ExtractorSpec:
+        """Attach a cheap proxy scorer to an already-registered extractor.
+
+        The proxy is a normal extractor stored under :func:`proxy_key`, so the
+        whole AIPM pipeline (async submit, batching, dedup, caching, speed
+        stats) applies to it unchanged.  Its serial lineage is independent of
+        the base extractor's: re-registering either tier invalidates only that
+        tier's cache entries.
+        """
+        if sub_key.endswith(PROXY_SUFFIX):
+            raise ValueError(f"cannot attach a proxy to a proxy: {sub_key!r}")
+        if sub_key not in self._extractors:
+            raise KeyError(
+                f"no extractor registered for sub-property {sub_key!r}; "
+                "register the exact φ before attaching a proxy")
+        return self.register(proxy_key(sub_key), fn, batch_size=batch_size)
+
     def get(self, sub_key: str) -> ExtractorSpec:
         if sub_key not in self._extractors:
             raise KeyError(f"no extractor registered for sub-property {sub_key!r}")
@@ -71,6 +104,9 @@ class ModelRegistry:
 
     def serial(self, sub_key: str) -> int:
         return self.get(sub_key).serial
+
+    def has_proxy(self, sub_key: str) -> bool:
+        return proxy_key(sub_key) in self._extractors
 
     def known(self) -> List[str]:
         return list(self._extractors)
@@ -100,6 +136,7 @@ class AIPMService:
             maxsize=self.cfg.max_inflight)
         self.cancelled_requests = 0
         self._stats_lock = threading.Lock()   # spec counters, multi-worker
+        self._shutdown = False
         self._workers = [threading.Thread(target=self._run, daemon=True)
                          for _ in range(max(1, self.cfg.workers))]
         for w in self._workers:
@@ -148,6 +185,8 @@ class AIPMService:
 
     def submit(self, sub_key: str,
                items: List[Tuple[int, np.ndarray]]) -> Future:
+        if self._shutdown:
+            raise RuntimeError("AIPMService is shut down")
         req = AIPMRequest(sub_key, items)
         self._queue.put(req, timeout=self.cfg.timeout_ms / 1000)
         return req.future
@@ -161,9 +200,34 @@ class AIPMService:
         """Requests queued but not yet picked up (approximate)."""
         return self._queue.qsize()
 
+    def _drain_cancel(self) -> None:
+        """Cancel every request still sitting in the queue; never strand a
+        future.  Stray stop sentinels encountered mid-drain are dropped (the
+        workers they were meant for have already exited)."""
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if req is None:
+                continue
+            if req.future.cancel():
+                with self._stats_lock:
+                    self.cancelled_requests += 1
+            # a future already running can't be cancelled; its worker owns it
+
     def shutdown(self) -> None:
+        """Idempotent: stop accepting work, cancel whatever is still queued
+        (counted in ``cancelled_requests``), and join the workers."""
+        if self._shutdown:
+            return
+        self._shutdown = True
+        self._drain_cancel()
         for _ in self._workers:
             self._queue.put(None)
+        for w in self._workers:
+            w.join(timeout=self.cfg.timeout_ms / 1000)
+        self._drain_cancel()   # races: requests enqueued before the flag flip
 
 
 # ---------------------------------------------------------------------------

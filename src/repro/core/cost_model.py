@@ -38,6 +38,9 @@ class StatisticsService:
         self.epoch = 0
         self._graph_sig: Optional[tuple] = None
         self._extractor_serials: Dict[str, int] = {}
+        # observed escalation fraction per φ family (proxy cascades): what
+        # share of proxy-scored rows actually fell inside [lo, hi]
+        self._escalation: Dict[str, float] = {}
         # per-shard recent read latencies (replica sets): the hedge deadline
         # is a quantile over this window
         self._replica_lat: Dict[int, "deque[float]"] = {}
@@ -46,8 +49,12 @@ class StatisticsService:
 
     def op_key(self, op: lp.PlanOp) -> str:
         if isinstance(op, lp.SemanticFilter):
-            # one speed entry per sub-property extractor family
-            return f"semantic_filter:{_sem_key(op.predicate)}"
+            # one speed entry per sub-property extractor family; the cascade
+            # tier gets its own entry so proxy-routed chunks never pollute
+            # the direct-φ EWMA (their per-row times differ by ~1/esc_frac)
+            base = f"semantic_filter:{_sem_key(op.predicate)}"
+            acc = getattr(op, "accuracy", None)
+            return f"{base}:cascade" if acc is not None and acc < 1.0 else base
         return type(op).__name__.lower()
 
     def record(self, key: str, total_time: float, n_rows: int) -> None:
@@ -71,6 +78,12 @@ class StatisticsService:
         if key in self.speeds:
             return self.speeds[key]
         if isinstance(op, lp.SemanticFilter):
+            if key.endswith(":cascade"):
+                # unmeasured cascade tier: derive from the direct tier --
+                # every row pays the proxy, escalated rows also pay φ
+                sub = _sem_key(op.predicate)
+                return (self.proxy_scan_speed()
+                        + self.escalation_fraction(sub) * self.phi_speed(sub))
             return self.cfg.default_semantic_speed      # 0.3 s/row (paper §VI-B)
         if isinstance(op, (lp.Filter, lp.AllNodeScan, lp.NodeByLabelScan,
                            lp.Projection)):
@@ -207,6 +220,77 @@ class StatisticsService:
             if cost_fused <= min(cost_adc, cost_float):
                 return "fused"
         return "adc" if cost_adc <= cost_float else "float"
+
+    # -- proxy-first cascades (accuracy-targeted semantic predicates) ----------
+
+    _PROXY_KEY = "proxy_scan"
+
+    def record_proxy_scan(self, total_time: float, rows_scored: int) -> None:
+        """Observed proxy-scoring throughput (s per row scored, including the
+        proxy φ call and the similarity/routing arithmetic).  First truth
+        replaces the config prior and bumps the epoch -- same contract as the
+        index-scan speeds."""
+        self._record_scan(self._PROXY_KEY, total_time, rows_scored)
+
+    def proxy_scan_speed(self) -> float:
+        return self.speeds.get(self._PROXY_KEY,
+                               self.cfg.default_proxy_scan_speed)
+
+    def has_proxy_truth(self) -> bool:
+        return self._PROXY_KEY in self.speeds
+
+    def record_escalation(self, sub_key: str, escalated: int,
+                          scored: int) -> None:
+        """Observed escalation fraction for one cascade chunk, EWMA'd per φ
+        family.  The first real observation replaces the config prior and
+        bumps the epoch: the fraction scales the φ term of ``cascade_cost``,
+        so plans chosen under the prior deserve a re-optimize."""
+        if scored <= 0:
+            return
+        frac = escalated / scored
+        a = self.cfg.ewma_alpha
+        old = self._escalation.get(sub_key)
+        if old is None:
+            self.epoch += 1
+        self._escalation[sub_key] = (frac if old is None
+                                     else a * frac + (1 - a) * old)
+
+    def escalation_fraction(self, sub_key: str) -> float:
+        return self._escalation.get(sub_key, self.cfg.default_escalation_frac)
+
+    def phi_speed(self, sub_key: str) -> float:
+        """Direct-φ per-row speed for one family (observed or prior)."""
+        return self.speeds.get(f"semantic_filter:{sub_key}",
+                               self.cfg.default_semantic_speed)
+
+    def cascade_cost(self, n_rows: float, sub_key: str,
+                     escalation: Optional[float] = None) -> float:
+        """Estimated cost of cascading one semantic predicate over
+        ``n_rows``: every row is proxy-scored, the escalated fraction also
+        pays the exact φ.  ``escalation`` overrides the observed EWMA (the
+        calibrator's expected fraction for the query's specific target)."""
+        frac = (self.escalation_fraction(sub_key)
+                if escalation is None else float(escalation))
+        return n_rows * (self.proxy_scan_speed()
+                         + frac * self.phi_speed(sub_key))
+
+    def choose_semantic_path(self, sub_key: str, n_rows: float,
+                             calibrated: bool,
+                             escalation: Optional[float] = None) -> str:
+        """``"cascade"`` vs ``"direct"`` for one semantic predicate.  Only a
+        calibrated cascade is eligible (no thresholds -> everything would
+        escalate and the proxy pass is pure overhead); index pushdown is
+        decided upstream and already bypasses both paths."""
+        if not calibrated:
+            return "direct"
+        direct = n_rows * self.phi_speed(sub_key)
+        return ("cascade"
+                if self.cascade_cost(n_rows, sub_key, escalation) <= direct
+                else "direct")
+
+    def cascade_stats(self) -> Dict[str, float]:
+        """Observed escalation fractions per φ family (for ``explain()``)."""
+        return dict(self._escalation)
 
     # -- sharded serving (cluster scatter-gather vs routed plans) --------------
 

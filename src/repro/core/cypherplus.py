@@ -4,7 +4,8 @@ Supported grammar (the subset the paper's examples exercise, plus CREATE):
 
   query      := create_q | match_q
   create_q   := (CREATE pattern)+ [';']
-  match_q    := MATCH pattern (',' pattern)* [WHERE expr] RETURN items [LIMIT n]
+  match_q    := MATCH pattern (',' pattern)* [WHERE expr] RETURN items
+                [WITH ACCURACY a] [LIMIT n]       (clauses in either order)
   pattern    := node (rel node)*
   node       := '(' [var] [':' Label] [props] ')'
   rel        := '-[' [var] [':' TYPE] ']->' | '<-[' ... ']-' | '-[' ... ']-'
@@ -110,6 +111,11 @@ class MatchQuery:
     where: Optional[Any]
     returns: Tuple[ReturnItem, ...]
     limit: Optional[Union[int, "Param"]] = None
+    # WITH ACCURACY a: semantic predicates may cascade through a calibrated
+    # proxy as long as expected accuracy stays >= a.  None and 1.0 both mean
+    # "exact only" (the literal is part of the query text, hence of the plan
+    # skeleton -- cached plans never leak across targets).
+    accuracy: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,7 +218,8 @@ _TOKEN_RE = re.compile(r"""
 """, re.X)
 
 _KEYWORDS = {"MATCH", "WHERE", "RETURN", "CREATE", "AND", "OR", "NOT",
-             "LIMIT", "AS", "CONTAINS", "TRUE", "FALSE", "NULL"}
+             "LIMIT", "AS", "CONTAINS", "TRUE", "FALSE", "NULL",
+             "WITH", "ACCURACY"}
 
 
 @dataclasses.dataclass
@@ -298,11 +305,25 @@ class Parser:
         while self.accept("sym", ","):
             items.append(self.parse_return_item())
         limit = None
-        if self.accept("kw", "LIMIT"):
-            p = self.accept("param")
-            limit = Param(p.text[1:]) if p else int(self.expect("num").text)
+        accuracy = None
+        while True:
+            if limit is None and self.accept("kw", "LIMIT"):
+                p = self.accept("param")
+                limit = Param(p.text[1:]) if p else int(self.expect("num").text)
+            elif accuracy is None and self.accept("kw", "WITH"):
+                # accuracy is a literal, never a $param: the target is baked
+                # into the optimized plan (cascade vs direct is a *planning*
+                # decision), so late binding would defeat the skeleton key
+                self.expect("kw", "ACCURACY")
+                accuracy = float(self.expect("num").text)
+                if not 0.0 < accuracy <= 1.0:
+                    raise SyntaxError(
+                        f"ACCURACY must be in (0, 1], got {accuracy}")
+            else:
+                break
         self.accept("sym", ";")
-        return MatchQuery(tuple(patterns), where, tuple(items), limit)
+        return MatchQuery(tuple(patterns), where, tuple(items), limit,
+                          accuracy)
 
     # -- patterns ---------------------------------------------------------------
 

@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.configs.pandadb import PandaDBConfig, VectorIndexConfig
 from repro.core import logical_plan as lp
-from repro.core.aipm import AIPMService, ModelRegistry
+from repro.core.aipm import AIPMService, ModelRegistry, proxy_key
+from repro.core.cascade import CascadeCalibrator, curve_from_vectors
 from repro.core.cost_model import StatisticsService, estimate_plan_cost
 from repro.core.cypherplus import CreateQuery, MatchQuery, parse_query
 from repro.core.plan_optimizer import QueryGraph, naive_plan, optimize
@@ -36,6 +37,7 @@ class PandaDB:
         self.cache = SemanticCache(self.cfg.cache)
         self.inflight = InflightTable()   # cross-session φ request dedup
         self.stats = StatisticsService(self.cfg.cost)
+        self.calibrator = CascadeCalibrator(self.cfg.cascade.min_curve_pairs)
         self.indexes: Dict[str, IVFIndex] = {}
         self.scalar_indexes: Dict[str, Any] = {}   # NumericIndex | InvertedIndex
         self.plan_cache = PlanCache()
@@ -74,7 +76,58 @@ class PandaDB:
         sidx = self.scalar_indexes.get(sub_key)
         if sidx is not None and sidx.serial != spec.serial:
             del self.scalar_indexes[sub_key]
+        # curves pairing the old exact serial describe a retired model
+        # (thresholds() already keys on serials; drop frees the memory)
+        self.calibrator.drop(sub_key)
         return spec.serial
+
+    def register_proxy(self, sub_key: str,
+                       fn: Callable[[List[np.ndarray]], np.ndarray],
+                       batch_size: int = 256) -> int:
+        """Attach a cheap proxy scorer to ``sub_key``'s extractor (proxy-first
+        cascades).  Re-registering bumps the proxy tier's serial, invalidating
+        its cache entries and every calibration curve built against it; the
+        exact tier is untouched."""
+        spec = self.registry.register_proxy(sub_key, fn, batch_size)
+        self.cache.invalidate_serial(proxy_key(sub_key), spec.serial)
+        self.calibrator.drop(sub_key)
+        return spec.serial
+
+    def proxy_for_blobs(self, sub_key: str, blob_ids: np.ndarray) -> List[Any]:
+        """Proxy-tier φ for every blob id (cache -> batched AIPM), the
+        cheap sibling of :meth:`phi_for_blobs`."""
+        return self.phi_for_blobs(proxy_key(sub_key), blob_ids)
+
+    def calibrate_cascade(self, sub_key: str, prop_key: str,
+                          sample: Optional[int] = None,
+                          pairs: Optional[int] = None,
+                          seed: Optional[int] = None):
+        """Fit the cascade calibration curve for (``sub_key``'s extractor,
+        its proxy) from a seeded sample of ``prop_key`` blobs: extract both
+        tiers for the sampled blobs, draw random pairs, score each pair with
+        the proxy and label it with the exact φ at the executor's similarity
+        threshold.  Returns the fitted :class:`CascadeThresholds` preview at
+        a 0.95 target (the curve itself serves *any* target)."""
+        from repro.core.executor import SIM_THRESHOLD
+        ccfg = self.cfg.cascade
+        sample = ccfg.calibration_sample if sample is None else sample
+        pairs = ccfg.calibration_pairs if pairs is None else pairs
+        seed = ccfg.calibration_seed if seed is None else seed
+        blob_ids = self.blob_ids_for(prop_key)
+        rng = np.random.default_rng(seed)
+        if len(blob_ids) > sample:
+            pick = rng.choice(len(blob_ids), size=sample, replace=False)
+            blob_ids = blob_ids[np.sort(pick)]
+        exact = np.stack(self.phi_for_blobs(sub_key, blob_ids))
+        prox = np.stack(self.proxy_for_blobs(sub_key, blob_ids))
+        scores, labels = curve_from_vectors(exact, prox, pairs, seed,
+                                            SIM_THRESHOLD)
+        es = self.registry.serial(sub_key)
+        ps = self.registry.serial(proxy_key(sub_key))
+        self.calibrator.set_curve(sub_key, es, ps, scores, labels)
+        # calibration unlocks the cascade path: cached plans deserve a look
+        self.stats.epoch += 1
+        return self.calibrator.thresholds(sub_key, es, ps, 0.95)
 
     # -- indexing (paper §VI-B2) ------------------------------------------------
 
@@ -187,6 +240,51 @@ class PandaDB:
             "naive": naive.describe(),
             "naive_cost": estimate_plan_cost(naive, self.stats),
             "plan_cache": self.plan_cache.stats(),
+            "cascade": self._explain_cascade(opt),
+        }
+
+    def _explain_cascade(self, plan: lp.PlanOp) -> Dict[str, Any]:
+        """Per-semantic-predicate cascade routing report: which path the
+        optimizer would take at the plan's accuracy target, the calibrated
+        band, expected escalation + achieved-accuracy estimate, and the
+        observed (EWMA) escalation fractions / proxy throughput."""
+        from repro.core.cost_model import _sem_key
+        preds: Dict[str, Any] = {}
+        for op in lp.plan_ops(plan):
+            if not isinstance(op, lp.SemanticFilter):
+                continue
+            sub_key = _sem_key(op.predicate)
+            if not sub_key:
+                continue
+            acc = op.accuracy
+            entry: Dict[str, Any] = {
+                "accuracy_target": acc if acc is not None else 1.0,
+                "proxy": self.registry.has_proxy(sub_key),
+                "calibrated": False,
+                "path": "direct",
+            }
+            n_est = self.stats.estimate_rows(op.child)
+            if entry["proxy"] and acc is not None and acc < 1.0:
+                thr = self.calibrator.thresholds(
+                    sub_key, self.registry.serial(sub_key),
+                    self.registry.serial(proxy_key(sub_key)), acc)
+                if thr is not None:
+                    entry.update({
+                        "calibrated": True,
+                        "band": (thr.lo, thr.hi),
+                        "expected_escalation": thr.expected_escalation,
+                        "expected_accuracy": thr.expected_accuracy,
+                        "cascade_cost": self.stats.cascade_cost(
+                            n_est, sub_key, thr.expected_escalation),
+                        "path": self.stats.choose_semantic_path(
+                            sub_key, n_est, True, thr.expected_escalation),
+                    })
+            entry["direct_cost"] = n_est * self.stats.phi_speed(sub_key)
+            preds[sub_key] = entry
+        return {
+            "predicates": preds,
+            "observed_escalation": self.stats.cascade_stats(),
+            "proxy_scan_speed": self.stats.proxy_scan_speed(),
         }
 
     # -- CREATE ------------------------------------------------------------------

@@ -44,6 +44,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import logical_plan as lp
+from repro.core.cascade import route_scores
 from repro.core.cypherplus import (
     BoolOp,
     Compare,
@@ -88,6 +89,11 @@ class ExecutionContext:
         self.row_limit: Optional[int] = None   # root LIMIT (set by execute_iter)
         self.index_hits = 0
         self.scan_rows = 0          # rows emitted by leaf scans (LIMIT proof)
+        # proxy-first cascade counters (WITH ACCURACY a, a < 1)
+        self.proxy_scored = 0       # rows scored by a proxy tier
+        self.proxy_hits = 0         # rows the proxy answered (accept|reject)
+        self.escalated_rows = 0     # rows escalated to the exact φ
+        self.cascade_chunks = 0     # chunks routed through the cascade path
         self._pushdown_memo: Dict[int, Any] = {}   # plan id -> index matches
         self._func_memo: Dict[int, Any] = {}       # expr id -> blob tag
 
@@ -508,6 +514,168 @@ def _pushdown_covered(plan: lp.SemanticFilter,
     return covered
 
 
+class _CascadeSpec:
+    """Everything the cascade iterator needs, resolved once per filter."""
+
+    __slots__ = ("sub_key", "proxy_sub", "proxy_bases", "exact_bases",
+                 "score_expr", "negate", "thr")
+
+    def __init__(self, sub_key, proxy_sub, proxy_bases, exact_bases,
+                 score_expr, negate, thr):
+        self.sub_key = sub_key
+        self.proxy_sub = proxy_sub
+        self.proxy_bases = proxy_bases    # Prop-based SubProps, proxy tier
+        self.exact_bases = exact_bases    # Prop-based SubProps, exact tier
+        self.score_expr = score_expr      # Compare("::", proxy_l, proxy_r)
+        self.negate = negate              # predicate op is "!:"
+        self.thr = thr                    # CascadeThresholds for the target
+
+
+def _cascade_spec(plan: lp.SemanticFilter,
+                  ctx: ExecutionContext) -> Optional[_CascadeSpec]:
+    """Decide (once per filter, per execution) whether this SemanticFilter
+    runs as a proxy cascade.  Eligibility: a sub-unity accuracy target, a
+    boolean similarity predicate over one φ family, a registered proxy, a
+    calibration curve for the *current* serial pair, no index pushdown
+    (pushdown answers without any φ, beating both paths), and a cost-model
+    vote -- ``choose_semantic_path`` prices proxy + escalation·φ against
+    direct φ with the calibrator's expected escalation for this target."""
+    from repro.core.aipm import proxy_key
+
+    acc = getattr(plan, "accuracy", None)
+    if acc is None or acc >= 1.0:
+        return None
+    pred = plan.predicate
+    if not isinstance(pred, Compare) or pred.op not in ("~:", "!:"):
+        return None
+    left, right = pred.left, pred.right
+    if not (isinstance(left, SubProp) and isinstance(right, SubProp)):
+        return None
+    if left.sub_key != right.sub_key:
+        return None
+    sub_key = left.sub_key
+    if not getattr(ctx.registry, "has_proxy", lambda _k: False)(sub_key):
+        return None
+    calibrator = getattr(ctx.db, "calibrator", None)
+    if calibrator is None:
+        return None
+    if _pushdown_covered(plan, ctx):
+        return None
+    pk = proxy_key(sub_key)
+    thr = calibrator.thresholds(sub_key, ctx.registry.serial(sub_key),
+                                ctx.registry.serial(pk), acc)
+    if thr is None:
+        return None
+    n_est = ctx.stats.estimate_rows(plan.child)
+    if ctx.stats.choose_semantic_path(
+            sub_key, n_est, True, thr.expected_escalation) != "cascade":
+        return None
+    proxy_l = SubProp(left.base, pk)
+    proxy_r = SubProp(right.base, pk)
+    proxy_bases = [sp for sp in dict.fromkeys((proxy_l, proxy_r))
+                   if isinstance(sp.base, Prop)]
+    exact_bases = [sp for sp in dict.fromkeys((left, right))
+                   if isinstance(sp.base, Prop)]
+    return _CascadeSpec(sub_key, pk, proxy_bases, exact_bases,
+                        Compare("::", proxy_l, proxy_r),
+                        pred.op == "!:", thr)
+
+
+def _iter_cascade_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
+                         batch_rows: int, spec: _CascadeSpec
+                         ) -> Iterator[Bindings]:
+    """Two-stage streaming SemanticFilter (WITH ACCURACY a, a < 1).
+
+    Stage 1 rides the existing prefetch machinery: *proxy* φ for up to
+    ``depth`` upcoming chunks is dispatched to the AIPM pool while earlier
+    chunks are being scored.  Routing against the calibrated [lo, hi] band
+    answers most rows outright; the uncertain remainder flows into a bounded
+    *escalation* window whose exact-φ batches are dispatched ahead of their
+    consumption point too -- so proxy scoring of chunk k+1 overlaps exact
+    extraction of chunk k.  Both tiers share the in-flight dedup table and
+    the semantic cache (tiered by the ``#proxy`` key suffix), chunks are
+    yielded strictly in child order, and closing the generator (``LIMIT``
+    early exit, cursor close) cancels every batch -- proxy or exact -- no
+    worker has picked up yet."""
+    depth = max(1, ctx.prefetch_depth)
+    ctx.prefetch_depth_used = depth
+    lo, hi = spec.thr.lo, spec.thr.hi
+    child_it = _iter_bindings(plan.child, ctx, batch_rows)
+    # (chunk, proxy handles) awaiting scoring
+    scoring: "deque[Tuple[Bindings, List[PhiBatch]]]" = deque()
+    # (chunk, answer mask, escalate mask, sub-chunk, exact handles, t_proxy)
+    escalating: "deque[Tuple[Bindings, np.ndarray, np.ndarray, Optional[Bindings], List[PhiBatch], float]]" = deque()
+    exhausted = False
+    try:
+        while True:
+            while not exhausted and len(scoring) < depth:
+                chunk = next(child_it, None)
+                if chunk is None:
+                    exhausted = True
+                    break
+                handles = []
+                for sp in spec.proxy_bases:
+                    h = _begin_extraction(ctx, spec.proxy_sub,
+                                          _blob_ids_for(sp.base, chunk, ctx))
+                    if h is not None:
+                        handles.append(h)
+                scoring.append((chunk, handles))
+            while scoring and len(escalating) < depth:
+                chunk, handles = scoring.popleft()
+                t0 = time.perf_counter()
+                for h in handles:
+                    h.join()
+                scores = np.asarray(
+                    eval_expr(spec.score_expr, chunk, ctx), np.float64)
+                accept, reject, esc = route_scores(scores, lo, hi)
+                if spec.negate:
+                    accept, reject = reject, accept
+                t_proxy = time.perf_counter() - t0
+                n = scores.size
+                ctx.stats.record_proxy_scan(t_proxy, n)
+                ctx.stats.record_escalation(spec.sub_key, int(esc.sum()), n)
+                ctx.proxy_scored += n
+                ctx.proxy_hits += n - int(esc.sum())
+                ctx.escalated_rows += int(esc.sum())
+                sub = None
+                ehandles: List[PhiBatch] = []
+                if esc.any():
+                    sub = {k: v[esc] for k, v in chunk.items()}
+                    for sp in spec.exact_bases:
+                        h = _begin_extraction(
+                            ctx, spec.sub_key,
+                            _blob_ids_for(sp.base, sub, ctx))
+                        if h is not None:
+                            ehandles.append(h)
+                escalating.append((chunk, accept, esc, sub, ehandles,
+                                   t_proxy))
+            if not escalating:
+                return
+            chunk, accept, esc, sub, ehandles, t_proxy = escalating.popleft()
+            t0 = time.perf_counter()
+            for h in ehandles:
+                h.join()
+            mask = accept.copy()
+            if sub is not None:
+                exact = np.asarray(
+                    eval_expr(plan.predicate, sub, ctx), bool)
+                mask[esc] = exact
+            ctx.cascade_chunks += 1
+            _record(ctx, plan, time.perf_counter() - t0 + t_proxy,
+                    max(len(mask), 1))
+            out = {k: v[mask] for k, v in chunk.items()}
+            if _rows(out):
+                yield out
+    finally:
+        for _chunk, handles in scoring:
+            for h in handles:
+                h.cancel()
+        for _chunk, _a, _e, _sub, ehandles, _t in escalating:
+            for h in ehandles:
+                h.cancel()
+        child_it.close()
+
+
 def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
                           batch_rows: int) -> Iterator[Bindings]:
     """SemanticFilter stage of the streaming driver: φ for up to
@@ -519,6 +687,10 @@ def _iter_semantic_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
     order, so results are byte-identical to the synchronous path.  Closing
     the generator (``LIMIT`` early exit, cursor close) cancels every φ batch
     not yet picked up by a worker."""
+    spec = _cascade_spec(plan, ctx)
+    if spec is not None:
+        yield from _iter_cascade_filter(plan, ctx, batch_rows, spec)
+        return
     depth = ctx.prefetch_depth
     if ctx.prefetch_auto and depth > 0:
         # adaptive window: observed φ wait vs structured-produce time,

@@ -90,10 +90,17 @@ class Filter(PlanOp):
 @dataclasses.dataclass(frozen=True)
 class SemanticFilter(PlanOp):
     """Unstructured filter: needs sub-property extraction (AI model / cache /
-    vector index).  The expensive one the optimizer pushes LATE."""
+    vector index).  The expensive one the optimizer pushes LATE.
+
+    ``accuracy`` < 1.0 permits the executor to route the predicate through a
+    calibrated proxy cascade (WITH ACCURACY clause); None means exact-only.
+    It is part of the frozen plan identity, so plans cached for one target
+    can never serve another.
+    """
     child: PlanOp
     predicate: Any
     pred_id: int
+    accuracy: Optional[float] = None
 
     def children(self):
         return (self.child,)
@@ -107,6 +114,8 @@ class SemanticFilter(PlanOp):
         return self.child.applied | {self.pred_id}
 
     def _describe_args(self):
+        if self.accuracy is not None and self.accuracy < 1.0:
+            return f"[pred#{self.pred_id} acc>={self.accuracy}]"
         return f"[pred#{self.pred_id}]"
 
 

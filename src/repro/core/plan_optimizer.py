@@ -105,12 +105,18 @@ def _leaf_plan(np_: NodePattern) -> lp.PlanOp:
     return lp.AllNodeScan(np_.var)
 
 
-def _filter_op(child: lp.PlanOp, pred: Any, pred_id: int) -> lp.PlanOp:
-    cls = lp.SemanticFilter if is_semantic(pred) else lp.Filter
-    return cls(child, pred, pred_id)
+def _filter_op(child: lp.PlanOp, pred: Any, pred_id: int,
+               accuracy: Optional[float] = None) -> lp.PlanOp:
+    if is_semantic(pred):
+        # accuracy 1.0 is exact-only: normalize to None so the plan (and its
+        # cost-model op_key) is structurally identical to the no-clause query
+        acc = accuracy if accuracy is not None and accuracy < 1.0 else None
+        return lp.SemanticFilter(child, pred, pred_id, acc)
+    return lp.Filter(child, pred, pred_id)
 
 
-def optimize(qg: QueryGraph, stats: StatisticsService) -> lp.PlanOp:
+def optimize(qg: QueryGraph, stats: StatisticsService,
+             accuracy: Optional[float] = None) -> lp.PlanOp:
     """Algorithm 1: OptimizationFunc(Q, S)."""
     # PlanTable
     table: List[lp.PlanOp] = [_leaf_plan(np_) for np_ in qg.nodes.values()]
@@ -150,7 +156,7 @@ def optimize(qg: QueryGraph, stats: StatisticsService) -> lp.PlanOp:
             vars_needed = expr_vars(pred)
             for i, p1 in enumerate(table):
                 if vars_needed <= p1.vars:
-                    op = _filter_op(p1, pred, pid)
+                    op = _filter_op(p1, pred, pid, accuracy)
                     cand.append((estimate_cost(op, stats), "filter",
                                  (i, pid, op)))
         return cand
@@ -191,7 +197,7 @@ def optimize(qg: QueryGraph, stats: StatisticsService) -> lp.PlanOp:
     plan = table[0]
     # any leftover predicates (vars now all covered)
     for pid, pred in list(unapplied.items()):
-        plan = _filter_op(plan, pred, pid)
+        plan = _filter_op(plan, pred, pid, accuracy)
         del unapplied[pid]
     return plan
 
@@ -204,7 +210,8 @@ def _is_bare_scan(p: lp.PlanOp) -> bool:
     return isinstance(p, (lp.AllNodeScan, lp.NodeByLabelScan))
 
 
-def naive_plan(qg: QueryGraph, stats: StatisticsService) -> lp.PlanOp:
+def naive_plan(qg: QueryGraph, stats: StatisticsService,
+               accuracy: Optional[float] = None) -> lp.PlanOp:
     """The 'Not optimized' baseline (paper §VII-F): semantic filters treated
     as ordinary structured filters -- i.e. applied as early as possible."""
     table: List[lp.PlanOp] = [_leaf_plan(np_) for np_ in qg.nodes.values()]
@@ -218,7 +225,7 @@ def naive_plan(qg: QueryGraph, stats: StatisticsService) -> lp.PlanOp:
                                     key=lambda kv: not is_semantic(kv[1])):
                 for i, p in enumerate(table):
                     if expr_vars(pred) <= p.vars:
-                        table[i] = _filter_op(p, pred, pid)
+                        table[i] = _filter_op(p, pred, pid, accuracy)
                         del unapplied[pid]
                         changed = True
                         break
@@ -255,5 +262,5 @@ def naive_plan(qg: QueryGraph, stats: StatisticsService) -> lp.PlanOp:
         table = table[2:] + [lp.Join(a, b)]
     plan = table[0]
     for pid, pred in list(unapplied.items()):
-        plan = _filter_op(plan, pred, pid)
+        plan = _filter_op(plan, pred, pid, accuracy)
     return plan

@@ -637,7 +637,9 @@ def plan_query(db, q: MatchQuery, optimized: bool) -> lp.PlanOp:
     if not isinstance(q, MatchQuery):
         raise TypeError("can only plan MATCH queries")
     qg = QueryGraph.from_query(q)
-    plan = optimize(qg, db.stats) if optimized else naive_plan(qg, db.stats)
+    acc = getattr(q, "accuracy", None)
+    plan = (optimize(qg, db.stats, acc) if optimized
+            else naive_plan(qg, db.stats, acc))
     plan = lp.Projection(plan, q.returns)
     if q.limit is not None:
         plan = lp.Limit(plan, q.limit)

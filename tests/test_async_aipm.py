@@ -403,3 +403,41 @@ def test_suggest_prefetch_depth_unit():
     stats.speeds["semantic_filter:animal"] = \
         stats.cfg.default_structured_speed / 2              # cheap φ -> 1
     assert stats.suggest_prefetch_depth(op, cap) == 1
+
+
+# ---------------------------------------------------------------------------
+# shutdown (PR 8 satellite): idempotent, cancels whatever is still queued
+# ---------------------------------------------------------------------------
+
+
+def test_shutdown_idempotent_and_cancels_queued():
+    """Shutdown must (a) cancel queued-but-unstarted requests into
+    ``cancelled_requests``, (b) refuse new submits, and (c) be safe to call
+    twice -- a second call must not hang on an empty worker pool or
+    double-count cancellations."""
+    gate = Gate()
+    r = ModelRegistry()
+    spec = r.register("face", gate.wrap(feature_hash_extractor(8)))
+    svc = AIPMService(r, AIPMConfig(max_inflight=8, workers=1))
+    try:
+        f1 = svc.submit("face", [(0, np.zeros(8, np.uint8))])
+        assert gate.entered.wait(5)          # worker busy on f1
+        queued = [svc.submit("face", [(i, np.zeros(8, np.uint8))])
+                  for i in (1, 2, 3)]
+        before = svc.cancelled_requests
+        t = threading.Thread(target=svc.shutdown)
+        t.start()
+        # queued work is cancelled without ever running φ
+        assert wait_until(lambda: all(f.cancelled() for f in queued))
+        assert svc.cancelled_requests == before + len(queued)
+        gate.release.set()                   # let the in-flight batch finish
+        t.join(5)
+        assert not t.is_alive()
+        assert set(f1.result(5)) == {0}      # in-flight work still completes
+        assert spec.calls == 1               # φ never ran for cancelled ones
+        with pytest.raises(RuntimeError):
+            svc.submit("face", [(9, np.zeros(8, np.uint8))])
+        svc.shutdown()                       # second call: no-op, no hang
+        assert svc.cancelled_requests == before + len(queued)
+    finally:
+        gate.release.set()

@@ -95,3 +95,98 @@ def test_db_register_invalidates(figure1_db):
     assert db.cache.get(12345, "face", new_serial - 1) is None
     # restore original for other tests
     db.register_extractor("face", fhe(64))
+
+
+# ---------------------------------------------------------------------------
+# cascade tier keys (PR 8 satellite): proxy and exact must never alias
+# ---------------------------------------------------------------------------
+
+
+def test_proxy_tier_cache_keys_never_alias():
+    """The proxy tier lives under ``sub_key + '#proxy'``: across any
+    combination of serial bumps on either tier, a proxy value must never be
+    read back as an exact value (or vice versa)."""
+    from repro.core.aipm import PROXY_SUFFIX, proxy_key
+    c = SemanticCache()
+    for serial in (1, 2, 3):                 # model re-registrations
+        c.put(7, "face", serial, f"exact-s{serial}")
+        c.put(7, proxy_key("face"), serial, f"proxy-s{serial}")
+    for serial in (1, 2, 3):
+        assert c.get(7, "face", serial) == f"exact-s{serial}"
+        assert c.get(7, proxy_key("face"), serial) == f"proxy-s{serial}"
+    # the suffix cannot appear in a parsed sub-property identifier, so no
+    # exact key can ever spell a proxy key
+    assert "#" in PROXY_SUFFIX
+    assert proxy_key("face") != "face"
+    assert proxy_key("face#x") != proxy_key("face") + "x"
+
+
+def test_inflight_tier_keys_never_alias():
+    from repro.core.aipm import proxy_key
+    from repro.core.semantic_cache import InflightTable
+    t = InflightTable()
+    owned, borrowed = t.claim([(7, "face", 1), (7, proxy_key("face"), 1)])
+    assert len(owned) == 2 and not borrowed   # distinct keys: both owned
+    # a second claimant of the proxy tier borrows the proxy future only
+    owned2, borrowed2 = t.claim([(7, proxy_key("face"), 1)])
+    assert not owned2 and list(borrowed2) == [(7, proxy_key("face"), 1)]
+    t.resolve((7, "face", 1), "exact")
+    t.resolve((7, proxy_key("face"), 1), "proxy")
+    assert owned[0][1].result(1) == "exact"
+    assert owned[1][1].result(1) == "proxy"
+    assert t.size() == 0
+
+
+def test_peek_thread_safe_under_resolve_discard():
+    """Hammer ``SemanticCache.peek`` while other threads claim/resolve/
+    discard inflight futures and (in)validate the cache: no exception, no
+    torn read (peek returns either None or a fully-written value)."""
+    import threading
+    from repro.core.semantic_cache import InflightTable
+    c = SemanticCache(CacheConfig(capacity_items=64))
+    t = InflightTable()
+    stop = threading.Event()
+    errors = []
+
+    def writer(tier):
+        try:
+            i = 0
+            while not stop.is_set():
+                key = (i % 32, tier, 1)
+                owned, _ = t.claim([key])
+                for k, fut in owned:
+                    if i % 3 == 0:
+                        t.discard(k)
+                    else:
+                        t.resolve(k, (tier, i))
+                        c.put(k[0], tier, 1, (tier, i))
+                if i % 7 == 0:
+                    c.invalidate_serial(tier, 2)
+                i += 1
+        except Exception as e:          # pragma: no cover - failure path
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                for i in range(32):
+                    for tier in ("face", "face#proxy"):
+                        v = c.peek(i, tier, 1)
+                        assert v is None or v[0] == tier
+                t.size()
+        except Exception as e:          # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=("face",)),
+               threading.Thread(target=writer, args=("face#proxy",)),
+               threading.Thread(target=reader),
+               threading.Thread(target=reader)]
+    for th in threads:
+        th.start()
+    time.sleep(0.5)
+    stop.set()
+    for th in threads:
+        th.join(5)
+        assert not th.is_alive()
+    assert not errors, errors
+    assert t.size() == 0

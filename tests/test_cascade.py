@@ -1,0 +1,438 @@
+"""Proxy-first φ cascades (PR 8): calibration, routing, executor, parity.
+
+Contracts pinned here:
+
+* ``route_scores`` is a total partition of the score axis; NaN escalates.
+* ``CascadeCalibrator`` fits the widest band whose sample error stays
+  within ``floor((1 - target) * n)``, with midpoint thresholds that
+  reproduce the fitted partition exactly (ties included).
+* ``WITH ACCURACY a`` parses in either order around ``LIMIT``; ``a`` is a
+  literal in (0, 1]; ``ACCURACY 1.0`` produces a byte-identical plan and
+  byte-identical results to the clause-free query (single node AND P=2
+  shards) -- the cascade is a pure opt-in.
+* The cascade executor meets the accuracy target against direct-φ ground
+  truth and reports escalation through the cost model and ``explain()``.
+* Cluster calibration (gather -> one curve -> install everywhere) yields
+  bit-identical thresholds to single-node calibration on the same data.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import CostModelConfig, PandaDBConfig
+from repro.core import PandaDB
+from repro.core.aipm import (
+    ModelRegistry,
+    PROXY_SUFFIX,
+    feature_hash_extractor,
+    proxy_key,
+)
+from repro.core.cascade import (
+    CascadeCalibrator,
+    curve_from_vectors,
+    route_scores,
+)
+from repro.core.cost_model import StatisticsService
+from repro.core.cypherplus import parse_query as parse
+from repro.cluster import ShardedPandaDB
+
+DIM = 32
+N_NODES = 96
+
+
+def _payloads(n=N_NODES, seed=3, dup_every=6):
+    rng = np.random.default_rng(seed)
+    base = rng.bytes(256)
+    return base, [base if dup_every and i % dup_every == 0 else rng.bytes(256)
+                  for i in range(n)]
+
+
+BASE, PAYLOADS = _payloads()
+
+SEM_Q = ("MATCH (p:Person) WHERE p.photo->face ~: "
+         "createFromSource($src)->face RETURN p.name")
+
+
+def noisy_proxy(dim=4):
+    """A genuinely weaker scorer: a different random projection of the same
+    byte histogram.  Correlated with the exact φ but not a clone, so the
+    calibrator must keep a real escalation band."""
+    return feature_hash_extractor(dim=dim, seed=99)
+
+
+def _populate(db, payloads=PAYLOADS, proxy=True):
+    db.register_extractor("face", feature_hash_extractor(dim=DIM))
+    if proxy:
+        db.register_proxy("face", noisy_proxy())
+    cn = db.create_node if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_node
+    for i, p in enumerate(payloads):
+        cn("Person", name=f"n{i}", rank=float(i % 7), photo=p)
+    return db
+
+
+@pytest.fixture()
+def db():
+    d = _populate(PandaDB())
+    d.calibrate_cascade("face", "photo", sample=90, pairs=700, seed=5)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_route_scores_total_partition():
+    s = np.array([0.1, 0.4, 0.5, 0.6, 0.9, np.nan])
+    acc, rej, esc = route_scores(s, 0.45, 0.55)
+    assert (acc.astype(int) + rej.astype(int) + esc.astype(int) == 1).all()
+    assert rej.tolist() == [True, True, False, False, False, False]
+    assert acc.tolist() == [False, False, False, True, True, False]
+    assert esc[-1]                       # NaN -> exact φ, never a guess
+    assert esc[2]                        # boundary score escalates (< / >)
+
+
+def test_route_scores_monotone_in_band_seeded():
+    """Deterministic counterpart of the hypothesis property: widening the
+    band only ever moves items into escalation."""
+    rng = np.random.default_rng(0)
+    s = rng.uniform(-1, 1, 500)
+    lo, hi = -0.2, 0.3
+    acc1, rej1, _ = route_scores(s, lo, hi)
+    for lo2, hi2 in [(-0.4, 0.3), (-0.2, 0.6), (-0.9, 0.9)]:
+        acc2, rej2, _ = route_scores(s, lo2, hi2)
+        assert not (acc2 & ~acc1).any()  # no new accepts
+        assert not (rej2 & ~rej1).any()  # no new rejects
+        assert not (acc2 & rej1).any() and not (rej2 & acc1).any()  # no flips
+
+
+# ---------------------------------------------------------------------------
+# calibrator
+# ---------------------------------------------------------------------------
+
+
+def _rowset(rows):
+    return {tuple(sorted(r.items())) for r in rows}
+
+
+def _routing_errors(s, y, thr):
+    acc, rej, _ = route_scores(s, thr.lo, thr.hi)
+    return int((rej & y).sum() + (acc & ~y).sum())
+
+
+def test_calibrator_meets_budget_and_minimizes_escalation():
+    rng = np.random.default_rng(1)
+    n = 2000
+    y = rng.random(n) < 0.3
+    # proxy score = label signal + noise: separable tails, murky middle
+    s = y * 1.0 + rng.normal(0, 0.35, n)
+    cal = CascadeCalibrator()
+    cal.set_curve("face", 1, 1, s, y)
+    for target in (0.90, 0.95, 0.99):
+        thr = cal.thresholds("face", 1, 1, target)
+        budget = int(np.floor((1 - target) * n))
+        assert _routing_errors(s, y, thr) <= budget
+        assert thr.expected_accuracy >= target
+        assert 0.0 <= thr.expected_escalation <= 1.0
+    # tighter target => wider band => at least as much escalation
+    e90 = cal.thresholds("face", 1, 1, 0.90).expected_escalation
+    e99 = cal.thresholds("face", 1, 1, 0.99).expected_escalation
+    assert e99 >= e90
+
+
+def test_calibrator_target_one_escalates_everything():
+    rng = np.random.default_rng(2)
+    y = rng.random(200) < 0.5
+    s = np.where(y, 0.6, 0.4) + rng.normal(0, 0.2, 200)  # overlapping
+    cal = CascadeCalibrator()
+    cal.set_curve("face", 1, 1, s, y)
+    thr = cal.thresholds("face", 1, 1, 1.0)
+    # zero error budget: only perfectly-pure prefix/suffix may route
+    assert _routing_errors(s, y, thr) == 0
+
+
+def test_calibrator_thresholds_reproduce_fit_under_ties():
+    # heavy ties: cuts must fall between distinct values only
+    s = np.repeat([0.1, 0.5, 0.9], 40)
+    y = np.concatenate([np.zeros(40, bool), np.zeros(40, bool),
+                        np.ones(40, bool)])
+    y[0] = True                          # one error in the low block
+    cal = CascadeCalibrator()
+    cal.set_curve("k", 1, 1, s, y)
+    thr = cal.thresholds("k", 1, 1, 0.95)
+    acc, rej, esc = route_scores(s, thr.lo, thr.hi)
+    # a tie group is routed atomically
+    for v in (0.1, 0.5, 0.9):
+        grp = s == v
+        assert acc[grp].all() or rej[grp].all() or esc[grp].all()
+    assert _routing_errors(s, y, thr) <= int(0.05 * s.size)
+
+
+def test_calibrator_gates_and_invalidation():
+    cal = CascadeCalibrator(min_curve_pairs=16)
+    assert cal.thresholds("face", 1, 1, 0.95) is None       # no curve
+    cal.set_curve("face", 1, 1, np.arange(8) / 8.0,
+                  np.arange(8) % 2 == 0)
+    assert cal.thresholds("face", 1, 1, 0.95) is None       # too small
+    cal.set_curve("face", 1, 1, np.arange(32) / 32.0, np.arange(32) >= 16)
+    assert cal.thresholds("face", 1, 1, 0.95) is not None
+    assert cal.thresholds("face", 2, 1, 0.95) is None       # serial-keyed
+    assert cal.drop("face") == 1
+    assert cal.thresholds("face", 1, 1, 0.95) is None       # dropped
+
+
+def test_curve_from_vectors_deterministic():
+    rng = np.random.default_rng(4)
+    ex = rng.standard_normal((40, 16)).astype(np.float32)
+    px = rng.standard_normal((40, 4)).astype(np.float32)
+    a = curve_from_vectors(ex, px, 300, seed=7, sim_threshold=0.8)
+    b = curve_from_vectors(ex, px, 300, seed=7, sim_threshold=0.8)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+# ---------------------------------------------------------------------------
+# proxy registry tier
+# ---------------------------------------------------------------------------
+
+
+def test_register_proxy_tier_rules():
+    r = ModelRegistry()
+    with pytest.raises(KeyError):
+        r.register_proxy("face", noisy_proxy())              # no base model
+    r.register("face", feature_hash_extractor(dim=DIM))
+    r.register_proxy("face", noisy_proxy())
+    assert r.has_proxy("face")
+    assert r.get(proxy_key("face")).serial >= 1
+    with pytest.raises(ValueError):
+        r.register_proxy(proxy_key("face"), noisy_proxy())   # proxy-of-proxy
+    assert proxy_key("face") == "face" + PROXY_SUFFIX
+
+
+# ---------------------------------------------------------------------------
+# parser / plan
+# ---------------------------------------------------------------------------
+
+
+def test_parse_with_accuracy_clause_orders():
+    q1 = parse("MATCH (p:Person) RETURN p.name WITH ACCURACY 0.9 LIMIT 3")
+    q2 = parse("MATCH (p:Person) RETURN p.name LIMIT 3 WITH ACCURACY 0.9")
+    assert q1.accuracy == q2.accuracy == 0.9
+    assert q1.limit == q2.limit == 3
+    assert parse("MATCH (p:Person) RETURN p.name").accuracy is None
+    with pytest.raises(SyntaxError):
+        parse("MATCH (p:Person) RETURN p.name WITH ACCURACY 0.0")
+    with pytest.raises(SyntaxError):
+        parse("MATCH (p:Person) RETURN p.name WITH ACCURACY 1.5")
+    with pytest.raises(SyntaxError):
+        parse("MATCH (p:Person) RETURN p WITH ACCURACY $a")  # literal only
+
+
+def test_accuracy_one_is_plan_identical(db):
+    assert db.plan(SEM_Q) == db.plan(SEM_Q + " WITH ACCURACY 1.0")
+    assert db.plan(SEM_Q) != db.plan(SEM_Q + " WITH ACCURACY 0.9")
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_meets_accuracy_target(db):
+    truth = _rowset(db.query(SEM_Q, {"src": BASE}))
+    got = _rowset(db.query(SEM_Q + " WITH ACCURACY 0.95",
+                       {"src": BASE}))
+    n_candidates = N_NODES
+    errors = len(truth ^ got)
+    assert errors <= np.ceil(0.05 * n_candidates)
+    assert db.stats.escalation_fraction("face") < 1.0
+
+
+def test_cascade_counters_and_escalation_recorded(db):
+    s = db.session()
+    cur = s.run(SEM_Q + " WITH ACCURACY 0.95", {"src": BASE})
+    cur.fetchall()
+    ctx = cur.context
+    assert ctx.proxy_scored == N_NODES
+    assert ctx.cascade_chunks >= 1
+    assert ctx.escalated_rows == ctx.proxy_scored - ctx.proxy_hits
+    assert 0 <= ctx.escalated_rows < ctx.proxy_scored
+    assert db.stats.has_proxy_truth()
+    cur.close()
+
+
+def test_cascade_without_calibration_runs_direct():
+    d = _populate(PandaDB())          # proxy registered, never calibrated
+    got = d.query(SEM_Q + " WITH ACCURACY 0.95", {"src": BASE})
+    assert got == d.query(SEM_Q, {"src": BASE})
+    s = d.session()
+    cur = s.run(SEM_Q + " WITH ACCURACY 0.95", {"src": BASE})
+    cur.fetchall()
+    assert cur.context.proxy_scored == 0   # cascade never engaged
+    cur.close()
+
+
+def test_accuracy_one_results_byte_identical(db):
+    assert db.query(SEM_Q + " WITH ACCURACY 1.0", {"src": BASE}) \
+        == db.query(SEM_Q, {"src": BASE})
+
+
+def test_cascade_respects_limit(db):
+    rows = db.query(SEM_Q + " WITH ACCURACY 0.95 LIMIT 2", {"src": BASE})
+    assert len(rows) == 2
+
+
+def test_cascade_negated_predicate(db):
+    neg = SEM_Q.replace("~:", "!:")
+    truth = _rowset(db.query(neg, {"src": BASE}))
+    got = _rowset(db.query(neg + " WITH ACCURACY 0.95",
+                       {"src": BASE}))
+    assert len(truth ^ got) <= np.ceil(0.05 * N_NODES)
+    # complement of the positive cascade at the same thresholds
+    pos = _rowset(db.query(SEM_Q + " WITH ACCURACY 0.95",
+                       {"src": BASE}))
+    assert not (pos & got)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_cascade_terms():
+    st = StatisticsService(CostModelConfig())
+    assert not st.has_proxy_truth()
+    e0 = st.epoch
+    st.record_proxy_scan(0.010, 1000)            # 1e-5 s/row
+    assert st.has_proxy_truth()
+    assert st.epoch > e0                         # first truth replans
+    assert st.proxy_scan_speed() == pytest.approx(1e-5, rel=0.2)
+    e1 = st.epoch
+    st.record_escalation("face", 30, 100)
+    assert st.epoch > e1
+    assert st.escalation_fraction("face") == pytest.approx(0.3, abs=0.05)
+    # cascade wins when proxy + frac * φ beats φ alone
+    st._record_scan("semantic_filter:face", 1.0, 1000)   # φ: 1e-3 s/row
+    assert st.cascade_cost(1000, "face") \
+        < 1000 * st.phi_speed("face")
+    assert st.choose_semantic_path("face", 1000, calibrated=True) == "cascade"
+    assert st.choose_semantic_path("face", 1000, calibrated=False) == "direct"
+    # escalating everything makes the cascade pointless
+    assert st.choose_semantic_path("face", 1000, calibrated=True,
+                                   escalation=1.0) == "direct"
+    stats = st.cascade_stats()
+    assert "face" in stats
+
+
+def test_cascade_op_key_isolated(db):
+    """Cascade chunks must not pollute the direct-φ EWMA."""
+    db.query(SEM_Q + " WITH ACCURACY 0.95", {"src": BASE})
+    keys = [k for k in db.stats.speeds if k.startswith("semantic_filter")]
+    assert any(k.endswith(":cascade") for k in keys)
+
+
+# ---------------------------------------------------------------------------
+# explain
+# ---------------------------------------------------------------------------
+
+
+def test_explain_cascade_section(db):
+    ex = db.explain(SEM_Q + " WITH ACCURACY 0.95")
+    pred = ex["cascade"]["predicates"]["face"]
+    assert pred["accuracy_target"] == 0.95
+    assert pred["proxy"] and pred["calibrated"]
+    assert pred["path"] == "cascade"
+    assert pred["band"][0] <= pred["band"][1]
+    assert pred["cascade_cost"] <= pred["direct_cost"]
+    ex1 = db.explain(SEM_Q)
+    plain = ex1["cascade"]["predicates"]["face"]
+    assert plain["path"] == "direct" and plain["accuracy_target"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# cluster
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    c = _populate(ShardedPandaDB(n_shards=2))
+    c.calibrate_cascade("face", "photo", sample=90, pairs=700, seed=5)
+    return c
+
+
+def test_cluster_calibration_bit_identical(cluster):
+    single = _populate(PandaDB())
+    thr_s = single.calibrate_cascade("face", "photo", sample=90, pairs=700,
+                                     seed=5)
+    lead = cluster.lead_db()
+    es = lead.registry.serial("face")
+    ps = lead.registry.serial(proxy_key("face"))
+    for shard in range(cluster.n_shards):
+        thr_c = cluster.read_db(shard).calibrator.thresholds(
+            "face", es, ps, 0.95)
+        assert thr_c == thr_s
+
+
+def test_cluster_cascade_matches_single_node(cluster):
+    single = _populate(PandaDB())
+    single.calibrate_cascade("face", "photo", sample=90, pairs=700, seed=5)
+    q = SEM_Q + " WITH ACCURACY 0.95"
+    assert cluster.query(q, {"src": BASE}) == single.query(q, {"src": BASE})
+
+
+def test_cluster_accuracy_one_parity(cluster):
+    single = _populate(PandaDB())
+    plain = single.query(SEM_Q, {"src": BASE})
+    assert cluster.query(SEM_Q + " WITH ACCURACY 1.0", {"src": BASE}) == plain
+    assert cluster.query(SEM_Q, {"src": BASE}) == plain
+
+
+def test_cluster_explain_has_cascade():
+    # fresh cluster: observed EWMAs from other tests would (correctly) let
+    # the cost model conclude this microsecond-fast φ isn't worth a cascade
+    c = _populate(ShardedPandaDB(n_shards=2))
+    c.calibrate_cascade("face", "photo", sample=90, pairs=700, seed=5)
+    ex = c.explain(SEM_Q + " WITH ACCURACY 0.95")
+    pred = ex["cascade"]["predicates"]["face"]
+    assert pred["calibrated"] and pred["path"] == "cascade"
+
+
+def test_cascade_escalation_path_exact():
+    """Force a wide uncertainty band (engineered overlapping curve): rows
+    inside the band must go through the exact φ and come back with the
+    direct path's verdicts, so the result set matches direct exactly."""
+    d = _populate(PandaDB(), proxy=False)
+    # dim-16 proxy: random-pair scores stay below ~0.9, so the engineered
+    # accept region (> ~0.99) only ever admits true duplicates
+    d.register_proxy("face", noisy_proxy(16))
+    es = d.registry.serial("face")
+    ps = d.registry.serial(proxy_key("face"))
+    # clean tails + alternating middle spanning the real proxy-score range:
+    # the fit must escalate the middle (~40%, cheap enough that the cost
+    # model still prefers the cascade) and route only the pure tails
+    # the pure-negative pad in [0.905, 0.99] keeps the fitted accept
+    # boundary above every real non-duplicate score (max ~0.91), so the
+    # accept region only ever admits true duplicates (proxy score 1.0)
+    scores = np.concatenate([np.linspace(-1.0, 0.15, 90),
+                             np.linspace(0.2, 0.90, 120),
+                             np.linspace(0.905, 0.99, 60),
+                             np.linspace(0.995, 1.0, 90)])
+    labels = np.concatenate([np.zeros(90, bool),
+                             (np.arange(120) % 2).astype(bool),
+                             np.zeros(60, bool),
+                             np.ones(90, bool)])
+    d.calibrator.set_curve("face", es, ps, scores, labels)
+    d.stats.epoch += 1
+    thr = d.calibrator.thresholds("face", es, ps, 0.95)
+    assert 0.2 < thr.expected_escalation < 0.7
+    truth = d.query(SEM_Q, {"src": BASE})
+    s = d.session()
+    cur = s.run(SEM_Q + " WITH ACCURACY 0.95", {"src": BASE})
+    rows = cur.fetchall()
+    assert cur.context.escalated_rows > 0
+    assert cur.context.escalated_rows + cur.context.proxy_hits \
+        == cur.context.proxy_scored
+    cur.close()
+    assert rows == truth
+    assert d.stats.escalation_fraction("face") > 0.0

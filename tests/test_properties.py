@@ -268,3 +268,58 @@ def test_merge_topk_permutation_invariant(seed, parts):
     perm = rng.permutation(parts)
     v2, _ = merge_topk(v[perm], i[perm], 4)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+# -- cascade routing: monotone in the threshold pair ---------------------------
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    lo=st.floats(-1, 1),
+    dhi=st.floats(0, 2),
+    widen_lo=st.floats(0, 1),
+    widen_hi=st.floats(0, 1),
+)
+def test_cascade_routing_monotone_in_band(seed, lo, dhi, widen_lo, widen_hi):
+    """Widening [lo, hi] only moves items INTO escalation: no item ever
+    flips accept <-> reject, and no new accepts/rejects appear."""
+    from repro.core.cascade import route_scores
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(-2, 2, 200)
+    hi = lo + dhi
+    acc1, rej1, esc1 = route_scores(s, lo, hi)
+    acc2, rej2, esc2 = route_scores(s, lo - widen_lo, hi + widen_hi)
+    assert not (acc2 & ~acc1).any()
+    assert not (rej2 & ~rej1).any()
+    assert not (acc2 & rej1).any() and not (rej2 & acc1).any()
+    assert (esc1 & ~esc2).sum() == 0          # escalation set only grows
+    # totality on both bands
+    for a, r, e in ((acc1, rej1, esc1), (acc2, rej2, esc2)):
+        assert (a.astype(int) + r.astype(int) + e.astype(int) == 1).all()
+
+
+# -- ACCURACY 1.0 is a byte-identical bypass -----------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(8, 24),
+    dup_every=st.integers(2, 6),
+    seed=st.integers(0, 1000),
+)
+def test_accuracy_one_byte_identical_on_random_graphs(n, dup_every, seed):
+    from repro.core import PandaDB
+    from repro.core.aipm import feature_hash_extractor
+    rng = np.random.default_rng(seed)
+    base = rng.bytes(256)
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=16))
+    db.register_proxy("face", feature_hash_extractor(dim=4, seed=99))
+    for i in range(n):
+        db.graph.create_node(
+            "Person", name=f"n{i}",
+            photo=base if i % dup_every == 0 else rng.bytes(256))
+    q = ("MATCH (p:Person) WHERE p.photo->face ~: "
+         "createFromSource($src)->face RETURN p.name")
+    plain = db.query(q, {"src": base})
+    assert db.query(q + " WITH ACCURACY 1.0", {"src": base}) == plain
+    assert db.plan(q + " WITH ACCURACY 1.0") == db.plan(q)
