@@ -1,0 +1,167 @@
+"""Goodput under overload: admission control + deadlines vs neither.
+
+A replicated cluster (P=2 shards x R=2 replicas) whose shard-0 replicas
+draw a seeded 50ms stall serves the same offered-load query stream through
+two serving configurations:
+
+* ``no_shed`` -- the seed's behavior: unbounded queue, no deadlines.  Every
+  request executes eventually, but past the capacity knee the queue grows
+  without bound, so client-observed latency explodes and almost nothing
+  finishes inside the latency budget it would have been given.
+* ``shed``    -- PR 9's overload path: per-request end-to-end deadline,
+  bounded admission queue, shed-on-arrival from the per-skeleton
+  service-time EWMA, expiry-in-queue dropped before occupying a worker.
+
+Offered load is swept at ~1x / 2x / 4x the measured (faulted) closed-loop
+capacity.  Goodput counts completions whose client-observed latency fits
+the budget; p99 is over all executed requests.  The run asserts the PR's
+acceptance bar: at 2x load shedding yields strictly higher goodput AND
+lower p99 than no-shed, and no deadline-carrying query overruns its budget
+by more than one chunk interval (the 50ms stall bounds the interval).
+Results land in ``BENCH_overload.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster import FaultInjector, ReplicatedPandaDB
+from repro.configs.pandadb import PandaDBConfig, ServingConfig
+from repro.serving.engine import QueryServer
+
+N = 200
+N_SHARDS = 2
+REPLICATION = 2
+N_WORKERS = 2
+BUDGET_MS = 150.0
+#: overrun slack = one chunk interval: a query past its budget is cut at
+#: the next chunk boundary / clamped wait, which the injected 50ms stall
+#: (not interruptible mid-sleep) can stretch by at most one stall
+SLACK_MS = 75.0
+DELAY_S = 0.05
+SLOW_PROB = 0.15
+QUEUE_DEPTH = 4 * N_WORKERS
+LOADS = (1.0, 2.0, 4.0)
+
+QUERIES = [
+    "MATCH (p:Person) WHERE p.rank > 1 RETURN p.name LIMIT 20",
+    "MATCH (p:Person) WHERE p.rank > 5 RETURN p.name, p.rank",
+    ("MATCH (p:Person) WHERE p = $id RETURN p.name", {"id": 3}),
+]
+
+
+def _make_cluster() -> ReplicatedPandaDB:
+    cfg = PandaDBConfig()
+    cfg = dataclasses.replace(
+        cfg, cluster=dataclasses.replace(cfg.cluster, hedge_reads=False))
+    faults = FaultInjector(seed=7)
+    c = ReplicatedPandaDB(n_shards=N_SHARDS, cfg=cfg,
+                          replication=REPLICATION, faults=faults)
+    for i in range(N):
+        c.create_node("Person", name=f"n{i}", rank=float(i % 9))
+    # both replicas of shard 0 stall intermittently: adaptive replica
+    # choice cannot route around it, so overload meets a real fault
+    faults.slow(0, 0, DELAY_S, prob=SLOW_PROB)
+    faults.slow(0, 1, DELAY_S, prob=SLOW_PROB)
+    return c
+
+
+def _measure_capacity(db) -> float:
+    probe = QueryServer(db, n_workers=N_WORKERS)
+    stats = probe.run_closed_loop(QUERIES, n_clients=2 * N_WORKERS,
+                                  duration_s=1.0)
+    return stats.throughput_qps
+
+
+def _offered_run(db, rate_qps: float, shed: bool) -> dict:
+    if shed:
+        serving = ServingConfig(queue_depth=QUEUE_DEPTH,
+                                admission_policy="reject",
+                                shed_on_arrival=True)
+        deadline_ms = BUDGET_MS
+    else:
+        serving = ServingConfig()       # unbounded, no deadline: the seed
+        deadline_ms = None
+    server = QueryServer(db, n_workers=N_WORKERS, serving=serving)
+    server.start()
+    # warm the per-skeleton service EWMAs so shed-on-arrival has a model
+    # from the first deadline-carrying request; snapshot to exclude warmup
+    for q in QUERIES * 2:
+        text, params = q if isinstance(q, tuple) else (q, None)
+        server.submit(text, params=params).get(timeout=10)
+    warm_n = len(server._stats.e2e_ms)
+    summary = server.run_open_loop(QUERIES, rate_qps=rate_qps,
+                                   duration_s=1.2, deadline_ms=deadline_ms)
+    e2e = server._stats.e2e_ms[warm_n:]
+    server.close()
+    within = sum(1 for x in e2e if x <= BUDGET_MS)
+    over = sum(1 for x in e2e if x > BUDGET_MS + SLACK_MS)
+    return {
+        "offered_qps": rate_qps,
+        "submitted": int(summary["submitted"]) - len(QUERIES) * 2,
+        "executed": len(e2e),
+        "shed": int(summary["shed"]),
+        "rejected": int(summary["rejected"]),
+        "expired": int(summary["expired"]),
+        "goodput_qps": within / summary["duration_s"],
+        "p50_ms": float(np.percentile(e2e, 50)) if e2e else 0.0,
+        "p99_ms": float(np.percentile(e2e, 99)) if e2e else 0.0,
+        "budget_overruns_past_slack": over if shed else None,
+    }
+
+
+def run() -> None:
+    db = _make_cluster()
+    capacity = _measure_capacity(db)
+    payload = {
+        "config": dict(n=N, n_shards=N_SHARDS, replication=REPLICATION,
+                       n_workers=N_WORKERS, budget_ms=BUDGET_MS,
+                       slack_ms=SLACK_MS, queue_depth=QUEUE_DEPTH,
+                       slow_delay_s=DELAY_S, slow_prob=SLOW_PROB,
+                       fault_seed=7, loads=list(LOADS)),
+        "capacity_qps": capacity,
+        "results": {},
+    }
+    for mult in LOADS:
+        rate = max(2.0, mult * capacity)
+        for shed in (False, True):
+            mode = "shed" if shed else "no_shed"
+            r = _offered_run(db, rate, shed=shed)
+            payload["results"][f"{mult:g}x/{mode}"] = r
+            emit(f"overload/{mult:g}x/{mode}", r["p99_ms"] * 1000,
+                 f"goodput={r['goodput_qps']:.0f}qps,"
+                 f"shed={r['shed']},expired={r['expired']}")
+            if shed:
+                assert r["budget_overruns_past_slack"] == 0, (
+                    f"{r['budget_overruns_past_slack']} queries overran "
+                    f"budget+{SLACK_MS:.0f}ms at {mult:g}x")
+
+    two_shed = payload["results"]["2x/shed"]
+    two_no = payload["results"]["2x/no_shed"]
+    assert two_shed["goodput_qps"] > two_no["goodput_qps"], (
+        f"shedding did not raise goodput at 2x: "
+        f"{two_shed['goodput_qps']:.0f} <= {two_no['goodput_qps']:.0f}")
+    assert two_shed["p99_ms"] < two_no["p99_ms"], (
+        f"shedding did not cut p99 at 2x: "
+        f"{two_shed['p99_ms']:.0f} >= {two_no['p99_ms']:.0f}")
+    payload["note"] = (
+        f"at 2x offered load under the seeded 50ms slow-replica fault, "
+        f"admission control + deadlines take goodput from "
+        f"{two_no['goodput_qps']:.0f} to {two_shed['goodput_qps']:.0f} qps "
+        f"and p99 from {two_no['p99_ms']:.0f} to {two_shed['p99_ms']:.0f} ms; "
+        "no deadline-carrying query overran its budget by more than one "
+        "chunk interval.")
+    db.close()
+
+    out = Path(__file__).resolve().parent.parent / "BENCH_overload.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ SUITES = {
     "pq_knn": "benchmarks.bench_pq_knn",
     "sharded": "benchmarks.bench_sharded",
     "failover": "benchmarks.bench_failover",
+    "overload": "benchmarks.bench_overload",
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.roofline",
 }

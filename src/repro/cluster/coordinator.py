@@ -48,6 +48,7 @@ from repro.core.cypherplus import (
 )
 from repro.core.aipm import proxy_key
 from repro.core.database import PandaDB
+from repro.core.deadline import Deadline
 from repro.core.executor import (
     DEFAULT_BATCH_ROWS,
     ExecutionContext,
@@ -177,12 +178,15 @@ class ClusterCursor(Cursor):
     fetch surface; closing tears the shard pipelines down."""
 
     def __init__(self, gen, keys: Tuple[str, ...] = (),
-                 rwlock: Optional[RWLock] = None) -> None:
+                 rwlock: Optional[RWLock] = None, deadline=None) -> None:
         super().__init__(None, None, keys=tuple(keys), rwlock=rwlock)
         if gen is not None:
             self._gen = gen
             self._exhausted = False
         self._closed = gen is None
+        # the statement's shared budget: surfaces degradations/approximate
+        # through the inherited Cursor properties (no ctx on the merge side)
+        self._deadline = deadline
 
     def close(self) -> None:
         """Exception-safe teardown: whatever ``_gen.close()`` does (a shard
@@ -210,10 +214,13 @@ class ClusterPreparedStatement:
         self.param_names = frozenset(query_params(self.query))
 
     def run(self, parameters: Optional[Dict[str, Any]] = None,
-            optimized: bool = True, **params: Any) -> ClusterCursor:
+            optimized: bool = True,
+            deadline_ms: Optional[float] = None,
+            **params: Any) -> ClusterCursor:
         return self.session._run_parsed(self.skeleton, self.query,
                                         {**(parameters or {}), **params},
-                                        optimized=optimized, text=self.text)
+                                        optimized=optimized, text=self.text,
+                                        deadline_ms=deadline_ms)
 
 
 class ClusterSession:
@@ -224,11 +231,15 @@ class ClusterSession:
     def __init__(self, cdb: "ShardedPandaDB",
                  batch_rows: int = DEFAULT_BATCH_ROWS,
                  use_cache: bool = True,
-                 prefetch_depth: Optional[int] = None) -> None:
+                 prefetch_depth: Optional[int] = None,
+                 deadline_ms: Optional[float] = None) -> None:
         self.cdb = cdb
         self.batch_rows = batch_rows
         self.use_cache = use_cache
         self.prefetch_depth = prefetch_depth
+        #: default per-query budget (run(deadline_ms=) overrides;
+        #: ClusterConfig.default_deadline_ms backstops both)
+        self.deadline_ms = deadline_ms
         self._closed = False
         self._cursors: List[ClusterCursor] = []
 
@@ -267,15 +278,19 @@ class ClusterSession:
         return ClusterPreparedStatement(self, text)
 
     def run(self, text: str, parameters: Optional[Dict[str, Any]] = None,
-            optimized: bool = True, **params: Any) -> ClusterCursor:
+            optimized: bool = True,
+            deadline_ms: Optional[float] = None, **params: Any
+            ) -> ClusterCursor:
         if self._closed:
             raise RuntimeError("session is closed")
         params = {**(parameters or {}), **params}
         return self._run_parsed(skeleton_of(text), parse_query(text), params,
-                                optimized=optimized, text=text)
+                                optimized=optimized, text=text,
+                                deadline_ms=deadline_ms)
 
     def _run_parsed(self, skeleton: str, q, params: Dict[str, Any],
-                    optimized: bool, text: str) -> ClusterCursor:
+                    optimized: bool, text: str,
+                    deadline_ms: Optional[float] = None) -> ClusterCursor:
         if self._closed:
             raise RuntimeError("session is closed")
         cdb = self.cdb
@@ -283,6 +298,10 @@ class ClusterSession:
         if missing:
             raise KeyError(f"unbound parameters: "
                            f"{', '.join('$' + m for m in sorted(missing))}")
+        # ONE Deadline object for the whole statement: every shard leg,
+        # hedge race and retry below clamps to the same remaining budget
+        deadline = Deadline.resolve(deadline_ms, self.deadline_ms,
+                                    cdb.cfg.cluster.default_deadline_ms)
         if isinstance(q, CreateQuery):
             cdb.rwlock.acquire_write()
             try:
@@ -296,17 +315,19 @@ class ClusterSession:
         keys = _projection_keys(q)
         if route == "routed":
             ctx = ExecutionContext(cdb.read_db(owner), params,
-                                   prefetch_depth=self.prefetch_depth)
+                                   prefetch_depth=self.prefetch_depth,
+                                   deadline=deadline)
             return self._track(
                 ClusterCursor(execute_iter(plan, ctx, self.batch_rows),
-                              keys=keys, rwlock=cdb.rwlock))
+                              keys=keys, rwlock=cdb.rwlock,
+                              deadline=deadline))
         limit = _root_limit(plan, params)
         streams: List[Any] = []
         try:
             for s in cdb.active:
                 streams.append(cdb._shard_stream(
                     plan, s, params, anchor, self.batch_rows, limit,
-                    self.prefetch_depth))
+                    self.prefetch_depth, deadline=deadline))
         except BaseException:
             # a later shard failing to open must not leak the earlier
             # shards' pipelines
@@ -315,7 +336,8 @@ class ClusterSession:
         gen = ordered_merge(streams,
                             batch_rows=cdb.cfg.cluster.merge_batch_rows,
                             limit=limit)
-        return self._track(ClusterCursor(gen, keys=keys, rwlock=cdb.rwlock))
+        return self._track(ClusterCursor(gen, keys=keys, rwlock=cdb.rwlock,
+                                         deadline=deadline))
 
     def explain(self, text: str) -> Dict[str, Any]:
         return self.cdb.explain(text)
@@ -361,7 +383,8 @@ class ShardedPandaDB:
         #: chaos-test observability: what the failure-masking machinery did
         self.counters: Dict[str, int] = {
             "hedges_fired": 0, "hedges_won": 0, "retries": 0,
-            "failovers": 0, "rebalance_moves": 0, "teardown_errors": 0}
+            "failovers": 0, "rebalance_moves": 0, "teardown_errors": 0,
+            "degraded": 0}
         self.replica_reads: Dict[str, int] = {}
         self._route_lock = threading.Lock()   # serving workers race _route
         self._pool: Optional[ThreadPoolExecutor] = None
@@ -413,11 +436,13 @@ class ShardedPandaDB:
 
     def _shard_stream(self, plan: lp.PlanOp, s: int, params: Dict[str, Any],
                       anchor: str, batch_rows: int, limit: Optional[int],
-                      prefetch_depth: Optional[int]):
+                      prefetch_depth: Optional[int], deadline=None):
         """One shard's tagged fan-out stream (replicated: hedged +
-        failover-wrapped)."""
+        failover-wrapped).  ``deadline`` is the statement's shared budget
+        (every shard leg clamps to the same remaining time)."""
         ctx = ExecutionContext(self.shards[s], params,
-                               prefetch_depth=prefetch_depth)
+                               prefetch_depth=prefetch_depth,
+                               deadline=deadline)
         return execute_iter_tagged(plan, ctx, anchor, batch_rows,
                                    limit=limit)
 
@@ -626,19 +651,28 @@ class ShardedPandaDB:
 
     def knn(self, sub_key: str, queries: np.ndarray, k: int,
             nprobe: Optional[int] = None, mode: str = "auto",
-            rerank: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+            rerank: bool = True, deadline_ms: Optional[float] = None
+            ) -> Tuple[np.ndarray, np.ndarray]:
         """Scatter-gather kNN over every shard's index piece through the
         shared ``merge_topk`` schedule.  Each shard's scan feeds its own
         cost model (ADC-vs-float stays a per-shard decision) and the
         coordinator's per-shard throughput EWMAs
-        (``stats.record_shard_scan``)."""
-        return scatter_gather_knn(
+        (``stats.record_shard_scan``).  Under a ``deadline_ms`` budget,
+        shards that cannot answer in time are dropped and the merge
+        returns partial top-k from the shards that did (padding contract:
+        dropped slots are id=-1 / -inf)."""
+        deadline = Deadline.resolve(deadline_ms)
+        vals, ids = scatter_gather_knn(
             self.index_pieces(sub_key), queries, k, nprobe=nprobe,
             mode=mode, rerank=rerank,
             stats=[self.read_db(s).stats for s in self.active],
             record=self.stats.record_shard_scan,
             pool=self._pool,
-            split_rerank_budget=self.cfg.cluster.split_rerank_budget)
+            split_rerank_budget=self.cfg.cluster.split_rerank_budget,
+            deadline=deadline)
+        if deadline is not None and "partial_topk" in deadline.degradations:
+            self._count("degraded")
+        return vals, ids
 
     def knn_fanout_cost(self, sub_key: str, q: int = 1, k: int = 10,
                         nprobe: Optional[int] = None) -> float:
@@ -652,9 +686,11 @@ class ShardedPandaDB:
 
     def session(self, batch_rows: Optional[int] = None,
                 use_cache: bool = True,
-                prefetch_depth: Optional[int] = None) -> ClusterSession:
+                prefetch_depth: Optional[int] = None,
+                deadline_ms: Optional[float] = None) -> ClusterSession:
         kwargs: Dict[str, Any] = {"use_cache": use_cache,
-                                  "prefetch_depth": prefetch_depth}
+                                  "prefetch_depth": prefetch_depth,
+                                  "deadline_ms": deadline_ms}
         if batch_rows is not None:
             kwargs["batch_rows"] = batch_rows
         return ClusterSession(self, **kwargs)

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.pandadb import PandaDBConfig
 from repro.core.database import PandaDB
+from repro.core.deadline import Deadline
 from repro.core.executor import ExecutionContext, execute_iter_tagged
 from repro.core.vector_index import scatter_gather_knn
 from repro.cluster.coordinator import ShardedPandaDB, _apply_op
@@ -121,6 +122,103 @@ class FaultInjector:
             time.sleep(delay)
 
 
+class CircuitBreaker:
+    """Per-replica failure gate: closed -> open -> half-open -> closed.
+
+    ``record_failure`` counts *consecutive* failures (a success resets);
+    hitting the threshold -- or any failure while half-open -- trips the
+    breaker OPEN for ``reset_s``, during which :meth:`allow` refuses the
+    replica so retries stop hammering a node that keeps failing.  After the
+    cool-down exactly ONE caller is admitted as the half-open probe; its
+    success closes the breaker, its failure re-opens it.  Slow calls
+    (latency above ``slow_call_s``, when enabled) count as failures, so a
+    consistently lagging replica is quarantined like a flapping one.
+
+    ``opens``/``probes``/``closes`` are cumulative transition counters --
+    the chaos suite asserts recovery shapes on these instead of timing."""
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, failures: int = 2, reset_s: float = 0.25,
+                 slow_call_s: float = 0.0) -> None:
+        self.failure_threshold = max(1, int(failures))
+        self.reset_s = float(reset_s)
+        self.slow_call_s = float(slow_call_s)
+        self.state = self.CLOSED
+        self.opens = 0
+        self.probes = 0
+        self.closes = 0
+        self._consecutive = 0
+        self._probing = False
+        self._probe_at = 0.0
+        self._open_until = 0.0
+        self._lock = threading.Lock()
+
+    def allow(self) -> bool:
+        """May this replica serve a read right now?  Transitions OPEN ->
+        HALF_OPEN once the cool-down has passed; in HALF_OPEN admits only
+        one probe at a time (an admitted-but-unresolved probe expires after
+        ``reset_s``, so a probe the replica picker never actually routed to
+        cannot wedge the breaker half-open forever)."""
+        with self._lock:
+            if self.state == self.CLOSED:
+                return True
+            now = time.perf_counter()
+            if self.state == self.OPEN:
+                if now < self._open_until:
+                    return False
+                self.state = self.HALF_OPEN
+                self._probing = False
+            if self._probing and now - self._probe_at <= self.reset_s:
+                return False
+            self._probing = True
+            self._probe_at = now
+            self.probes += 1
+            return True
+
+    def record_success(self, latency_s: float = 0.0) -> None:
+        with self._lock:
+            if 0.0 < self.slow_call_s < latency_s:
+                self._failure_locked()
+                return
+            if self.state != self.CLOSED:
+                self.closes += 1
+            self.state = self.CLOSED
+            self._consecutive = 0
+            self._probing = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failure_locked()
+
+    def trip(self) -> None:
+        """Immediate open (an observed fail-stop needs no vote count)."""
+        with self._lock:
+            self._trip_locked()
+
+    def reset_half_open(self) -> None:
+        """Post-``revive()``: skip the cool-down so the next read is the
+        probe that can bring the replica back into rotation."""
+        with self._lock:
+            if self.state != self.CLOSED:
+                self.state = self.HALF_OPEN
+                self._probing = False
+
+    def _failure_locked(self) -> None:
+        self._consecutive += 1
+        if (self.state == self.HALF_OPEN
+                or self._consecutive >= self.failure_threshold):
+            self._trip_locked()
+
+    def _trip_locked(self) -> None:
+        if self.state != self.OPEN:
+            self.opens += 1
+        self.state = self.OPEN
+        self._probing = False
+        self._consecutive = max(self._consecutive, self.failure_threshold)
+        self._open_until = time.perf_counter() + self.reset_s
+
+
 class ReplicaSet:
     """R copies of one shard behind a versioned op log (§VII-A).
 
@@ -131,21 +229,42 @@ class ReplicaSet:
 
     def __init__(self, shard_id: int, replicas: List[PandaDB],
                  faults: FaultInjector,
-                 on_dead: Optional[Callable[[int, int], None]] = None) -> None:
+                 on_dead: Optional[Callable[[int, int], None]] = None,
+                 breaker_failures: int = 2, breaker_reset_s: float = 0.25,
+                 breaker_slow_call_s: float = 0.0) -> None:
         self.shard_id = shard_id
         self.replicas = replicas
         self.faults = faults
         self.alive = [True] * len(replicas)
         self.versions = [0] * len(replicas)
         self.oplog = WriteAheadLog(None)
+        self.breakers = [CircuitBreaker(breaker_failures, breaker_reset_s,
+                                        breaker_slow_call_s)
+                         for _ in replicas]
         #: notified once per alive->dead transition the set itself observes
         #: (the coordinator counts these as failovers)
         self.on_dead = on_dead
 
     def _fold_down(self, r: int) -> None:
         self.alive[r] = False
+        self.breakers[r].trip()
         if self.on_dead is not None:
             self.on_dead(self.shard_id, r)
+
+    def note_success(self, r: int, latency_s: float = 0.0) -> None:
+        self.breakers[r].record_success(latency_s)
+
+    def note_failure(self, r: int) -> None:
+        self.breakers[r].record_failure()
+
+    def selectable(self) -> List[int]:
+        """Live replicas whose breaker admits a call right now.  When every
+        live breaker refuses (all open inside their cool-down) fall back to
+        plain :meth:`live` -- serving from a suspect replica beats serving
+        nothing."""
+        live = self.live()
+        out = [r for r in live if self.breakers[r].allow()]
+        return out or live
 
     def live(self) -> List[int]:
         """Live replica indices; folds fail-stops observed since the last
@@ -195,6 +314,9 @@ class ReplicaSet:
         self.versions[r] = self.oplog.catch_up(
             before, lambda e: _apply_op(db, e[0], e[1], e[2]))
         self.alive[r] = True
+        # skip the breaker cool-down: the next read against this replica is
+        # the half-open probe that can fold it back into rotation
+        self.breakers[r].reset_half_open()
         return self.versions[r] - before
 
 
@@ -253,23 +375,37 @@ def _loser_reaper(cdb: "ReplicatedPandaDB", shard: int, r: int,
 
 def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
                 call: Callable[[int], Any],
-                on_loser: Optional[Callable[[Any], None]] = None
-                ) -> Tuple[Any, int]:
+                on_loser: Optional[Callable[[Any], None]] = None,
+                deadline: Optional[Deadline] = None) -> Tuple[Any, int]:
     """Run ``call(replica)`` on the latency-preferred replica; if it has
     not answered within the shard's hedge deadline, race the next-best
     replica and take the first *success* (ties in the same wait batch
     prefer the primary, so an un-faulted cluster behaves exactly
     un-hedged).  Returns ``(result, winning replica)``.
 
+    With a ``deadline``, every wait is clamped to the remaining budget and
+    an expired budget abandons the race (legs are reaped, never orphaned)
+    instead of blocking on a replica that will not answer in time.  Each
+    leg's failure is charged to that replica's circuit breaker.
+
     Losers are not abandoned: a done-callback closes their result through
     ``on_loser`` (for streams: the φ-cancelling iterator close) and folds a
     late :class:`ReplicaDown` into the replica set."""
+    rs = cdb.replica_sets[shard]
     primary = cdb.stats.choose_replica(shard, live)
     pool = cdb._hedge_pool
     if pool is None or len(live) < 2:
-        return call(primary), primary
+        try:
+            out = call(primary)
+        except (ReplicaDown, ReplicaError):
+            rs.note_failure(primary)
+            raise
+        return out, primary
     futs = {cdb._track_hedge(pool.submit(call, primary)): primary}
-    done, _ = wait(list(futs), timeout=cdb.stats.hedge_deadline(shard))
+    hedge_to = cdb.stats.hedge_deadline(shard)
+    if deadline is not None:
+        hedge_to = deadline.clamp(hedge_to)
+    done, _ = wait(list(futs), timeout=hedge_to)
     if not done:
         backup = min(
             (r for r in live if r != primary),
@@ -280,15 +416,27 @@ def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
     last_exc: Optional[BaseException] = None
     pending = set(futs)
     while pending and winner is None:
-        done, pending = wait(pending, return_when=FIRST_COMPLETED)
+        if deadline is None:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+        else:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED,
+                                 timeout=max(0.0, deadline.remaining()))
+            if not done and deadline.expired():
+                # budget gone: reap every leg still racing and fail fast
+                for fu, r in futs.items():
+                    fu.add_done_callback(
+                        _loser_reaper(cdb, shard, r, on_loser))
+                deadline.check("hedged read")
         for fu in sorted(done, key=lambda f: futs[f] != primary):
             exc = fu.exception()
             if exc is None:
                 winner = fu
                 break
             last_exc = exc
+            if isinstance(exc, (ReplicaDown, ReplicaError)):
+                rs.note_failure(futs[fu])
             if isinstance(exc, ReplicaDown):
-                cdb.replica_sets[shard].mark_dead(futs[fu])
+                rs.mark_dead(futs[fu])
     if winner is None:
         assert last_exc is not None
         raise last_exc
@@ -317,19 +465,25 @@ def _pull_first(cdb: "ReplicatedPandaDB", shard: int, r: int,
 
 
 def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
-                 open_on: Callable[[int], Any]) -> Tuple[Any, Any, int]:
+                 open_on: Callable[[int], Any],
+                 deadline: Optional[Deadline] = None) -> Tuple[Any, Any, int]:
     """Open a stream on *some* live replica: hedged first pull, transient
-    errors retried with linear backoff, fail-stops failed over until the
-    replica set itself is exhausted."""
+    errors retried with linear backoff (clamped to any remaining deadline
+    budget), fail-stops failed over until the replica set itself is
+    exhausted.  Candidate replicas are breaker-filtered, so a replica that
+    just burned its failure budget is skipped instead of re-tried."""
     rs = cdb.replica_sets[shard]
     attempts = 0
     while True:
-        live = rs.live()
+        if deadline is not None:
+            deadline.check("stream open")
+        live = rs.selectable()
         try:
             (it, first, dt), r = hedged_call(
                 cdb, shard, live,
                 lambda rr: _pull_first(cdb, shard, rr, open_on),
-                on_loser=lambda res: _close_quiet(res[0], cdb))
+                on_loser=lambda res: _close_quiet(res[0], cdb),
+                deadline=deadline)
         except ReplicaDown:
             continue        # rs.live() shrinks; raises once the set is gone
         except ReplicaError:
@@ -337,15 +491,21 @@ def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
             cdb._count("retries")
             if attempts > cdb.cfg.cluster.read_retries:
                 raise
-            time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
+            backoff = cdb.cfg.cluster.retry_backoff_s * attempts
+            if deadline is not None:
+                deadline.check("stream open retry")
+                backoff = deadline.clamp(backoff)
+            time.sleep(backoff)
             continue
+        rs.note_success(r, dt)
         cdb.stats.record_replica_read(shard, r, dt)
         cdb._count_replica_read(shard, r)
         return it, first, r
 
 
 def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
-                     open_on: Callable[[int], Any]):
+                     open_on: Callable[[int], Any],
+                     deadline: Optional[Deadline] = None):
     """A tagged per-shard stream that survives replica failure mid-pull.
 
     Every batch pull is fault-gated and latency-recorded; on fail-stop the
@@ -361,7 +521,7 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
     try:
         while True:
             if it is None:
-                it, nxt, r = _open_stream(cdb, shard, open_on)
+                it, nxt, r = _open_stream(cdb, shard, open_on, deadline)
             else:
                 attempts = 0
                 while True:
@@ -370,11 +530,13 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
                         cdb.faults.check(shard, r)
                         nxt = next(it, _DONE)
                     except ReplicaDown:
+                        rs.note_failure(r)
                         rs.mark_dead(r)
                         _close_quiet(it, cdb)
                         it = None
                         break
                     except ReplicaError:
+                        rs.note_failure(r)
                         attempts += 1
                         cdb._count("retries")
                         if attempts > cdb.cfg.cluster.read_retries:
@@ -382,10 +544,15 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
                             _close_quiet(it, cdb)
                             it = None
                             break
-                        time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
+                        backoff = cdb.cfg.cluster.retry_backoff_s * attempts
+                        if deadline is not None:
+                            deadline.check("stream pull retry")
+                            backoff = deadline.clamp(backoff)
+                        time.sleep(backoff)
                         continue
-                    cdb.stats.record_replica_read(
-                        shard, r, time.perf_counter() - t0)
+                    dt = time.perf_counter() - t0
+                    rs.note_success(r, dt)
+                    cdb.stats.record_replica_read(shard, r, dt)
                     break
                 if it is None:
                     continue            # reopen on a sibling + fast-forward
@@ -410,11 +577,12 @@ class _ResilientIndex:
     merge schedule serves healthy and degraded clusters identically
     (replicas hold the same piece, so any winner returns the same rows)."""
 
-    def __init__(self, cdb: "ReplicatedPandaDB", shard: int,
-                 sub_key: str) -> None:
+    def __init__(self, cdb: "ReplicatedPandaDB", shard: int, sub_key: str,
+                 deadline: Optional[Deadline] = None) -> None:
         self.cdb = cdb
         self.shard = shard
         self.sub_key = sub_key
+        self.deadline = deadline
         self.scan_rows = 0
         rs = cdb.replica_sets[shard]
         piece = rs.replicas[rs.live()[0]].indexes[sub_key]
@@ -441,14 +609,18 @@ class _ResilientIndex:
                     rerank=True, rerank_mult=None):
         cdb, s = self.cdb, self.shard
         rs = cdb.replica_sets[s]
+        deadline = self.deadline
         attempts = 0
         while True:
-            live = rs.live()
+            if deadline is not None:
+                deadline.check("knn search")
+            live = rs.selectable()
             try:
-                (v, i, rows), _ = hedged_call(
+                (v, i, rows), r = hedged_call(
                     cdb, s, live,
                     lambda rr: self._search_on(rr, queries, k, nprobe, mode,
-                                               rerank, rerank_mult))
+                                               rerank, rerank_mult),
+                    deadline=deadline)
             except ReplicaDown:
                 continue
             except ReplicaError:
@@ -456,8 +628,13 @@ class _ResilientIndex:
                 cdb._count("retries")
                 if attempts > cdb.cfg.cluster.read_retries:
                     raise
-                time.sleep(cdb.cfg.cluster.retry_backoff_s * attempts)
+                backoff = cdb.cfg.cluster.retry_backoff_s * attempts
+                if deadline is not None:
+                    deadline.check("knn retry")
+                    backoff = deadline.clamp(backoff)
+                time.sleep(backoff)
                 continue
+            rs.note_success(r)
             self.scan_rows += rows
             return v, i
 
@@ -497,10 +674,14 @@ class ReplicatedPandaDB(ShardedPandaDB):
         # every alive->dead transition a replica set observes is a failover
         # (counters exist by first use: live() only runs post-__init__)
         on_dead = lambda s, r: self._count("failovers")  # noqa: E731
+        cl = self.cfg.cluster
         self.replica_sets = [
             ReplicaSet(s, [make_shard(self.cfg)
                            for _ in range(self.replication)], self.faults,
-                       on_dead=on_dead)
+                       on_dead=on_dead,
+                       breaker_failures=cl.breaker_failures,
+                       breaker_reset_s=cl.breaker_reset_s,
+                       breaker_slow_call_s=cl.breaker_slow_call_s)
             for s in range(self.n_shards)]
         return [rs.replicas[0] for rs in self.replica_sets]
 
@@ -533,7 +714,7 @@ class ReplicatedPandaDB(ShardedPandaDB):
         with self._hedge_lock:
             running = [fu for fu in self._hedge_inflight if not fu.done()]
         if running:
-            wait(running, timeout=2.0)
+            wait(running, timeout=self.cfg.cluster.close_drain_s)
 
     def revive(self, shard: int, replica: int) -> int:
         """Heal + catch up one replica from the shard's op log (§VII-A
@@ -544,7 +725,7 @@ class ReplicatedPandaDB(ShardedPandaDB):
 
     def read_db(self, s: int) -> PandaDB:
         rs = self.replica_sets[s]
-        r = self.stats.choose_replica(s, rs.live())
+        r = self.stats.choose_replica(s, rs.selectable())
         self._count_replica_read(s, r)
         return rs.replicas[r]
 
@@ -552,32 +733,55 @@ class ReplicatedPandaDB(ShardedPandaDB):
         return self.replica_sets[s].apply(op, args, kw)
 
     def _shard_stream(self, plan, s, params, anchor, batch_rows, limit,
-                      prefetch_depth):
+                      prefetch_depth, deadline=None):
         rs = self.replica_sets[s]
 
         def open_on(r: int):
             ctx = ExecutionContext(rs.replicas[r], params,
-                                   prefetch_depth=prefetch_depth)
+                                   prefetch_depth=prefetch_depth,
+                                   deadline=deadline)
             return execute_iter_tagged(plan, ctx, anchor, batch_rows,
                                        limit=limit)
 
-        return resilient_stream(self, s, open_on)
+        return resilient_stream(self, s, open_on, deadline=deadline)
 
     def knn(self, sub_key: str, queries, k: int, nprobe: Optional[int] = None,
-            mode: str = "auto", rerank: bool = True):
-        views = [_ResilientIndex(self, s, sub_key) for s in self.active]
-        return scatter_gather_knn(
+            mode: str = "auto", rerank: bool = True,
+            deadline_ms: Optional[float] = None):
+        deadline = Deadline.resolve(deadline_ms)
+        views = [_ResilientIndex(self, s, sub_key, deadline=deadline)
+                 for s in self.active]
+        out = scatter_gather_knn(
             views, queries, k, nprobe=nprobe,
             mode=mode, rerank=rerank, stats=None,
             record=self.stats.record_shard_scan,
             pool=self._pool,
-            split_rerank_budget=self.cfg.cluster.split_rerank_budget)
+            split_rerank_budget=self.cfg.cluster.split_rerank_budget,
+            deadline=deadline)
+        if deadline is not None and "partial_topk" in deadline.degradations:
+            self._count("degraded")
+        return out
+
+    def cluster_counters(self) -> Dict[str, int]:
+        out = dict(super().cluster_counters())
+        opens = probes = closes = 0
+        for rs in self.replica_sets:
+            for b in rs.breakers:
+                opens += b.opens
+                probes += b.probes
+                closes += b.closes
+        out["breaker_opens"] = opens
+        out["breaker_probes"] = probes
+        out["breaker_closes"] = closes
+        return out
 
     def explain(self, text: str) -> Dict[str, Any]:
         out = super().explain(text)
         out["replication"] = self.replication
         out["alive"] = {s: list(self.replica_sets[s].alive)
                         for s in range(self.n_shards)}
+        out["breakers"] = {s: [b.state for b in self.replica_sets[s].breakers]
+                           for s in range(self.n_shards)}
         out["hedge_deadline_s"] = {s: self.stats.hedge_deadline(s)
                                    for s in self.active}
         return out

@@ -114,6 +114,12 @@ class CostModelConfig:
     #                                          fall in [lo, hi] and escalate to
     #                                          the exact φ before any cascade
     #                                          has been observed
+    # -- deadline-driven degradation ladder --
+    accuracy_relax_notch: float = 0.05       # one ladder step lowers a
+    #                                          cascade's WITH ACCURACY target
+    #                                          by this much (never below
+    #                                          accuracy_relax_floor)
+    accuracy_relax_floor: float = 0.5
 
 
 @dataclass(frozen=True)
@@ -142,6 +148,20 @@ class ClusterConfig:
     #                                per-shard pools exact in practice)
     rebalance_skew: float = 2.0    # max/mean owned-rows ratio above which
     #                                the Rebalancer proposes moves
+    # -- end-to-end deadlines --
+    default_deadline_ms: int = 0   # per-query budget applied when run() names
+    #                                none; 0 = queries have no deadline
+    close_drain_s: float = 2.0     # close() budget for draining in-flight
+    #                                hedge legs (was a hard-coded wait(2.0))
+    # -- per-replica circuit breakers --
+    breaker_failures: int = 2      # consecutive failures (or slow calls) that
+    #                                flip a replica's breaker open; <= read
+    #                                retries so a flapping replica fails over
+    #                                inside one statement's retry budget
+    breaker_reset_s: float = 0.25  # open -> half-open cool-down before one
+    #                                timed probe is allowed through
+    breaker_slow_call_s: float = 0.0   # reads slower than this count as
+    #                                failures (0 = slow-call tracking off)
 
 
 @dataclass(frozen=True)
@@ -156,6 +176,25 @@ class CascadeConfig:
 
 
 @dataclass(frozen=True)
+class ServingConfig:
+    """QueryServer admission control: shed early, degrade gracefully,
+    never let an unbounded queue turn overload into collapse."""
+
+    queue_depth: int = 0            # bounded request queue; 0 = unbounded
+    #                                 (the seed's behavior)
+    admission_policy: str = "reject"   # queue-full policy: "reject" bounces
+    #                                 the new request, "drop_oldest" evicts
+    #                                 the request that has waited longest
+    #                                 (it is the most likely to be expired)
+    default_deadline_ms: int = 0    # budget stamped on requests that name
+    #                                 none at submit(); 0 = no deadline
+    shed_on_arrival: bool = True    # refuse requests whose estimated queue
+    #                                 wait + service time already exceeds
+    #                                 their remaining budget (only requests
+    #                                 carrying a deadline are ever shed)
+
+
+@dataclass(frozen=True)
 class PandaDBConfig:
     index: VectorIndexConfig = field(default_factory=VectorIndexConfig)
     blob: BlobStoreConfig = field(default_factory=BlobStoreConfig)
@@ -164,6 +203,7 @@ class PandaDBConfig:
     cost: CostModelConfig = field(default_factory=CostModelConfig)
     cluster: ClusterConfig = field(default_factory=ClusterConfig)
     cascade: CascadeConfig = field(default_factory=CascadeConfig)
+    serving: ServingConfig = field(default_factory=ServingConfig)
     # distributed layout (§VII-A): structure replicated, properties sharded
     replicate_graph_structure: bool = True
     shard_axis: str = "data"

@@ -184,17 +184,25 @@ class AIPMService:
         return out
 
     def submit(self, sub_key: str,
-               items: List[Tuple[int, np.ndarray]]) -> Future:
+               items: List[Tuple[int, np.ndarray]],
+               timeout: Optional[float] = None) -> Future:
+        """``timeout`` bounds the backpressure block when the bounded queue
+        is full (a deadline-carrying query passes its remaining budget; the
+        default is the global ``timeout_ms`` knob)."""
         if self._shutdown:
             raise RuntimeError("AIPMService is shut down")
         req = AIPMRequest(sub_key, items)
-        self._queue.put(req, timeout=self.cfg.timeout_ms / 1000)
+        self._queue.put(req, timeout=(self.cfg.timeout_ms / 1000
+                                      if timeout is None else timeout))
         return req.future
 
     def extract_sync(self, sub_key: str,
-                     items: List[Tuple[int, np.ndarray]]) -> Dict[int, np.ndarray]:
-        return self.submit(sub_key, items).result(
-            timeout=self.cfg.timeout_ms / 1000)
+                     items: List[Tuple[int, np.ndarray]],
+                     timeout: Optional[float] = None) -> Dict[int, np.ndarray]:
+        if timeout is None:
+            timeout = self.cfg.timeout_ms / 1000
+        return self.submit(sub_key, items, timeout=timeout).result(
+            timeout=timeout)
 
     def pending(self) -> int:
         """Requests queued but not yet picked up (approximate)."""

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -195,6 +195,43 @@ class StatisticsService:
         scan = self.fused_scan_speed() * q * n_total
         rerank = self.knn_scan_speed() * q * k_prime
         return probe + scan + rerank
+
+    def negotiate_knn_budget(self, index, q: int, nprobe: int, k: int,
+                             remaining_s: float
+                             ) -> Tuple[int, bool, List[str]]:
+        """Degradation ladder for one index kNN under a deadline: given the
+        planned probe width and the budget still left, walk the ladder until
+        the estimated cost fits (or the cheapest shape is reached).
+
+        Step 1 -- ``skip_rerank``: drop the exact PQ re-rank and return raw
+        ADC scores (callers flag the result ``approximate``).  Step 2 --
+        ``cap_nprobe``: halve the probe width down to 1 bucket.  Returns
+        ``(nprobe, rerank, steps)``; with a comfortable budget (or a plain
+        float index where no step applies) everything is unchanged and
+        ``steps`` is empty, so no-deadline behavior is untouched."""
+        steps: List[str] = []
+        rerank = True
+        m = index.centroids.shape[0]
+        has_pq = index.pq is not None and index.codes is not None
+        k_prime = index.cfg.rerank_mult * k if has_pq else 0
+
+        def est(npb: int, kp: int) -> float:
+            if has_pq:
+                return self.pq_cost(index.n_total, m, npb, q, kp)
+            return self.knn_cost(index.n_total, m, npb, q)
+
+        if remaining_s <= 0 or est(nprobe, k_prime) <= remaining_s:
+            return nprobe, rerank, steps
+        if k_prime:
+            steps.append("skip_rerank")
+            rerank, k_prime = False, 0
+            if est(nprobe, 0) <= remaining_s:
+                return nprobe, rerank, steps
+        if nprobe > 1:
+            steps.append("cap_nprobe")
+            while nprobe > 1 and est(nprobe, k_prime) > remaining_s:
+                nprobe = max(1, nprobe // 2)
+        return nprobe, rerank, steps
 
     def choose_knn_scan(self, index, q: int = 1, k: int = 10) -> str:
         """Scan layout for this query batch, from the observed throughputs:

@@ -48,14 +48,18 @@ class PandaDB:
 
     def session(self, batch_rows: Optional[int] = None,
                 use_cache: bool = True,
-                prefetch_depth: Optional[int] = None) -> Session:
+                prefetch_depth: Optional[int] = None,
+                deadline_ms: Optional[float] = None) -> Session:
         """Open a driver session: ``prepare()``/``run()``/transactions.
         Sessions share this db's plan cache; one session per worker thread.
         ``prefetch_depth`` overrides the AIPMConfig default for how many
         chunks of φ extraction are kept in flight ahead of the semantic
-        filter (0 = fully synchronous extraction)."""
+        filter (0 = fully synchronous extraction).  ``deadline_ms`` is the
+        session's default per-query budget (run(deadline_ms=) overrides per
+        statement; ``ClusterConfig.default_deadline_ms`` backstops both)."""
         kwargs: Dict[str, Any] = {"use_cache": use_cache,
-                                  "prefetch_depth": prefetch_depth}
+                                  "prefetch_depth": prefetch_depth,
+                                  "deadline_ms": deadline_ms}
         if batch_rows is not None:
             kwargs["batch_rows"] = batch_rows
         return Session(self, **kwargs)

@@ -39,12 +39,14 @@ from __future__ import annotations
 import time
 from collections import deque
 from concurrent.futures import CancelledError, Future
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import logical_plan as lp
 from repro.core.cascade import route_scores
+from repro.core.deadline import Deadline, DeadlineExceeded
 from repro.core.cypherplus import (
     BoolOp,
     Compare,
@@ -65,7 +67,8 @@ DEFAULT_BATCH_ROWS = 256
 
 class ExecutionContext:
     def __init__(self, db, params: Optional[Dict[str, Any]] = None,
-                 prefetch_depth: Optional[int] = None) -> None:
+                 prefetch_depth: Optional[int] = None,
+                 deadline: Optional[Deadline] = None) -> None:
         self.db = db
         self.graph = db.graph
         self.stats = db.stats
@@ -96,6 +99,21 @@ class ExecutionContext:
         self.cascade_chunks = 0     # chunks routed through the cascade path
         self._pushdown_memo: Dict[int, Any] = {}   # plan id -> index matches
         self._func_memo: Dict[int, Any] = {}       # expr id -> blob tag
+        #: per-query time budget shared with every other leg of the same
+        #: query (shard streams, hedge races); None = no deadline, and every
+        #: deadline check below compiles to a no-op
+        self.deadline = deadline
+
+    def check_deadline(self, where: str) -> None:
+        if self.deadline is not None:
+            self.deadline.check(where)
+
+    def wait_timeout(self, default_s: float) -> float:
+        """Blocking-wait budget: the configured timeout clamped to the
+        query's remaining deadline (the global knob when none is set)."""
+        if self.deadline is None:
+            return default_s
+        return self.deadline.clamp(default_s)
 
 
 def _rows(b: Bindings) -> int:
@@ -149,12 +167,16 @@ class PhiBatch:
         self.aipm_future = aipm_future
 
     def join(self) -> None:
-        ctx, timeout = self.ctx, self.ctx.aipm.cfg.timeout_ms / 1000
+        ctx, default_t = self.ctx, self.ctx.aipm.cfg.timeout_ms / 1000
         if self.aipm_future is not None:
             try:
-                out = self.aipm_future.result(timeout=timeout)
+                out = self.aipm_future.result(
+                    timeout=ctx.wait_timeout(default_t))
             except CancelledError:
                 pass                        # fall through to the sync retry
+            except FuturesTimeoutError:
+                self._deadline_abort("phi join")
+                raise
             else:
                 # consume the result directly: Future.result() can return
                 # before the done-callback has filled the cache (waiters are
@@ -164,15 +186,21 @@ class PhiBatch:
                                   out.get(key[0]))
         for f in self.borrowed.values():
             try:
-                f.result(timeout=timeout)   # owner's callback fills the cache
+                f.result(timeout=ctx.wait_timeout(default_t))
+            except FuturesTimeoutError:     # borrow timed out: maybe expired
+                self._deadline_abort("phi borrow")
+                pass                        # no deadline: retry below
             except (CancelledError, Exception):  # noqa: BLE001
                 pass                        # owner bailed/failed: retry below
         retry = [b for b in self.bids
                  if ctx.cache.peek(b, self.sub_key, self.serial) is None]
         if retry:
+            self._deadline_abort("phi sync retry")
             items = [(b, ctx.graph.blobs.as_array(b)) for b in retry]
             ctx.extract_count += len(items)
-            for bid, vec in ctx.aipm.extract_sync(self.sub_key, items).items():
+            out = ctx.aipm.extract_sync(self.sub_key, items,
+                                        timeout=ctx.wait_timeout(default_t))
+            for bid, vec in out.items():
                 ctx.cache.put(bid, self.sub_key, self.serial, vec)
 
     def cancel(self) -> None:
@@ -182,6 +210,26 @@ class PhiBatch:
             # means a worker already took it -- the callback will resolve
             # the claims normally, so nothing is ever orphaned either way
             self.aipm_future.cancel()
+
+    def abort(self) -> None:
+        """Owner is bailing out (deadline expiry): withdraw the AIPM request
+        if still queued and *discard every owned claim* even if a worker is
+        already extracting.  Borrowers' futures are cancelled, so they fail
+        over to their own extraction instead of blocking on an orphan until
+        the global timeout.  A late done-callback resolving the already-
+        popped keys is a no-op; the cache still gets the values."""
+        if self.aipm_future is not None:
+            self.aipm_future.cancel()
+        for key, _f in self.owned:
+            self.ctx.inflight.discard(key)
+
+    def _deadline_abort(self, where: str) -> None:
+        """When this batch's query has run out of budget, release claims and
+        raise; otherwise return and let the caller keep trying."""
+        d = self.ctx.deadline
+        if d is not None and d.expired():
+            self.abort()
+            d.check(where)
 
 
 def _begin_extraction(ctx: ExecutionContext, sub_key: str,
@@ -210,10 +258,13 @@ def _begin_extraction(ctx: ExecutionContext, sub_key: str,
                  for key, _f in owned]
         ctx.extract_count += len(items)
         try:
-            aipm_future = ctx.aipm.submit(sub_key, items)
+            aipm_future = ctx.aipm.submit(
+                sub_key, items,
+                timeout=ctx.wait_timeout(ctx.aipm.cfg.timeout_ms / 1000))
         except Exception:
             for key, _f in owned:
                 ctx.inflight.discard(key)
+            ctx.check_deadline("phi submit")   # Full + expired -> typed error
             raise
         inflight, cache = ctx.inflight, ctx.cache
 
@@ -567,6 +618,23 @@ def _cascade_spec(plan: lp.SemanticFilter,
     if thr is None:
         return None
     n_est = ctx.stats.estimate_rows(plan.child)
+    if ctx.deadline is not None:
+        # degradation ladder: when the estimated cascade cost does not fit
+        # the remaining budget, relax the accuracy target one notch -- a
+        # wider confident region escalates fewer rows to the exact φ
+        rem = ctx.deadline.remaining()
+        est = ctx.stats.cascade_cost(n_est, sub_key, thr.expected_escalation)
+        if 0 < rem < est:
+            cost_cfg = ctx.db.cfg.cost
+            relaxed = max(cost_cfg.accuracy_relax_floor,
+                          acc - cost_cfg.accuracy_relax_notch)
+            if relaxed < acc:
+                thr2 = calibrator.thresholds(
+                    sub_key, ctx.registry.serial(sub_key),
+                    ctx.registry.serial(pk), relaxed)
+                if thr2 is not None:
+                    thr = thr2
+                    ctx.deadline.note_degradation("relax_accuracy")
     if ctx.stats.choose_semantic_path(
             sub_key, n_est, True, thr.expected_escalation) != "cascade":
         return None
@@ -836,6 +904,10 @@ def _execute_iter_core(plan: lp.PlanOp, ctx: ExecutionContext,
     it = _iter_bindings(plan, ctx, batch_rows)
     try:
         for chunk in it:
+            # chunk-boundary deadline check: the budget contract is "never
+            # exceed the deadline by more than one chunk interval", and this
+            # is the one place every streaming plan passes once per chunk
+            ctx.check_deadline("chunk boundary")
             ids = (np.asarray(chunk[anchor], np.int64)
                    if anchor is not None else None)
             if proj is not None:
@@ -1128,8 +1200,18 @@ def _index_matches(index, qvecs: np.ndarray,
     n_index = index.n_total
     nprobe = ctx.stats.choose_knn_nprobe(index, q=qvecs.shape[0])
     k = min(max(64, ctx.graph.n_nodes // 10 + 1), n_index)
+    rerank = True
+    if ctx.deadline is not None:
+        # degradation ladder: with a tight budget the cost model may skip
+        # the exact PQ re-rank (scores become ADC approximations) and/or
+        # cap the probe width; each step lands in the query's degradations
+        nprobe, rerank, steps = ctx.stats.negotiate_knn_budget(
+            index, qvecs.shape[0], nprobe, k, ctx.deadline.remaining())
+        for step in steps:
+            ctx.deadline.note_degradation(
+                step, approximate=(step == "skip_rerank"))
     while True:
-        vals, ids = index.search_many(qvecs, k, nprobe=nprobe,
+        vals, ids = index.search_many(qvecs, k, nprobe=nprobe, rerank=rerank,
                                       stats=ctx.stats)
         ok = vals >= thr
         if int(ok.sum(axis=1).max(initial=0)) < k or k >= n_index:

@@ -37,6 +37,7 @@ from repro.core.cypherplus import (
     parse_query,
     query_params,
 )
+from repro.core.deadline import Deadline
 from repro.core.executor import (
     DEFAULT_BATCH_ROWS,
     ExecutionContext,
@@ -297,9 +298,30 @@ class Cursor:
         self._buf: "deque[Dict]" = deque()
         self._exhausted = plan is None
         self.batches_fetched = 0
+        self._deadline = None   # ClusterCursor sets this (it has no ctx)
 
     def keys(self) -> Tuple[str, ...]:
         return self._keys
+
+    @property
+    def deadline(self):
+        """The query's shared budget object (None when no deadline)."""
+        if self._deadline is not None:
+            return self._deadline
+        return self.context.deadline if self.context is not None else None
+
+    @property
+    def degradations(self) -> List[str]:
+        """Ladder steps taken to meet the deadline (empty = exact path)."""
+        d = self.deadline
+        return list(d.degradations) if d is not None else []
+
+    @property
+    def approximate(self) -> bool:
+        """True when any returned score is an ADC approximation rather
+        than an exact re-ranked value (``skip_rerank`` was taken)."""
+        d = self.deadline
+        return bool(d is not None and d.approximate)
 
     def _next_batch(self) -> Optional[List[Dict]]:
         """Pull one batch; each pull runs under the read lock so a writer
@@ -386,10 +408,12 @@ class PreparedStatement:
         self.param_names = frozenset(query_params(self.query))
 
     def run(self, parameters: Optional[Dict[str, Any]] = None,
-            optimized: bool = True, **params: Any) -> Cursor:
+            optimized: bool = True,
+            deadline_ms: Optional[float] = None, **params: Any) -> Cursor:
         return self.session._run_parsed(self.skeleton, self.query,
                                         {**(parameters or {}), **params},
-                                        optimized=optimized, text=self.text)
+                                        optimized=optimized, text=self.text,
+                                        deadline_ms=deadline_ms)
 
     def explain(self) -> Dict[str, Any]:
         return self.session.explain(self.text)
@@ -493,12 +517,17 @@ class Session:
     def __init__(self, db, batch_rows: int = DEFAULT_BATCH_ROWS,
                  plan_cache: Optional[PlanCache] = None,
                  use_cache: bool = True,
-                 prefetch_depth: Optional[int] = None) -> None:
+                 prefetch_depth: Optional[int] = None,
+                 deadline_ms: Optional[float] = None) -> None:
         self.db = db
         self.batch_rows = batch_rows
         #: per-session φ prefetch window (None = AIPMConfig default); serving
         #: workers tune this per workload without touching the shared config
         self.prefetch_depth = prefetch_depth
+        #: default per-query budget for every run() that names none
+        #: (run(deadline_ms=) overrides; ClusterConfig.default_deadline_ms
+        #: backstops both; None/0 anywhere = no deadline)
+        self.deadline_ms = deadline_ms
         self.cache: Optional[PlanCache] = (
             plan_cache if plan_cache is not None
             else (db.plan_cache if use_cache else None))
@@ -522,45 +551,52 @@ class Session:
         return PreparedStatement(self, text)
 
     def run(self, text: str, parameters: Optional[Dict[str, Any]] = None,
-            optimized: bool = True, **params: Any) -> Cursor:
+            optimized: bool = True,
+            deadline_ms: Optional[float] = None, **params: Any) -> Cursor:
         """Parse (cached), optimize (cached), execute; returns a streaming
         :class:`Cursor`.  CREATE statements return an empty cursor.
 
         Bind ``$name`` placeholders as keyword args, or -- for names that
-        collide with this method's own arguments (``text``, ``optimized``)
-        -- via the neo4j-style ``parameters`` dict; kwargs win on overlap."""
+        collide with this method's own arguments (``text``, ``optimized``,
+        ``deadline_ms``) -- via the neo4j-style ``parameters`` dict; kwargs
+        win on overlap.  ``deadline_ms`` is this statement's end-to-end
+        budget (a number, or an already-ticking
+        :class:`~repro.core.deadline.Deadline`)."""
         if self._closed:
             raise RuntimeError("session is closed")
         params = {**(parameters or {}), **params}
         skeleton = skeleton_of(text)
         if self.cache is None or skeleton[:6].upper() == "CREATE":
             return self._run_parsed(skeleton, parse_query(text), params,
-                                    optimized=optimized, text=text)
+                                    optimized=optimized, text=text,
+                                    deadline_ms=deadline_ms)
         # fast path: resolve through the plan cache without parsing
         self.db.stats.refresh_from_graph(self.db.graph)
         self.db.stats.refresh_extractor_stats(self.db.registry)
         key = (skeleton, optimized, self.db.stats.epoch)
         q, plan = self.cache.get_or_build(
             key, lambda: self._parse_and_plan(text, optimized))
-        return self._execute(q, plan, params, text)
+        return self._execute(q, plan, params, text, deadline_ms=deadline_ms)
 
     def _run_parsed(self, skeleton: str, q: Query, params: Dict[str, Any],
-                    optimized: bool, text: str) -> Cursor:
+                    optimized: bool, text: str,
+                    deadline_ms: Optional[float] = None) -> Cursor:
         """Execute an already-parsed query (run() and PreparedStatement
         both land here)."""
         if self._closed:
             raise RuntimeError("session is closed")
         if isinstance(q, CreateQuery):
-            return self._execute(q, None, params, text)
+            return self._execute(q, None, params, text,
+                                 deadline_ms=deadline_ms)
         self.db.stats.refresh_from_graph(self.db.graph)
         self.db.stats.refresh_extractor_stats(self.db.registry)
         if self.cache is None:
             return self._execute(q, plan_query(self.db, q, optimized),
-                                 params, text)
+                                 params, text, deadline_ms=deadline_ms)
         key = (skeleton, optimized, self.db.stats.epoch)
         _, plan = self.cache.get_or_build(
             key, lambda: (q, plan_query(self.db, q, optimized)))
-        return self._execute(q, plan, params, text)
+        return self._execute(q, plan, params, text, deadline_ms=deadline_ms)
 
     def _parse_and_plan(self, text: str,
                         optimized: bool) -> Tuple[Query, Optional[lp.PlanOp]]:
@@ -570,13 +606,18 @@ class Session:
         return q, plan_query(self.db, q, optimized)
 
     def _execute(self, q: Query, plan: Optional[lp.PlanOp],
-                 params: Dict[str, Any], text: str) -> Cursor:
+                 params: Dict[str, Any], text: str,
+                 deadline_ms: Optional[float] = None) -> Cursor:
         missing = query_params(q) - set(params)
         if missing:
             raise KeyError(f"unbound parameters: "
                            f"{', '.join('$' + m for m in sorted(missing))}")
+        deadline = Deadline.resolve(
+            deadline_ms, self.deadline_ms,
+            self.db.cfg.cluster.default_deadline_ms)
         ctx = ExecutionContext(self.db, params,
-                               prefetch_depth=self.prefetch_depth)
+                               prefetch_depth=self.prefetch_depth,
+                               deadline=deadline)
         if isinstance(q, CreateQuery):
             self._execute_write(q, text, params)
             return Cursor(ctx, None)

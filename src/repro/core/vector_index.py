@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import wait as futures_wait
 from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -150,7 +151,8 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
                        k: int, nprobe: Optional[int] = None,
                        mode: str = "auto", rerank: bool = True,
                        stats=None, record: Optional[Callable] = None,
-                       pool=None, split_rerank_budget: bool = False
+                       pool=None, split_rerank_budget: bool = False,
+                       deadline=None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """THE cluster merge schedule: per-shard ``search_many`` (ADC, float or
     fused, per each shard's cost-model call) -> one-dispatch k-way
@@ -180,7 +182,15 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
     constant as shards are added.  The merged result is the exact top-k of
     a candidate pool that hash-sharding spreads ~budget/P per shard, so
     it matches the unsharded pool in practice (the bench asserts it);
-    residual PQ tightens ADC ordering precisely so this split is safe."""
+    residual PQ tightens ADC ordering precisely so this split is safe.
+
+    ``deadline`` (a :class:`~repro.core.deadline.Deadline`, optional) is
+    the degradation ladder's last resort: shards whose scans miss the
+    remaining budget are *dropped* and the merge returns partial top-k
+    from the shards that answered -- the padding contract above already
+    guarantees dropped contributions surface as (-inf, -1) slots, never
+    as fabricated candidates.  ``partial_topk`` is noted on the deadline;
+    if NO shard answers in time, :class:`DeadlineExceeded` is raised."""
     queries = np.asarray(queries, np.float32)
     qn = queries.shape[0]
     out_v = np.full((qn, k), -np.inf, np.float32)
@@ -204,8 +214,38 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
             record(s, time.perf_counter() - t0, shards[s].scan_rows - rows0)
         return v, i
 
+    pad = (np.full((qn, k), -np.inf, np.float32),
+           np.full((qn, k), -1, np.int64))
     if pool is not None and len(shards) > 1:
-        parts = list(pool.map(scan_one, range(len(shards))))
+        if deadline is None:
+            parts = list(pool.map(scan_one, range(len(shards))))
+        else:
+            futs = [pool.submit(scan_one, s) for s in range(len(shards))]
+            futures_wait(futs, timeout=max(0.0, deadline.remaining()))
+            parts, answered = [], 0
+            for f in futs:
+                if f.done() and f.exception() is None:
+                    parts.append(f.result())
+                    answered += 1
+                else:
+                    f.cancel()      # queued legs are withdrawn; running
+                    parts.append(pad)   # legs finish unobserved
+            if answered == 0:
+                deadline.check("knn scatter")
+            if answered < len(shards):
+                deadline.note_degradation("partial_topk")
+    elif deadline is not None:
+        parts, answered = [], 0
+        for s in range(len(shards)):
+            if deadline.expired():
+                if answered == 0:
+                    deadline.check("knn scatter")
+                parts.append(pad)   # serial last resort: keep what we have
+                continue
+            parts.append(scan_one(s))
+            answered += 1
+        if answered < len(shards):
+            deadline.note_degradation("partial_topk")
     else:
         parts = [scan_one(s) for s in range(len(shards))]
     v, i = merge_topk_dev(jnp.stack([jnp.asarray(p[0]) for p in parts]),

@@ -10,6 +10,13 @@ Cluster modes (paper §VII-A):
   # replicated + chaos: a replica is fail-stopped mid-run; the server must
   # stay up (failover + hedged reads mask it) and reports what it did
   PYTHONPATH=src python -m repro.launch.serve --shards 2 --replicas 2 --chaos
+
+Overload mode (deadlines + admission control, §VII overload regime):
+
+  # open-loop at ~2x measured capacity with per-request deadlines and a
+  # bounded queue; prints goodput and the shed/expired/degraded/breaker
+  # counters so the load-shedding path is observable from the CLI
+  PYTHONPATH=src python -m repro.launch.serve --overload --deadline-ms 100
 """
 import argparse
 import json
@@ -18,7 +25,7 @@ import threading
 import numpy as np
 
 from repro.cluster import FaultInjector, ReplicatedPandaDB, ShardedPandaDB
-from repro.configs.pandadb import PandaDBConfig, VectorIndexConfig
+from repro.configs.pandadb import PandaDBConfig, ServingConfig, VectorIndexConfig
 from repro.core import PandaDB
 from repro.core.aipm import feature_hash_extractor, label_extractor
 from repro.data.synthetic_graph import SNBConfig, build_snb
@@ -75,6 +82,31 @@ CLUSTER_QUERIES = [
 ]
 
 
+def run_overload(db, queries, args) -> None:
+    """Measure closed-loop capacity, then offer ~2x open-loop with
+    per-request deadlines and a bounded admission queue; print goodput and
+    every overload counter (plus breaker states on a replicated cluster)."""
+    probe = QueryServer(db, n_workers=args.workers)
+    cap = probe.run_closed_loop(queries, n_clients=args.clients,
+                                duration_s=max(1.0, args.duration / 2))
+    capacity_qps = cap.throughput_qps
+    print(json.dumps({"capacity_qps": capacity_qps}, indent=1))
+
+    serving = ServingConfig(queue_depth=args.queue_depth,
+                            admission_policy="reject",
+                            default_deadline_ms=args.deadline_ms,
+                            shed_on_arrival=True)
+    server = QueryServer(db, n_workers=args.workers, serving=serving)
+    summary = server.run_open_loop(
+        queries, rate_qps=max(2.0, 2.0 * capacity_qps),
+        duration_s=args.duration, deadline_ms=args.deadline_ms)
+    server.close()
+    print("overload:", json.dumps(summary, indent=1))
+    print("counters:", json.dumps(server.route_counts(), indent=1))
+    if hasattr(db, "close"):
+        db.close()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--persons", type=int, default=200)
@@ -88,6 +120,14 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="fail-stop shard 0 replica 0 mid-run (needs "
                          "--replicas >= 2)")
+    ap.add_argument("--overload", action="store_true",
+                    help="open-loop overload mode: measure capacity, then "
+                         "offer ~2x with per-request deadlines + admission "
+                         "control and print shed/expired/degraded counters")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="per-request budget in --overload mode")
+    ap.add_argument("--queue-depth", type=int, default=32,
+                    help="admission queue bound in --overload mode")
     args = ap.parse_args()
 
     if args.chaos and args.replicas < 2:
@@ -101,6 +141,10 @@ def main() -> None:
     else:
         db = build_db(args.persons)
         queries = QUERIES
+
+    if args.overload:
+        run_overload(db, queries, args)
+        return
 
     server = QueryServer(db, n_workers=args.workers)
     killer = None

@@ -1,0 +1,597 @@
+"""End-to-end deadlines, admission control, graceful degradation (PR 9).
+
+Contracts pinned here:
+
+* a :class:`Deadline` is one shared wall-clock budget per query; every
+  layer clamps its waits to it and ``deadline_ms=None`` (or a generous
+  budget that never binds) is **byte-identical** to a build without
+  deadlines -- single node, sharded, and replicated,
+* expiry surfaces as :class:`DeadlineExceeded` within about one chunk
+  interval, never after the AIPM's global timeout,
+* an owner aborting on expiry *discards* its InflightTable claims -- even
+  mid-extraction -- so cross-session borrowers fail over to their own
+  extraction instead of orphaning,
+* the serving engine's bounded queue rejects or drops-oldest per policy,
+  sheds doomed requests on arrival (service-time EWMA vs remaining
+  budget), expires queued requests without occupying a worker, and its
+  ``close()`` is idempotent + event-driven (no polling),
+* the degradation ladder (skip_rerank / cap_nprobe / relax_accuracy /
+  partial_topk) engages only under a binding deadline and is recorded on
+  the cursor,
+* per-replica circuit breakers open on consecutive failures or fail-stop,
+  admit a single half-open probe after ``revive()``, and close on probe
+  success -- with bounded retries throughout.
+"""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import (AIPMConfig, PandaDBConfig, ServingConfig)
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor, label_extractor
+from repro.core.cost_model import StatisticsService
+from repro.core.deadline import Deadline, DeadlineExceeded, OverloadedError
+from repro.cluster import (FaultInjector, ReplicatedPandaDB, ShardedPandaDB)
+from repro.cluster.replication import CircuitBreaker
+from repro.serving.engine import QueryServer
+
+DIM = 32
+N_NODES = 72
+
+
+def wait_until(pred, timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return pred()
+
+
+class Gate:
+    """Extractor throttle: signals entry, blocks until released."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def wrap(self, inner):
+        def fn(raws):
+            self.entered.set()
+            assert self.release.wait(30), "gate never released"
+            return inner(raws)
+        return fn
+
+
+def make_pet_db(n=24, extractor=None, seed=3, **aipm_kw):
+    cfg = PandaDBConfig(aipm=AIPMConfig(**aipm_kw)) if aipm_kw else None
+    db = PandaDB(cfg)
+    db.register_extractor("animal",
+                          extractor or label_extractor(["cat", "dog", "bird"]))
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        db.graph.create_node("Pet", name=f"pet_{i}", idx=float(i),
+                             photo=rng.bytes(256))
+    return db
+
+
+SEM_TEXT = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+
+
+def _payloads(n=N_NODES, seed=4):
+    rng = np.random.default_rng(seed)
+    return [rng.bytes(256) for _ in range(n)]
+
+
+PAYLOADS = _payloads()
+
+
+def _populate(db, payloads=PAYLOADS):
+    db.register_extractor("face", feature_hash_extractor(dim=DIM))
+    cn = db.create_node if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_node
+    cr = db.create_relationship if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_relationship
+    nodes = [cn("Person", name=f"n{i}", rank=float(i % 7),
+                photo=payloads[i]) for i in range(len(payloads))]
+    for i in range(len(payloads) - 1):
+        cr(nodes[i], nodes[i + 1], "KNOWS")
+    return db
+
+
+def make_replicated(n_shards=2, replication=2, seed=0, hedge=False,
+                    indexed=False, **cluster_kw):
+    faults = FaultInjector(seed=seed)
+    cfg = PandaDBConfig()
+    cluster = dataclasses.replace(cfg.cluster, hedge_reads=hedge,
+                                  **cluster_kw)
+    cfg = dataclasses.replace(cfg, cluster=cluster)
+    c = _populate(ReplicatedPandaDB(n_shards=n_shards, cfg=cfg,
+                                    replication=replication, faults=faults))
+    if indexed:
+        c.build_index("face", "photo")
+    return c, faults
+
+
+SCAN_Q = "MATCH (p:Person) WHERE p.rank > 1 RETURN p.name, p.rank"
+
+
+# ---------------------------------------------------------------------------
+# Deadline object
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_resolve_precedence():
+    d = Deadline.start(100)
+    assert Deadline.resolve(d, 50, 10) is d          # ticking budget wins
+    fresh = Deadline.resolve(None, 0, 250)
+    assert fresh is not None and 0.2 < fresh.budget_s <= 0.25
+    assert Deadline.resolve(None, 0, None) is None
+
+
+def test_deadline_clamp_check_and_ladder_notes():
+    d = Deadline(budget_s=10.0)
+    assert 0 < d.clamp(5.0) <= 5.0
+    assert d.clamp(1e9) <= 10.0
+    d.note_degradation("skip_rerank", approximate=True)
+    d.note_degradation("skip_rerank")
+    d.note_degradation("cap_nprobe")
+    assert d.degradations == ["skip_rerank", "cap_nprobe"]
+    assert d.approximate
+    late = Deadline(budget_s=0.0)
+    assert late.expired() and late.clamp(3.0) == 0.0
+    with pytest.raises(DeadlineExceeded) as ei:
+        late.check("unit")
+    assert ei.value.where == "unit"
+
+
+def test_overloaded_error_carries_retry_after():
+    e = OverloadedError("queue full", retry_after_s=0.125)
+    assert e.retry_after_s == 0.125
+    assert "125ms" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# byte-identical parity: no deadline == generous deadline
+# ---------------------------------------------------------------------------
+
+
+def test_generous_deadline_byte_identical_single_node():
+    db = make_pet_db(30)
+    want = db.query(SEM_TEXT)
+    cur = db.session().run(SEM_TEXT, deadline_ms=60_000)
+    assert cur.fetchall() == want
+    assert cur.degradations == [] and cur.approximate is False
+    # session-level and config-level defaults thread the same way
+    assert db.session(deadline_ms=60_000).run(SEM_TEXT).fetchall() == want
+
+
+def test_generous_deadline_byte_identical_replicated():
+    c, _ = make_replicated(indexed=True)
+    want_rows = c.query(SCAN_Q)
+    cur = c.session(deadline_ms=60_000).run(SCAN_Q)
+    assert cur.fetchall() == want_rows
+    assert cur.degradations == []
+    q = np.random.default_rng(9).standard_normal((3, DIM)).astype(np.float32)
+    v0, i0 = c.knn("face", q, 5)
+    v1, i1 = c.knn("face", q, 5, deadline_ms=60_000)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(v0), np.asarray(v1))
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# expiry semantics + InflightTable claim discard
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_bounded_not_global_timeout():
+    """A gated φ would block until the AIPM's global timeout (seconds);
+    with a deadline the query fails within ~the budget instead."""
+    gate = Gate()
+    db = make_pet_db(12, extractor=gate.wrap(label_extractor(["cat", "dog"])),
+                     workers=1, timeout_ms=30_000)
+    s = db.session(batch_rows=32, prefetch_depth=1)
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        s.run(SEM_TEXT, deadline_ms=150).fetchall()
+    assert time.perf_counter() - t0 < 5.0        # nowhere near 30s
+    gate.release.set()
+    assert wait_until(lambda: db.inflight.size() == 0)
+
+
+def test_owner_abort_discards_claims_and_borrower_fails_over():
+    """Kill the owner (deadline expiry) mid-claim while a second session is
+    borrowing its φ futures: the claims are discarded *while the extraction
+    worker is still wedged*, and the borrower falls back to its own
+    extraction and completes correctly."""
+    gate = Gate()
+    inner = label_extractor(["cat", "dog", "bird"])
+    db = make_pet_db(12, extractor=gate.wrap(inner), workers=1,
+                     timeout_ms=60_000)
+    twin = make_pet_db(12)                       # ungated ground truth
+    want = twin.query(SEM_TEXT)
+
+    owner_err, borrower_rows = [], []
+
+    def owner():
+        try:
+            db.session(batch_rows=32, prefetch_depth=1).run(
+                SEM_TEXT, deadline_ms=250).fetchall()
+        except BaseException as e:  # noqa: BLE001
+            owner_err.append(e)
+
+    def borrower():
+        borrower_rows.extend(
+            db.session(batch_rows=32, prefetch_depth=1).run(
+                SEM_TEXT).fetchall())
+
+    ta = threading.Thread(target=owner)
+    ta.start()
+    assert gate.entered.wait(10)                 # worker wedged mid-extract
+    tb = threading.Thread(target=borrower)
+    tb.start()
+    ta.join(timeout=10)
+    assert not ta.is_alive()
+    assert owner_err and isinstance(owner_err[0], DeadlineExceeded)
+    # the leak fix under test: claims are gone while the gate is STILL held
+    assert wait_until(lambda: db.inflight.size() == 0, timeout=2.0), \
+        f"owner leaked {db.inflight.size()} claims"
+    gate.release.set()
+    tb.join(timeout=20)
+    assert not tb.is_alive()
+    assert borrower_rows == want
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+
+class _FakePQCfg:
+    rerank_mult = 4
+
+
+class _FakePQIndex:
+    n_total = 200_000
+    centroids = np.zeros((16, 8), np.float32)
+    pq = object()
+    codes = object()
+    cfg = _FakePQCfg()
+
+
+def test_negotiate_knn_budget_ladder_order():
+    stats = StatisticsService()
+    stats.record_knn_scan(10.0, 1)               # 10 s/row: everything is
+    stats.record_pq_scan(10.0, 1)                # too expensive
+    nprobe, rerank, steps = stats.negotiate_knn_budget(
+        _FakePQIndex(), q=1, nprobe=8, k=10, remaining_s=0.001)
+    assert steps == ["skip_rerank", "cap_nprobe"]
+    assert rerank is False and nprobe == 1
+    # a budget the full plan fits inside changes nothing
+    assert stats.negotiate_knn_budget(
+        _FakePQIndex(), q=1, nprobe=8, k=10, remaining_s=1e9) == (8, True, [])
+
+
+def test_cascade_relax_accuracy_under_pressure():
+    """When the cost model prices the cascade above the remaining budget,
+    the accuracy target relaxes one notch and the step is recorded -- while
+    the same query without a deadline is untouched."""
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=DIM))
+    db.register_proxy("face", feature_hash_extractor(dim=4, seed=99))
+    rng = np.random.default_rng(3)
+    base = rng.bytes(256)
+    for i in range(64):
+        db.graph.create_node("Person", name=f"n{i}",
+                             photo=base if i % 6 == 0 else rng.bytes(256))
+    db.calibrate_cascade("face", "photo", sample=60, pairs=500, seed=5)
+    q = ("MATCH (p:Person) WHERE p.photo->face ~: "
+         "createFromSource($src)->face RETURN p.name WITH ACCURACY 0.9")
+    cur0 = db.session().run(q, {"src": base})
+    cur0.fetchall()
+    assert cur0.degradations == []
+    # inflate the priced proxy cost so ~any~ budget looks too small, while
+    # the actual work stays fast enough to finish well inside the budget
+    db.stats.record_proxy_scan(100.0, 1)
+    cur = db.session().run(q, {"src": base}, deadline_ms=60_000)
+    rows = cur.fetchall()
+    assert "relax_accuracy" in cur.degradations
+    # relaxed one notch, not abandoned: results stay within the wider band
+    truth = {r["p.name"] for r in db.query(
+        "MATCH (p:Person) WHERE p.photo->face ~: "
+        "createFromSource($src)->face RETURN p.name", {"src": base})}
+    got = {r["p.name"] for r in rows}
+    assert len(truth ^ got) <= np.ceil(
+        (1 - 0.9 + db.cfg.cost.accuracy_relax_notch) * 64)
+
+
+@pytest.mark.chaos
+def test_partial_topk_from_answering_shards():
+    """A shard whose replicas are all slow past the budget contributes
+    padding instead of stalling the merge; the cursor records the
+    ``partial_topk`` step and the coordinator counts a degraded query."""
+    c, faults = make_replicated(indexed=True)
+    q = np.random.default_rng(9).standard_normal((2, DIM)).astype(np.float32)
+    v_full, i_full = c.knn("face", q, 4)
+    for r in range(c.replication):
+        faults.slow(1, r, delay_s=1.0)
+    t0 = time.perf_counter()
+    v, i = c.knn("face", q, 4, deadline_ms=200)
+    assert time.perf_counter() - t0 < 2.0
+    assert c.cluster_counters()["degraded"] >= 1
+    # answered shard's hits survive (real ids), the stalled shard shows up
+    # only as -inf/-1 padding -- never as fabricated neighbors
+    assert np.asarray(i).shape == np.asarray(i_full).shape
+    got_i, got_v = np.asarray(i), np.asarray(v)
+    assert (got_i >= 0).any()
+    assert np.array_equal(got_i == -1, np.isneginf(got_v))
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# circuit breakers
+# ---------------------------------------------------------------------------
+
+
+def test_circuit_breaker_unit_lifecycle():
+    b = CircuitBreaker(failures=2, reset_s=0.05)
+    assert b.allow() and b.state == b.CLOSED
+    b.record_failure()
+    assert b.state == b.CLOSED                   # 1 < threshold
+    b.record_failure()
+    assert b.state == b.OPEN and b.opens == 1
+    assert not b.allow()                         # cool-down refuses
+    time.sleep(0.06)
+    assert b.allow()                             # the half-open probe
+    assert b.state == b.HALF_OPEN and b.probes == 1
+    assert not b.allow()                         # only one probe at a time
+    b.record_failure()                           # probe failed -> reopen
+    assert b.state == b.OPEN and b.opens == 2
+    time.sleep(0.06)
+    assert b.allow()
+    b.record_success()
+    assert b.state == b.CLOSED and b.closes == 1
+    # slow calls count as failures when the threshold is enabled
+    slow = CircuitBreaker(failures=1, reset_s=0.05, slow_call_s=0.01)
+    slow.record_success(latency_s=0.5)
+    assert slow.state == slow.OPEN
+
+
+@pytest.mark.chaos
+def test_breaker_opens_on_repeated_transient_errors():
+    """Persistent per-call errors trip the replica's breaker after the
+    configured consecutive-failure budget; the statement then fails over to
+    the sibling with retries bounded by ``read_retries``."""
+    c, faults = make_replicated()
+    want = c.query(SCAN_Q)
+    faults.error_on_call(0, 0, times=8)
+    assert c.query(SCAN_Q) == want
+    counters = c.cluster_counters()
+    assert counters["breaker_opens"] >= 1
+    assert 1 <= counters["retries"] <= c.cfg.cluster.read_retries
+    assert c.replica_sets[0].breakers[0].state == CircuitBreaker.OPEN
+    # the single injected transient of the legacy contract still retries
+    # on the same replica without opening anything
+    faults.heal(0, 0)
+    c.close()
+
+
+@pytest.mark.chaos
+def test_breaker_halfopen_probe_recovers_after_revive():
+    """Fail-stop opens the breaker; ``revive()`` arms a single half-open
+    probe (no thundering herd) whose success closes the breaker and returns
+    the replica to rotation -- proven by killing the sibling so the revived
+    replica is the only one able to serve."""
+    c, faults = make_replicated()
+    want = c.query(SCAN_Q)
+    faults.fail_stop(0, 0)
+    assert c.query(SCAN_Q) == want               # failover masks the kill
+    b = c.replica_sets[0].breakers[0]
+    assert b.state == CircuitBreaker.OPEN
+    assert c.cluster_counters()["breaker_opens"] >= 1
+    c.revive(0, 0)
+    assert b.state == CircuitBreaker.HALF_OPEN
+    faults.fail_stop(0, 1)                       # revived replica or bust
+    assert c.query(SCAN_Q) == want
+    assert b.state == CircuitBreaker.CLOSED
+    assert b.probes >= 1 and b.probes <= 2       # one probe, not a herd
+    counters = c.cluster_counters()
+    assert counters["breaker_closes"] >= 1
+    assert counters["breaker_probes"] >= 1
+    ex = c.explain(SCAN_Q)
+    assert ex["breakers"][0][0] == CircuitBreaker.CLOSED
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# cascade chaos (replica kill mid-escalation)
+# ---------------------------------------------------------------------------
+
+
+def _make_cascade_cluster():
+    faults = FaultInjector(seed=0)
+    cfg = PandaDBConfig()
+    cfg = dataclasses.replace(
+        cfg, cluster=dataclasses.replace(cfg.cluster, hedge_reads=False,
+                                         merge_batch_rows=4))
+    c = ReplicatedPandaDB(n_shards=2, cfg=cfg, replication=2, faults=faults)
+    c.register_extractor("face", feature_hash_extractor(dim=DIM))
+    c.register_proxy("face", feature_hash_extractor(dim=4, seed=99))
+    rng = np.random.default_rng(3)
+    base = rng.bytes(256)
+    for i in range(64):
+        c.create_node("Person", name=f"n{i}",
+                      photo=base if i % 6 == 0 else rng.bytes(256))
+    c.calibrate_cascade("face", "photo", sample=60, pairs=500, seed=5)
+    return c, faults, base
+
+
+CASCADE_Q = ("MATCH (p:Person) WHERE p.photo->face ~: "
+             "createFromSource($src)->face RETURN p.name")
+
+
+@pytest.mark.chaos
+def test_cascade_accuracy_band_survives_replica_kill():
+    """Kill a replica while a WITH ACCURACY cursor is half-consumed (the
+    cascade mid-escalation): failover keeps the answer inside the accuracy
+    band of the healthy direct-φ truth."""
+    c, faults, base = _make_cascade_cluster()
+    truth = {r["p.name"] for r in c.query(CASCADE_Q, {"src": base})}
+    with c.session(batch_rows=8) as s:
+        cur = s.run(CASCADE_Q + " WITH ACCURACY 0.9", {"src": base})
+        head = [cur.fetchone() for _ in range(3)]
+        faults.fail_stop(0, 0)
+        rows = head + cur.fetchall()
+    got = {r["p.name"] for r in rows if r is not None}
+    assert len(truth ^ got) <= np.ceil(0.1 * 64)
+    assert c.cluster_counters()["failovers"] >= 1
+    c.close()
+
+
+@pytest.mark.chaos
+def test_cascade_kill_leaves_no_inflight_orphans():
+    """After a replica kill mid-cascade, every replica's proxy/exact φ
+    inflight table drains -- failover must not orphan claims on either the
+    dead node or its survivors."""
+    c, faults, base = _make_cascade_cluster()
+    with c.session(batch_rows=8) as s:
+        cur = s.run(CASCADE_Q + " WITH ACCURACY 0.9", {"src": base})
+        cur.fetchone()
+        faults.fail_stop(1, 0)
+        cur.fetchall()
+    for rs in c.replica_sets:
+        for db in rs.replicas:
+            assert wait_until(lambda db=db: db.inflight.size() == 0), \
+                f"orphaned claims on shard {rs.shard_id}"
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# serving engine: admission control + load shedding
+# ---------------------------------------------------------------------------
+
+
+def _gated_server(policy="reject", depth=1, **serving_kw):
+    gate = Gate()
+    db = make_pet_db(6, extractor=gate.wrap(label_extractor(["cat"])),
+                     workers=1, timeout_ms=60_000)
+    serving = ServingConfig(queue_depth=depth, admission_policy=policy,
+                            **serving_kw)
+    server = QueryServer(db, n_workers=1, serving=serving)
+    server.start()
+    return server, gate
+
+
+@pytest.mark.overload
+def test_admission_reject_policy_overflows_with_retry_after():
+    server, gate = _gated_server(policy="reject", depth=1)
+    o1 = server.submit(SEM_TEXT)                 # occupies the worker
+    assert gate.entered.wait(10)
+    o2 = server.submit(SEM_TEXT)                 # fills the queue
+    with pytest.raises(OverloadedError) as ei:
+        server.submit(SEM_TEXT)
+    assert ei.value.retry_after_s > 0
+    assert server.overload_counters()["rejected"] == 1
+    gate.release.set()
+    assert o1.get(timeout=10)[1] is None
+    assert o2.get(timeout=10)[1] is None
+    server.close()
+    assert server.route_counts()["serve_rejected"] == 1
+
+
+@pytest.mark.overload
+def test_admission_drop_oldest_policy_evicts_stalest():
+    server, gate = _gated_server(policy="drop_oldest", depth=1)
+    o1 = server.submit(SEM_TEXT)
+    assert gate.entered.wait(10)
+    o2 = server.submit(SEM_TEXT)                 # queued
+    o3 = server.submit(SEM_TEXT)                 # evicts o2, takes its slot
+    rows2, err2 = o2.get(timeout=10)
+    assert rows2 == [] and isinstance(err2, OverloadedError)
+    assert server.overload_counters()["dropped"] == 1
+    gate.release.set()
+    assert o1.get(timeout=10)[1] is None
+    assert o3.get(timeout=10)[1] is None
+    server.close()
+
+
+@pytest.mark.overload
+def test_shed_on_arrival_uses_service_estimate():
+    """Once the per-skeleton EWMA knows a query takes ~80ms, a 5ms budget
+    is shed at the door (no worker time burned); a generous budget runs."""
+    db = make_pet_db(6)
+    server = QueryServer(db, n_workers=1,
+                         serving=ServingConfig(shed_on_arrival=True))
+    server.start()
+    slow_q = SEM_TEXT
+    with server._lock:
+        server._service_ewma[slow_q] = 0.080     # seeded observation
+    with pytest.raises(OverloadedError):
+        server.submit(slow_q, deadline_ms=5)
+    assert server.overload_counters()["shed"] == 1
+    rows, err = server.submit(slow_q, deadline_ms=60_000).get(timeout=10)
+    assert err is None
+    server.close()
+
+
+@pytest.mark.overload
+def test_queued_request_expires_without_occupying_worker():
+    server, gate = _gated_server(policy="reject", depth=8,
+                                 shed_on_arrival=False)
+    o1 = server.submit(SEM_TEXT)
+    assert gate.entered.wait(10)
+    o2 = server.submit(SEM_TEXT, deadline_ms=40)  # will die in the queue
+    time.sleep(0.1)
+    gate.release.set()
+    assert o1.get(timeout=10)[1] is None
+    rows2, err2 = o2.get(timeout=10)
+    assert isinstance(err2, DeadlineExceeded)
+    assert server.overload_counters()["expired"] >= 1
+    server.close()
+
+
+@pytest.mark.overload
+def test_close_is_idempotent_and_drains_admitted_work():
+    db = make_pet_db(6)
+    server = QueryServer(db, n_workers=2)
+    server.start()
+    outs = [server.submit(SEM_TEXT) for _ in range(3)]
+    server.close()                               # sentinel behind the work
+    for o in outs:
+        rows, err = o.get(timeout=10)
+        assert err is None and rows
+    server.close()                               # second close: no-op
+    server.shutdown()                            # legacy alias: no-op
+    assert server._workers == []
+
+
+@pytest.mark.overload
+def test_shutdown_is_event_driven_not_polled():
+    """Idle workers must wake on the shutdown sentinel immediately -- the
+    old 0.2s poll would make this take n_workers x poll interval."""
+    db = make_pet_db(4)
+    server = QueryServer(db, n_workers=4)
+    server.start()
+    server.submit(SEM_TEXT).get(timeout=10)
+    t0 = time.perf_counter()
+    server.close()
+    assert time.perf_counter() - t0 < 0.15
+
+
+@pytest.mark.overload
+def test_open_loop_reports_goodput_and_counters():
+    db = make_pet_db(10)
+    server = QueryServer(
+        db, n_workers=2,
+        serving=ServingConfig(queue_depth=16, admission_policy="reject"))
+    summary = server.run_open_loop([SEM_TEXT], rate_qps=50, duration_s=0.5,
+                                   deadline_ms=1_000)
+    server.close()
+    assert summary["submitted"] >= 20
+    assert summary["goodput_qps"] > 0
+    assert summary["in_budget"] <= summary["completed"] <= summary["submitted"]
+    assert {"shed", "rejected", "expired", "degraded"} <= set(summary)
