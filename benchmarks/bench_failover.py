@@ -108,7 +108,8 @@ def run(n: int = N) -> None:
             hedges_fired=counters["hedges_fired"],
             hedges_won=counters["hedges_won"],
             slow_sleeps=c.faults.injected["slow_sleeps"],
-            parity_checked=len(want))
+            parity_checked=len(want),
+            metrics=c.metrics.snapshot())
         c.close()
 
     r = payload["results"]

@@ -1,0 +1,170 @@
+"""Observability overhead gate: tracing OFF is free, tracing ON is cheap.
+
+Three builds run the same seeded ``mixed_semantic_workload`` interleaved
+(A/B/C round-robin so drift hits every mode equally):
+
+* ``stripped`` -- the pre-instrumentation hot path: the executor's
+  per-operator ``_record`` chokepoint is swapped for a body that feeds the
+  cost-model EWMAs only (exactly what it did before the obs layer), so the
+  ``profile``/``trace`` branch checks are not even evaluated;
+* ``off``      -- the shipped default: tracing disabled, every site pays
+  its one ``trace is None`` check per operator batch;
+* ``on``       -- tracing enabled: every query grows a full span tree.
+
+The gate (ISSUE 10 acceptance): ``off`` within 2% of ``stripped`` -- the
+off switch must be near-zero -- and ``on`` within 10%.  Median of paired
+per-repeat ratios over per-query-interleaved repeats; results land in
+``BENCH_obs_overhead.json``.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, mixed_semantic_workload
+from repro.configs.pandadb import PandaDBConfig
+from repro.core import PandaDB
+from repro.core import executor as _executor
+from repro.core.aipm import feature_hash_extractor
+
+N_PERSONS = 480
+DIM = 32
+N_QUERIES = 12
+REPEATS = 41
+WARMUP = 3
+OFF_GATE_PCT = 2.0
+ON_GATE_PCT = 10.0
+
+_record_instrumented = _executor._record
+
+
+def _record_stripped(ctx, op, dt, rows, rows_out=None):
+    """The chokepoint exactly as it was before the obs layer landed."""
+    ctx.stats.record(ctx.stats.op_key(op), dt, rows)
+
+
+def build_db():
+    db = PandaDB(PandaDBConfig())
+    db.register_extractor("face", feature_hash_extractor(dim=DIM))
+    rng = np.random.default_rng(7)
+    pool = [rng.bytes(256) for _ in range(N_PERSONS // 5)]
+    for i in range(N_PERSONS):
+        db.graph.create_node("Person", name=f"person_{i}",
+                             age=float(rng.integers(18, 80)),
+                             photo=pool[i % len(pool)])
+    return db, pool
+
+
+def run() -> None:
+    # One db for all three modes: the session reads ``db.tracer`` per query,
+    # so the ONLY thing that varies between modes is the instrumentation
+    # code path — not allocator layout, cache state, or φ warmness, which
+    # between separately-built instances drift by more than the off-cost
+    # this bench exists to measure.
+    modes = ("stripped", "off", "on")
+    db, pool = build_db()
+    work = mixed_semantic_workload(pool, n_queries=N_QUERIES, seed=9)
+
+    def set_mode(mode: str) -> None:
+        _executor._record = (_record_stripped if mode == "stripped"
+                             else _record_instrumented)
+        if mode == "on":
+            db.tracer.enable()
+        else:
+            db.tracer.disable()
+
+    session = db.session()
+    rows_check = {}
+    for mode in modes:                       # warm φ + plan caches per mode
+        set_mode(mode)
+        try:
+            for _ in range(WARMUP):
+                for text, params, _sem in work:
+                    session.run(text, parameters=params).fetchall()
+            rows_check[mode] = [session.run(t, parameters=p).fetchall()
+                                for t, p, _ in work]
+        finally:
+            set_mode("off")
+    assert rows_check["off"] == rows_check["stripped"] == rows_check["on"], \
+        "instrumentation changed query results"
+
+    # Timing discipline for a noisy host (CPU contention here swings single
+    # passes by 2x): each query runs in all three modes back-to-back (order
+    # rotated per slot so periodic scheduler noise can't alias onto one
+    # mode), GC off during timed work (span trees are reference cycles;
+    # collection pauses would be charged to whatever mode happens to be
+    # running), and the estimator is the median of PAIRED per-repeat ratios
+    # -- within a repeat the modes' samples sit milliseconds apart, so slow
+    # drift divides out of the ratio before the median ever sees it.
+    pc = time.perf_counter
+    times = {m: [] for m in modes}
+    gc.disable()
+    try:
+        for rep in range(REPEATS):
+            gc.collect()
+            totals = dict.fromkeys(modes, 0.0)
+            for qi, (text, params, _sem) in enumerate(work):
+                r = (rep + qi) % len(modes)
+                for mode in modes[r:] + modes[:r]:
+                    set_mode(mode)
+                    try:
+                        t0 = pc()
+                        session.run(text, parameters=params).fetchall()
+                        totals[mode] += pc() - t0
+                    finally:
+                        set_mode("off")
+            for mode in modes:
+                times[mode].append(totals[mode])
+    finally:
+        gc.enable()
+
+    base = np.asarray(times["stripped"])
+    best = {m: float(np.min(times[m])) for m in modes}
+    med = {m: float(np.median(times[m])) for m in modes}
+    ratio = {m: float(np.median(np.asarray(times[m]) / base)) for m in modes}
+    overhead_off = 100.0 * (ratio["off"] - 1.0)
+    overhead_on = 100.0 * (ratio["on"] - 1.0)
+    for mode in modes:
+        emit(f"obs_overhead/{mode}", best[mode] * 1e6 / N_QUERIES,
+             f"workload_ms={best[mode] * 1e3:.2f};median_ms={med[mode] * 1e3:.2f}")
+    emit("obs_overhead/off_vs_stripped", overhead_off * 100,
+         f"gate<={OFF_GATE_PCT:g}%")
+    emit("obs_overhead/on_vs_stripped", overhead_on * 100,
+         f"gate<={ON_GATE_PCT:g}%")
+
+    tr = db.tracer.last
+    payload = {
+        "config": dict(n_persons=N_PERSONS, dim=DIM, n_queries=N_QUERIES,
+                       repeats=REPEATS, warmup=WARMUP, seed=9,
+                       off_gate_pct=OFF_GATE_PCT, on_gate_pct=ON_GATE_PCT),
+        "best_workload_ms": {m: round(best[m] * 1e3, 4) for m in modes},
+        "median_workload_ms": {m: round(med[m] * 1e3, 4) for m in modes},
+        "overhead_off_pct": round(overhead_off, 3),
+        "overhead_on_pct": round(overhead_on, 3),
+        "traced_spans_last_query": len(tr.spans()) if tr else 0,
+        "note": (
+            "median of paired per-repeat ratios over per-query-interleaved "
+            "repeats of the seeded mixed semantic workload against ONE warm "
+            "db (modes differ only in code path), warm caches -- the regime "
+            "where fixed per-operator overhead is largest relative to work. "
+            "'stripped' runs the pre-obs executor chokepoint. off gate <= "
+            f"{OFF_GATE_PCT:g}%, on gate <= {ON_GATE_PCT:g}%."),
+    }
+    assert overhead_off <= OFF_GATE_PCT, (
+        f"tracing-off overhead {overhead_off:.2f}% exceeds "
+        f"{OFF_GATE_PCT:g}% gate")
+    assert overhead_on <= ON_GATE_PCT, (
+        f"tracing-on overhead {overhead_on:.2f}% exceeds "
+        f"{ON_GATE_PCT:g}% gate")
+
+    out = Path(__file__).resolve().parent.parent / "BENCH_obs_overhead.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -98,6 +98,7 @@ def _offered_run(db, rate_qps: float, shed: bool) -> dict:
     summary = server.run_open_loop(QUERIES, rate_qps=rate_qps,
                                    duration_s=1.2, deadline_ms=deadline_ms)
     e2e = server._stats.e2e_ms[warm_n:]
+    metrics = server.metrics.snapshot()     # before close() tears it down
     server.close()
     within = sum(1 for x in e2e if x <= BUDGET_MS)
     over = sum(1 for x in e2e if x > BUDGET_MS + SLACK_MS)
@@ -112,6 +113,7 @@ def _offered_run(db, rate_qps: float, shed: bool) -> dict:
         "p50_ms": float(np.percentile(e2e, 50)) if e2e else 0.0,
         "p99_ms": float(np.percentile(e2e, 99)) if e2e else 0.0,
         "budget_overruns_past_slack": over if shed else None,
+        "metrics": metrics,
     }
 
 
@@ -156,6 +158,7 @@ def run() -> None:
         f"and p99 from {two_no['p99_ms']:.0f} to {two_shed['p99_ms']:.0f} ms; "
         "no deadline-carrying query overran its budget by more than one "
         "chunk interval.")
+    payload["cluster_metrics"] = db.metrics.snapshot()
     db.close()
 
     out = Path(__file__).resolve().parent.parent / "BENCH_overload.json"

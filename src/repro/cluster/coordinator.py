@@ -66,6 +66,8 @@ from repro.core.session import (
     skeleton_of,
 )
 from repro.core.vector_index import IVFIndex, scatter_gather_knn
+from repro.obs import MetricsRegistry, QueryProfile, Tracer
+from repro.obs.trace import Trace
 from repro.cluster.partition import ShardMap, make_shard
 from repro.cluster.scatter import (
     ClusterUnsupportedQuery,
@@ -178,7 +180,10 @@ class ClusterCursor(Cursor):
     fetch surface; closing tears the shard pipelines down."""
 
     def __init__(self, gen, keys: Tuple[str, ...] = (),
-                 rwlock: Optional[RWLock] = None, deadline=None) -> None:
+                 rwlock: Optional[RWLock] = None, deadline=None,
+                 trace: Optional[Trace] = None,
+                 profile: Optional[QueryProfile] = None,
+                 plan: Optional[lp.PlanOp] = None) -> None:
         super().__init__(None, None, keys=tuple(keys), rwlock=rwlock)
         if gen is not None:
             self._gen = gen
@@ -187,6 +192,13 @@ class ClusterCursor(Cursor):
         # the statement's shared budget: surfaces degradations/approximate
         # through the inherited Cursor properties (no ctx on the merge side)
         self._deadline = deadline
+        # trace/profile installed after super().__init__ (which would treat
+        # the plan-less base cursor as exhausted and finish the trace early)
+        self.trace = trace
+        self._profile = profile
+        self._profile_plan = plan
+        if gen is None and trace is not None:
+            trace.finish()
 
     def close(self) -> None:
         """Exception-safe teardown: whatever ``_gen.close()`` does (a shard
@@ -216,11 +228,12 @@ class ClusterPreparedStatement:
     def run(self, parameters: Optional[Dict[str, Any]] = None,
             optimized: bool = True,
             deadline_ms: Optional[float] = None,
-            **params: Any) -> ClusterCursor:
+            profile: bool = False, **params: Any) -> ClusterCursor:
         return self.session._run_parsed(self.skeleton, self.query,
                                         {**(parameters or {}), **params},
                                         optimized=optimized, text=self.text,
-                                        deadline_ms=deadline_ms)
+                                        deadline_ms=deadline_ms,
+                                        profile=profile)
 
 
 class ClusterSession:
@@ -279,18 +292,22 @@ class ClusterSession:
 
     def run(self, text: str, parameters: Optional[Dict[str, Any]] = None,
             optimized: bool = True,
-            deadline_ms: Optional[float] = None, **params: Any
-            ) -> ClusterCursor:
+            deadline_ms: Optional[float] = None,
+            profile: bool = False, trace: Optional[Trace] = None,
+            **params: Any) -> ClusterCursor:
         if self._closed:
             raise RuntimeError("session is closed")
         params = {**(parameters or {}), **params}
         return self._run_parsed(skeleton_of(text), parse_query(text), params,
                                 optimized=optimized, text=text,
-                                deadline_ms=deadline_ms)
+                                deadline_ms=deadline_ms,
+                                profile=profile, trace=trace)
 
     def _run_parsed(self, skeleton: str, q, params: Dict[str, Any],
                     optimized: bool, text: str,
-                    deadline_ms: Optional[float] = None) -> ClusterCursor:
+                    deadline_ms: Optional[float] = None,
+                    profile: bool = False,
+                    trace: Optional[Trace] = None) -> ClusterCursor:
         if self._closed:
             raise RuntimeError("session is closed")
         cdb = self.cdb
@@ -298,6 +315,10 @@ class ClusterSession:
         if missing:
             raise KeyError(f"unbound parameters: "
                            f"{', '.join('$' + m for m in sorted(missing))}")
+        profile = profile or bool(getattr(q, "profile", False))
+        if trace is None:
+            trace = cdb.tracer.begin("query", force=profile,
+                                     skeleton=skeleton)
         # ONE Deadline object for the whole statement: every shard leg,
         # hedge race and retry below clamps to the same remaining budget
         deadline = Deadline.resolve(deadline_ms, self.deadline_ms,
@@ -308,26 +329,46 @@ class ClusterSession:
                 cdb._execute_create(q, text, params)
             finally:
                 cdb.rwlock.release_write()
-            return ClusterCursor(None)
-        plan = cdb._plan_cached(skeleton, q, optimized,
-                                use_cache=self.use_cache)
+            return ClusterCursor(None, trace=trace)
+        if trace is None:
+            plan = cdb._plan_cached(skeleton, q, optimized,
+                                    use_cache=self.use_cache)
+        else:
+            with trace.span("plan") as sp:
+                misses0 = cdb.plan_cache.misses
+                plan = cdb._plan_cached(skeleton, q, optimized,
+                                        use_cache=self.use_cache)
+                sp.set(cache="off" if not self.use_cache else
+                       "miss" if cdb.plan_cache.misses > misses0 else "hit")
+        qprof: Optional[QueryProfile] = None
+        if profile:
+            qprof = QueryProfile()
+            qprof.capture_predictions(plan, cdb.lead_db().stats)
         route, owner, anchor = cdb._route(q, plan, params)
+        if trace is not None:
+            trace.event("route", choice=route, anchor=anchor,
+                        owner=-1 if owner is None else owner)
         keys = _projection_keys(q)
         if route == "routed":
+            if qprof is not None:
+                qprof.note_shard(owner)
             ctx = ExecutionContext(cdb.read_db(owner), params,
                                    prefetch_depth=self.prefetch_depth,
-                                   deadline=deadline)
+                                   deadline=deadline,
+                                   trace=trace, profile=qprof)
             return self._track(
                 ClusterCursor(execute_iter(plan, ctx, self.batch_rows),
                               keys=keys, rwlock=cdb.rwlock,
-                              deadline=deadline))
+                              deadline=deadline, trace=trace,
+                              profile=qprof, plan=plan))
         limit = _root_limit(plan, params)
         streams: List[Any] = []
         try:
             for s in cdb.active:
                 streams.append(cdb._shard_stream(
                     plan, s, params, anchor, self.batch_rows, limit,
-                    self.prefetch_depth, deadline=deadline))
+                    self.prefetch_depth, deadline=deadline,
+                    trace=trace, profile=qprof))
         except BaseException:
             # a later shard failing to open must not leak the earlier
             # shards' pipelines
@@ -337,7 +378,8 @@ class ClusterSession:
                             batch_rows=cdb.cfg.cluster.merge_batch_rows,
                             limit=limit)
         return self._track(ClusterCursor(gen, keys=keys, rwlock=cdb.rwlock,
-                                         deadline=deadline))
+                                         deadline=deadline, trace=trace,
+                                         profile=qprof, plan=plan))
 
     def explain(self, text: str) -> Dict[str, Any]:
         return self.cdb.explain(text)
@@ -379,14 +421,17 @@ class ShardedPandaDB:
         self.wal = WriteAheadLog(None)    # leader statement log (§VII-A)
         self._blob_owner: Dict[int, int] = {}
         self._next_blob_id = 0
-        self.route_counts: Dict[str, int] = {"routed": 0, "fanout": 0}
-        #: chaos-test observability: what the failure-masking machinery did
-        self.counters: Dict[str, int] = {
-            "hedges_fired": 0, "hedges_won": 0, "retries": 0,
-            "failovers": 0, "rebalance_moves": 0, "teardown_errors": 0,
-            "degraded": 0}
-        self.replica_reads: Dict[str, int] = {}
-        self._route_lock = threading.Lock()   # serving workers race _route
+        #: unified registry: routing decisions, failure-masking counters and
+        #: per-node replica reads all live here; ``route_counts`` /
+        #: ``cluster_counters()`` below are byte-compatible read views
+        self.metrics = MetricsRegistry("cluster")
+        for name in ("hedges_fired", "hedges_won", "retries", "failovers",
+                     "rebalance_moves", "teardown_errors", "degraded"):
+            self.metrics.counter(name)
+        self.metrics.counter("route_routed")
+        self.metrics.counter("route_fanout")
+        self.tracer = Tracer(enabled=self.cfg.obs.trace,
+                             keep_last=self.cfg.obs.trace_keep_last)
         self._pool: Optional[ThreadPoolExecutor] = None
         if self.cfg.cluster.parallel_fanout and self.n_shards > 1:
             self._pool = ThreadPoolExecutor(
@@ -436,33 +481,52 @@ class ShardedPandaDB:
 
     def _shard_stream(self, plan: lp.PlanOp, s: int, params: Dict[str, Any],
                       anchor: str, batch_rows: int, limit: Optional[int],
-                      prefetch_depth: Optional[int], deadline=None):
+                      prefetch_depth: Optional[int], deadline=None,
+                      trace=None, profile=None):
         """One shard's tagged fan-out stream (replicated: hedged +
         failover-wrapped).  ``deadline`` is the statement's shared budget
-        (every shard leg clamps to the same remaining time)."""
+        (every shard leg clamps to the same remaining time); ``trace`` /
+        ``profile`` are the statement's shared span tree and PROFILE
+        accumulator (per-node operator times sum across shards because
+        every leg executes the same plan tree)."""
+        if profile is not None:
+            profile.note_shard(s)
         ctx = ExecutionContext(self.shards[s], params,
                                prefetch_depth=prefetch_depth,
-                               deadline=deadline)
+                               deadline=deadline,
+                               trace=trace, profile=profile)
         return execute_iter_tagged(plan, ctx, anchor, batch_rows,
                                    limit=limit)
 
     def _count(self, name: str, n: int = 1) -> None:
-        with self._route_lock:
-            self.counters[name] = self.counters.get(name, 0) + n
+        self.metrics.counter(name).inc(n)
 
     def _count_replica_read(self, s: int, r: int) -> None:
-        key = f"s{s}r{r}"
-        with self._route_lock:
-            self.replica_reads[key] = self.replica_reads.get(key, 0) + 1
+        self.metrics.counter(f"replica_reads:s{s}r{r}").inc()
+
+    @property
+    def route_counts(self) -> Dict[str, int]:
+        """Routed-vs-fanout statement counts (registry-backed; still reads
+        like the old plain dict: ``c.route_counts["routed"]``)."""
+        return {"routed": self.metrics.counter("route_routed").value,
+                "fanout": self.metrics.counter("route_fanout").value}
 
     def cluster_counters(self) -> Dict[str, int]:
         """Hedges fired/won, retries, failovers, rebalance moves and
         per-node replica reads -- chaos tests assert on these instead of
-        timing."""
-        with self._route_lock:
-            out = dict(self.counters)
-            for key in sorted(self.replica_reads):
-                out[f"replica_reads:{key}"] = self.replica_reads[key]
+        timing.  A registry read, shaped exactly like the old counter
+        dicts."""
+        out: Dict[str, int] = {}
+        reads: Dict[str, int] = {}
+        for name, v in self.metrics.counters_view().items():
+            if name.startswith("route_"):
+                continue
+            if name.startswith("replica_reads:"):
+                reads[name] = v
+            else:
+                out[name] = v
+        for key in sorted(reads):
+            out[key] = reads[key]
         return out
 
     # -- data path (routed writes) --------------------------------------------
@@ -651,7 +715,8 @@ class ShardedPandaDB:
 
     def knn(self, sub_key: str, queries: np.ndarray, k: int,
             nprobe: Optional[int] = None, mode: str = "auto",
-            rerank: bool = True, deadline_ms: Optional[float] = None
+            rerank: bool = True, deadline_ms: Optional[float] = None,
+            trace: Optional[Trace] = None
             ) -> Tuple[np.ndarray, np.ndarray]:
         """Scatter-gather kNN over every shard's index piece through the
         shared ``merge_topk`` schedule.  Each shard's scan feeds its own
@@ -662,14 +727,21 @@ class ShardedPandaDB:
         returns partial top-k from the shards that did (padding contract:
         dropped slots are id=-1 / -inf)."""
         deadline = Deadline.resolve(deadline_ms)
-        vals, ids = scatter_gather_knn(
-            self.index_pieces(sub_key), queries, k, nprobe=nprobe,
-            mode=mode, rerank=rerank,
-            stats=[self.read_db(s).stats for s in self.active],
-            record=self.stats.record_shard_scan,
-            pool=self._pool,
-            split_rerank_budget=self.cfg.cluster.split_rerank_budget,
-            deadline=deadline)
+        own_trace = trace is None and self.tracer.enabled
+        if own_trace:
+            trace = self.tracer.begin("knn", sub_key=sub_key, k=k)
+        try:
+            vals, ids = scatter_gather_knn(
+                self.index_pieces(sub_key), queries, k, nprobe=nprobe,
+                mode=mode, rerank=rerank,
+                stats=[self.read_db(s).stats for s in self.active],
+                record=self.stats.record_shard_scan,
+                pool=self._pool,
+                split_rerank_budget=self.cfg.cluster.split_rerank_budget,
+                deadline=deadline, trace=trace)
+        finally:
+            if own_trace and trace is not None:
+                trace.finish()
         if deadline is not None and "partial_topk" in deadline.degradations:
             self._count("degraded")
         return vals, ids
@@ -759,8 +831,7 @@ class ShardedPandaDB:
         cost = estimate_plan_cost(plan, self.lead_db().stats)
         choice = self.stats.choose_shard_route(cost, len(self.active),
                                                routable=bound is not None)
-        with self._route_lock:
-            self.route_counts[choice] = self.route_counts.get(choice, 0) + 1
+        self.metrics.counter(f"route_{choice}").inc()
         if choice == "routed":
             return "routed", self.owner_of(resolve_id(bound, params)), anchor
         return "fanout", None, anchor

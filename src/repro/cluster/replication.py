@@ -348,12 +348,19 @@ def _close_quiet(it: Any, cdb: Optional["ReplicatedPandaDB"] = None) -> None:
 
 
 def _loser_reaper(cdb: "ReplicatedPandaDB", shard: int, r: int,
-                  on_loser: Optional[Callable[[Any], None]]):
+                  on_loser: Optional[Callable[[Any], None]],
+                  trace=None):
     def reap(fu) -> None:
         try:
             exc = fu.exception()
         except CancelledError:
             return                  # close() cancelled it before it ran
+        # reapers run as done-callbacks, possibly after the query's trace
+        # closed -- a late event must not break the trace's nesting
+        if trace is not None and not trace.root.closed:
+            trace.event("hedge.loser_reap", parent=trace.root,
+                        shard=shard, replica=r,
+                        error=type(exc).__name__ if exc is not None else None)
         if exc is not None:
             if isinstance(exc, ReplicaDown):
                 cdb.replica_sets[shard].mark_dead(r)
@@ -376,7 +383,8 @@ def _loser_reaper(cdb: "ReplicatedPandaDB", shard: int, r: int,
 def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
                 call: Callable[[int], Any],
                 on_loser: Optional[Callable[[Any], None]] = None,
-                deadline: Optional[Deadline] = None) -> Tuple[Any, int]:
+                deadline: Optional[Deadline] = None,
+                trace=None) -> Tuple[Any, int]:
     """Run ``call(replica)`` on the latency-preferred replica; if it has
     not answered within the shard's hedge deadline, race the next-best
     replica and take the first *success* (ties in the same wait batch
@@ -393,6 +401,9 @@ def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
     late :class:`ReplicaDown` into the replica set."""
     rs = cdb.replica_sets[shard]
     primary = cdb.stats.choose_replica(shard, live)
+    if trace is not None:
+        trace.event("replica.pick", shard=shard, replica=primary,
+                    breakers=",".join(b.state for b in rs.breakers))
     pool = cdb._hedge_pool
     if pool is None or len(live) < 2:
         try:
@@ -411,6 +422,9 @@ def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
             (r for r in live if r != primary),
             key=lambda r: (cdb.stats.replica_read_latency(shard, r), r))
         cdb._count("hedges_fired")
+        if trace is not None:
+            trace.event("hedge.fire", shard=shard, primary=primary,
+                        backup=backup)
         futs[cdb._track_hedge(pool.submit(call, backup))] = backup
     winner = None
     last_exc: Optional[BaseException] = None
@@ -425,7 +439,7 @@ def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
                 # budget gone: reap every leg still racing and fail fast
                 for fu, r in futs.items():
                     fu.add_done_callback(
-                        _loser_reaper(cdb, shard, r, on_loser))
+                        _loser_reaper(cdb, shard, r, on_loser, trace=trace))
                 deadline.check("hedged read")
         for fu in sorted(done, key=lambda f: futs[f] != primary):
             exc = fu.exception()
@@ -442,9 +456,12 @@ def hedged_call(cdb: "ReplicatedPandaDB", shard: int, live: List[int],
         raise last_exc
     if futs[winner] != primary:
         cdb._count("hedges_won")
+        if trace is not None:
+            trace.event("hedge.win", shard=shard, replica=futs[winner])
     for fu, r in futs.items():
         if fu is not winner:
-            fu.add_done_callback(_loser_reaper(cdb, shard, r, on_loser))
+            fu.add_done_callback(_loser_reaper(cdb, shard, r, on_loser,
+                                               trace=trace))
     return winner.result(), futs[winner]
 
 
@@ -466,7 +483,8 @@ def _pull_first(cdb: "ReplicatedPandaDB", shard: int, r: int,
 
 def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
                  open_on: Callable[[int], Any],
-                 deadline: Optional[Deadline] = None) -> Tuple[Any, Any, int]:
+                 deadline: Optional[Deadline] = None,
+                 trace=None) -> Tuple[Any, Any, int]:
     """Open a stream on *some* live replica: hedged first pull, transient
     errors retried with linear backoff (clamped to any remaining deadline
     budget), fail-stops failed over until the replica set itself is
@@ -483,12 +501,15 @@ def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
                 cdb, shard, live,
                 lambda rr: _pull_first(cdb, shard, rr, open_on),
                 on_loser=lambda res: _close_quiet(res[0], cdb),
-                deadline=deadline)
+                deadline=deadline, trace=trace)
         except ReplicaDown:
             continue        # rs.live() shrinks; raises once the set is gone
         except ReplicaError:
             attempts += 1
             cdb._count("retries")
+            if trace is not None:
+                trace.event("retry", shard=shard, attempt=attempts,
+                            where="stream_open")
             if attempts > cdb.cfg.cluster.read_retries:
                 raise
             backoff = cdb.cfg.cluster.retry_backoff_s * attempts
@@ -505,7 +526,8 @@ def _open_stream(cdb: "ReplicatedPandaDB", shard: int,
 
 def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
                      open_on: Callable[[int], Any],
-                     deadline: Optional[Deadline] = None):
+                     deadline: Optional[Deadline] = None,
+                     trace=None):
     """A tagged per-shard stream that survives replica failure mid-pull.
 
     Every batch pull is fault-gated and latency-recorded; on fail-stop the
@@ -521,7 +543,17 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
     try:
         while True:
             if it is None:
-                it, nxt, r = _open_stream(cdb, shard, open_on, deadline)
+                if trace is not None and r >= 0:
+                    # a replica died mid-stream: the reopen-on-a-sibling +
+                    # fast-forward is the failover the chaos suite asserts on
+                    with trace.span("failover", shard=shard,
+                                    from_replica=r) as sp:
+                        it, nxt, r = _open_stream(cdb, shard, open_on,
+                                                  deadline, trace=trace)
+                        sp.set(to_replica=r)
+                else:
+                    it, nxt, r = _open_stream(cdb, shard, open_on, deadline,
+                                              trace=trace)
             else:
                 attempts = 0
                 while True:
@@ -539,6 +571,9 @@ def resilient_stream(cdb: "ReplicatedPandaDB", shard: int,
                         rs.note_failure(r)
                         attempts += 1
                         cdb._count("retries")
+                        if trace is not None:
+                            trace.event("retry", shard=shard, replica=r,
+                                        attempt=attempts, where="stream_pull")
                         if attempts > cdb.cfg.cluster.read_retries:
                             rs.mark_dead(r)
                             _close_quiet(it, cdb)
@@ -578,11 +613,12 @@ class _ResilientIndex:
     (replicas hold the same piece, so any winner returns the same rows)."""
 
     def __init__(self, cdb: "ReplicatedPandaDB", shard: int, sub_key: str,
-                 deadline: Optional[Deadline] = None) -> None:
+                 deadline: Optional[Deadline] = None, trace=None) -> None:
         self.cdb = cdb
         self.shard = shard
         self.sub_key = sub_key
         self.deadline = deadline
+        self.trace = trace
         self.scan_rows = 0
         rs = cdb.replica_sets[shard]
         piece = rs.replicas[rs.live()[0]].indexes[sub_key]
@@ -620,12 +656,15 @@ class _ResilientIndex:
                     cdb, s, live,
                     lambda rr: self._search_on(rr, queries, k, nprobe, mode,
                                                rerank, rerank_mult),
-                    deadline=deadline)
+                    deadline=deadline, trace=self.trace)
             except ReplicaDown:
                 continue
             except ReplicaError:
                 attempts += 1
                 cdb._count("retries")
+                if self.trace is not None:
+                    self.trace.event("retry", shard=s, attempt=attempts,
+                                     where="knn")
                 if attempts > cdb.cfg.cluster.read_retries:
                     raise
                 backoff = cdb.cfg.cluster.retry_backoff_s * attempts
@@ -733,31 +772,44 @@ class ReplicatedPandaDB(ShardedPandaDB):
         return self.replica_sets[s].apply(op, args, kw)
 
     def _shard_stream(self, plan, s, params, anchor, batch_rows, limit,
-                      prefetch_depth, deadline=None):
+                      prefetch_depth, deadline=None, trace=None,
+                      profile=None):
         rs = self.replica_sets[s]
+        if profile is not None:
+            profile.note_shard(s)
 
         def open_on(r: int):
             ctx = ExecutionContext(rs.replicas[r], params,
                                    prefetch_depth=prefetch_depth,
-                                   deadline=deadline)
+                                   deadline=deadline,
+                                   trace=trace, profile=profile)
             return execute_iter_tagged(plan, ctx, anchor, batch_rows,
                                        limit=limit)
 
-        return resilient_stream(self, s, open_on, deadline=deadline)
+        return resilient_stream(self, s, open_on, deadline=deadline,
+                                trace=trace)
 
     def knn(self, sub_key: str, queries, k: int, nprobe: Optional[int] = None,
             mode: str = "auto", rerank: bool = True,
-            deadline_ms: Optional[float] = None):
+            deadline_ms: Optional[float] = None, trace=None):
         deadline = Deadline.resolve(deadline_ms)
-        views = [_ResilientIndex(self, s, sub_key, deadline=deadline)
+        own_trace = trace is None and self.tracer.enabled
+        if own_trace:
+            trace = self.tracer.begin("knn", sub_key=sub_key, k=k)
+        views = [_ResilientIndex(self, s, sub_key, deadline=deadline,
+                                 trace=trace)
                  for s in self.active]
-        out = scatter_gather_knn(
-            views, queries, k, nprobe=nprobe,
-            mode=mode, rerank=rerank, stats=None,
-            record=self.stats.record_shard_scan,
-            pool=self._pool,
-            split_rerank_budget=self.cfg.cluster.split_rerank_budget,
-            deadline=deadline)
+        try:
+            out = scatter_gather_knn(
+                views, queries, k, nprobe=nprobe,
+                mode=mode, rerank=rerank, stats=None,
+                record=self.stats.record_shard_scan,
+                pool=self._pool,
+                split_rerank_budget=self.cfg.cluster.split_rerank_budget,
+                deadline=deadline, trace=trace)
+        finally:
+            if own_trace and trace is not None:
+                trace.finish()
         if deadline is not None and "partial_topk" in deadline.degradations:
             self._count("degraded")
         return out
@@ -773,6 +825,11 @@ class ReplicatedPandaDB(ShardedPandaDB):
         out["breaker_opens"] = opens
         out["breaker_probes"] = probes
         out["breaker_closes"] = closes
+        # mirror the breaker transition totals into the registry so the
+        # Prometheus dump / global_snapshot see them without a second path
+        self.metrics.gauge("breaker_opens").set(opens)
+        self.metrics.gauge("breaker_probes").set(probes)
+        self.metrics.gauge("breaker_closes").set(closes)
         return out
 
     def explain(self, text: str) -> Dict[str, Any]:

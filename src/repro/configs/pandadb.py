@@ -195,6 +195,21 @@ class ServingConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Observability: query tracing, metrics export, slow-query log."""
+
+    trace: bool = False             # per-query span trees; OFF by default —
+    #                                 disabled tracing must cost near-zero
+    #                                 (gated by bench_obs_overhead.py)
+    trace_keep_last: bool = True    # tracer keeps the most recent Trace for
+    #                                 inspection (tracer.last)
+    slow_query_ms: float = 0.0      # serving engine writes a JSON line for
+    #                                 queries slower than this; 0 = off
+    slow_query_log: str = ""        # path of the JSON-lines slow-query log
+    #                                 ("" with slow_query_ms > 0 = stderr)
+
+
+@dataclass(frozen=True)
 class PandaDBConfig:
     index: VectorIndexConfig = field(default_factory=VectorIndexConfig)
     blob: BlobStoreConfig = field(default_factory=BlobStoreConfig)
@@ -204,6 +219,7 @@ class PandaDBConfig:
     cluster: ClusterConfig = field(default_factory=ClusterConfig)
     cascade: CascadeConfig = field(default_factory=CascadeConfig)
     serving: ServingConfig = field(default_factory=ServingConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
     # distributed layout (§VII-A): structure replicated, properties sharded
     replicate_graph_structure: bool = True
     shard_axis: str = "data"

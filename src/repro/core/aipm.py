@@ -129,9 +129,13 @@ class AIPMService:
     """
 
     def __init__(self, registry: ModelRegistry,
-                 cfg: Optional[AIPMConfig] = None) -> None:
+                 cfg: Optional[AIPMConfig] = None,
+                 metrics: Optional[Any] = None) -> None:
         self.registry = registry
         self.cfg = cfg or AIPMConfig()
+        #: optional MetricsRegistry: per-sub_key model-call counters + batch
+        #: latency histogram (the db wires its own registry in)
+        self.metrics = metrics
         self._queue: "queue.Queue[Optional[AIPMRequest]]" = queue.Queue(
             maxsize=self.cfg.max_inflight)
         self.cancelled_requests = 0
@@ -181,6 +185,11 @@ class AIPMService:
             spec.calls += 1
             spec.rows += len(req.items)
             spec.total_time += dt
+        if self.metrics is not None:
+            self.metrics.counter(f"aipm_calls:{req.sub_key}").inc()
+            self.metrics.counter(f"aipm_rows:{req.sub_key}").inc(
+                len(req.items))
+            self.metrics.histogram("aipm_batch_ms").observe(dt * 1000)
         return out
 
     def submit(self, sub_key: str,

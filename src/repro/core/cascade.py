@@ -106,11 +106,14 @@ class CascadeCalibrator:
     ``> hi`` reproduces the chosen partition exactly, ties included.
     """
 
-    def __init__(self, min_curve_pairs: int = 16) -> None:
+    def __init__(self, min_curve_pairs: int = 16, metrics=None) -> None:
         self.min_curve_pairs = min_curve_pairs
         self._lock = threading.Lock()
         self._curves: Dict[CurveKey, Tuple[np.ndarray, np.ndarray]] = {}
         self._memo: Dict[Tuple[CurveKey, float], CascadeThresholds] = {}
+        #: optional MetricsRegistry: curve installs + band fits (memoized
+        #: lookups excluded, so the counter tracks real fitting work)
+        self.metrics = metrics
 
     # -- curves --------------------------------------------------------------
 
@@ -125,6 +128,8 @@ class CascadeCalibrator:
         with self._lock:
             self._curves[key] = (s[order], y[order])
             self._memo = {k: v for k, v in self._memo.items() if k[0] != key}
+        if self.metrics is not None:
+            self.metrics.counter("cascade_curves_installed").inc()
 
     def curve(self, sub_key: str, exact_serial: int, proxy_serial: int
               ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
@@ -163,6 +168,8 @@ class CascadeCalibrator:
         with self._lock:
             memo = self._memo.get((key, target))
             if memo is not None:
+                if self.metrics is not None:
+                    self.metrics.counter("cascade_fit_memo_hits").inc()
                 return memo
             curve = self._curves.get(key)
         if curve is None or curve[0].size < self.min_curve_pairs:
@@ -170,6 +177,8 @@ class CascadeCalibrator:
         fit = _fit_band(curve[0], curve[1], target)
         with self._lock:
             self._memo[(key, target)] = fit
+        if self.metrics is not None:
+            self.metrics.counter("cascade_band_fits").inc()
         return fit
 
 

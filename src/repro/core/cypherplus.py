@@ -116,6 +116,11 @@ class MatchQuery:
     # "exact only" (the literal is part of the query text, hence of the plan
     # skeleton -- cached plans never leak across targets).
     accuracy: Optional[float] = None
+    # PROFILE prefix: execute normally but trace every operator and return
+    # the annotated plan + cost-model drift via cursor.profile_report().
+    # Part of the frozen query (and of the text skeleton), so profiled and
+    # plain runs of the same MATCH never share a plan-cache entry.
+    profile: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -219,7 +224,7 @@ _TOKEN_RE = re.compile(r"""
 
 _KEYWORDS = {"MATCH", "WHERE", "RETURN", "CREATE", "AND", "OR", "NOT",
              "LIMIT", "AS", "CONTAINS", "TRUE", "FALSE", "NULL",
-             "WITH", "ACCURACY"}
+             "WITH", "ACCURACY", "PROFILE"}
 
 
 @dataclasses.dataclass
@@ -281,9 +286,13 @@ class Parser:
     # -- entry ----------------------------------------------------------------
 
     def parse(self) -> Query:
+        profiled = bool(self.accept("kw", "PROFILE"))
         if self.peek().kind == "kw" and self.peek().text == "CREATE":
+            if profiled:
+                raise SyntaxError("PROFILE applies to MATCH queries only")
             return self.parse_create()
-        return self.parse_match()
+        q = self.parse_match()
+        return dataclasses.replace(q, profile=True) if profiled else q
 
     def parse_create(self) -> CreateQuery:
         patterns = []

@@ -25,19 +25,25 @@ from repro.core.session import (
     plan_query,
 )
 from repro.core.vector_index import IVFIndex
+from repro.obs import MetricsRegistry, Tracer
 
 
 class PandaDB:
     def __init__(self, cfg: Optional[PandaDBConfig] = None,
                  wal_path: Optional[str] = None) -> None:
         self.cfg = cfg or PandaDBConfig()
+        self.tracer = Tracer(enabled=self.cfg.obs.trace,
+                             keep_last=self.cfg.obs.trace_keep_last)
+        self.metrics = MetricsRegistry("pandadb")
         self.graph = PandaGraph(self.cfg, wal_path)
         self.registry = ModelRegistry()
-        self.aipm = AIPMService(self.registry, self.cfg.aipm)
+        self.aipm = AIPMService(self.registry, self.cfg.aipm,
+                                metrics=self.metrics)
         self.cache = SemanticCache(self.cfg.cache)
         self.inflight = InflightTable()   # cross-session φ request dedup
         self.stats = StatisticsService(self.cfg.cost)
-        self.calibrator = CascadeCalibrator(self.cfg.cascade.min_curve_pairs)
+        self.calibrator = CascadeCalibrator(self.cfg.cascade.min_curve_pairs,
+                                            metrics=self.metrics)
         self.indexes: Dict[str, IVFIndex] = {}
         self.scalar_indexes: Dict[str, Any] = {}   # NumericIndex | InvertedIndex
         self.plan_cache = PlanCache()

@@ -68,7 +68,8 @@ DEFAULT_BATCH_ROWS = 256
 class ExecutionContext:
     def __init__(self, db, params: Optional[Dict[str, Any]] = None,
                  prefetch_depth: Optional[int] = None,
-                 deadline: Optional[Deadline] = None) -> None:
+                 deadline: Optional[Deadline] = None,
+                 trace=None, profile=None) -> None:
         self.db = db
         self.graph = db.graph
         self.stats = db.stats
@@ -103,6 +104,14 @@ class ExecutionContext:
         #: query (shard streams, hedge races); None = no deadline, and every
         #: deadline check below compiles to a no-op
         self.deadline = deadline
+        #: per-query span tree / PROFILE accumulator, threaded exactly like
+        #: the deadline (one shared object across shard streams and hedge
+        #: legs); None = off, and every instrumentation site below is one
+        #: attribute load + identity check
+        self.trace = trace
+        self.profile = profile
+        if profile is not None:
+            profile.register_ctx(self)
 
     def check_deadline(self, where: str) -> None:
         if self.deadline is not None:
@@ -167,6 +176,14 @@ class PhiBatch:
         self.aipm_future = aipm_future
 
     def join(self) -> None:
+        tr = self.ctx.trace
+        if tr is None:
+            return self._join_inner()
+        with tr.span("phi.join", sub_key=self.sub_key, n=len(self.bids),
+                     owned=len(self.owned), borrowed=len(self.borrowed)):
+            return self._join_inner()
+
+    def _join_inner(self) -> None:
         ctx, default_t = self.ctx, self.ctx.aipm.cfg.timeout_ms / 1000
         if self.aipm_future is not None:
             try:
@@ -248,10 +265,16 @@ def _begin_extraction(ctx: ExecutionContext, sub_key: str,
             missing.append(bid)
     ctx.cache.note_misses(len(missing))
     if not missing:
+        if ctx.trace is not None and seen:
+            ctx.trace.event("phi.cache_hit", sub_key=sub_key, n=len(seen))
         return None
     owned, borrowed = ctx.inflight.claim(
         [(b, sub_key, serial) for b in missing])
     ctx.dedup_borrows += len(borrowed)
+    if ctx.trace is not None:
+        ctx.trace.event("phi.dispatch", sub_key=sub_key, n=len(missing),
+                        cached=len(seen) - len(missing), owned=len(owned),
+                        borrowed=len(borrowed))
     aipm_future = None
     if owned:
         items = [(key[0], ctx.graph.blobs.as_array(key[0]))
@@ -333,7 +356,8 @@ def _apply_filter(plan, child: Bindings, ctx: ExecutionContext,
     else:
         mask = np.asarray(eval_expr(plan.predicate, child, ctx), bool)
         out = {k: v[mask] for k, v in child.items()}
-    _record(ctx, plan, time.perf_counter() - t0 + extra_time, n_in)
+    _record(ctx, plan, time.perf_counter() - t0 + extra_time, n_in,
+            rows_out=_rows(out))
     return out
 
 
@@ -367,7 +391,8 @@ def _apply_expand(plan: lp.Expand, child: Bindings,
             nbrs = np.concatenate([nbrs, n2])
         out = {k: v[row_idx] for k, v in child.items()}
         out[plan.dst] = nbrs
-    _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
+    _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1),
+            rows_out=_rows(out))
     return out
 
 
@@ -416,7 +441,8 @@ def _join_tables(plan: lp.Join, left: Bindings, right: Bindings,
     for k, v in right.items():
         if k not in out:
             out[k] = v[ri]
-    _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1))
+    _record(ctx, plan, time.perf_counter() - t0, max(n_in, 1),
+            rows_out=len(li))
     return out
 
 
@@ -437,7 +463,7 @@ def _project_rows(plan: lp.Projection, child: Bindings,
         return vals
 
     rows = [{name: cell(vals, i) for name, vals in cols} for i in range(n)]
-    _record(ctx, plan, time.perf_counter() - t0, max(n, 1))
+    _record(ctx, plan, time.perf_counter() - t0, max(n, 1), rows_out=n)
     return rows
 
 
@@ -452,7 +478,8 @@ def execute(plan: lp.PlanOp, ctx: ExecutionContext) -> Tuple[Bindings, List[Dict
         t0 = time.perf_counter()
         ids = _scan_ids(plan, ctx)
         ctx.scan_rows += len(ids)
-        _record(ctx, plan, time.perf_counter() - t0, len(ids))
+        _record(ctx, plan, time.perf_counter() - t0, len(ids),
+                rows_out=len(ids))
         return {plan.var: ids}, []
     if isinstance(plan, (lp.Filter, lp.SemanticFilter)):
         child, _ = execute(plan.child, ctx)
@@ -491,7 +518,8 @@ def _iter_bindings(plan: lp.PlanOp, ctx: ExecutionContext,
     if isinstance(plan, (lp.AllNodeScan, lp.NodeByLabelScan)):
         t0 = time.perf_counter()
         ids = _scan_ids(plan, ctx)
-        _record(ctx, plan, time.perf_counter() - t0, len(ids))
+        _record(ctx, plan, time.perf_counter() - t0, len(ids),
+                rows_out=len(ids))
         for i in range(0, len(ids), batch_rows):
             chunk = ids[i:i + batch_rows]
             ctx.scan_rows += len(chunk)
@@ -705,9 +733,17 @@ def _iter_cascade_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
                 ctx.proxy_scored += n
                 ctx.proxy_hits += n - int(esc.sum())
                 ctx.escalated_rows += int(esc.sum())
+                if ctx.trace is not None:
+                    ctx.trace.add_timed(
+                        "cascade.proxy_score", t_proxy, n=n,
+                        accepted=int(accept.sum()), rejected=int(reject.sum()),
+                        escalated=int(esc.sum()))
                 sub = None
                 ehandles: List[PhiBatch] = []
                 if esc.any():
+                    if ctx.trace is not None:
+                        ctx.trace.event("cascade.escalate", n=int(esc.sum()),
+                                        sub_key=spec.sub_key)
                     sub = {k: v[esc] for k, v in chunk.items()}
                     for sp in spec.exact_bases:
                         h = _begin_extraction(
@@ -730,7 +766,7 @@ def _iter_cascade_filter(plan: lp.SemanticFilter, ctx: ExecutionContext,
                 mask[esc] = exact
             ctx.cascade_chunks += 1
             _record(ctx, plan, time.perf_counter() - t0 + t_proxy,
-                    max(len(mask), 1))
+                    max(len(mask), 1), rows_out=int(mask.sum()))
             out = {k: v[mask] for k, v in chunk.items()}
             if _rows(out):
                 yield out
@@ -928,8 +964,16 @@ def _execute_iter_core(plan: lp.PlanOp, ctx: ExecutionContext,
         it.close()
 
 
-def _record(ctx: ExecutionContext, op: lp.PlanOp, dt: float, rows: int) -> None:
-    ctx.stats.record(ctx.stats.op_key(op), dt, rows)
+def _record(ctx: ExecutionContext, op: lp.PlanOp, dt: float, rows: int,
+            rows_out: Optional[int] = None) -> None:
+    """Per-operator chokepoint: cost-model EWMA feed, plus (when this query
+    is traced/profiled) one completed span and one PROFILE sample."""
+    key = ctx.stats.op_key(op)
+    ctx.stats.record(key, dt, rows)
+    if ctx.profile is not None:
+        ctx.profile.note(op, key, dt, rows, rows_out)
+    if ctx.trace is not None:
+        ctx.trace.add_timed(key, dt, rows_in=rows, rows_out=rows_out)
 
 
 def _name_of(expr: Any) -> str:
@@ -1210,6 +1254,9 @@ def _index_matches(index, qvecs: np.ndarray,
         for step in steps:
             ctx.deadline.note_degradation(
                 step, approximate=(step == "skip_rerank"))
+            if ctx.trace is not None:
+                ctx.trace.event("degradation", step=step)
+    t0 = time.perf_counter()
     while True:
         vals, ids = index.search_many(qvecs, k, nprobe=nprobe, rerank=rerank,
                                       stats=ctx.stats)
@@ -1217,6 +1264,10 @@ def _index_matches(index, qvecs: np.ndarray,
         if int(ok.sum(axis=1).max(initial=0)) < k or k >= n_index:
             break
         k = min(2 * k, n_index)
+    if ctx.trace is not None:
+        ctx.trace.add_timed("index.knn", time.perf_counter() - t0,
+                            q=qvecs.shape[0], k=k, nprobe=nprobe,
+                            rerank=rerank)
     return [ids[i][ok[i]] for i in range(qvecs.shape[0])]
 
 

@@ -44,6 +44,8 @@ from repro.core.executor import (
     execute_iter,
 )
 from repro.core.plan_optimizer import QueryGraph, naive_plan, optimize
+from repro.obs import QueryProfile
+from repro.obs.trace import Trace
 
 
 def _segments(text: str) -> Iterator[Tuple[bool, str]]:
@@ -287,7 +289,9 @@ class Cursor:
                  plan: Optional[lp.PlanOp],
                  batch_rows: int = DEFAULT_BATCH_ROWS,
                  keys: Tuple[str, ...] = (),
-                 rwlock: Optional[RWLock] = None) -> None:
+                 rwlock: Optional[RWLock] = None,
+                 trace: Optional[Trace] = None,
+                 profile: Optional[QueryProfile] = None) -> None:
         self.context = ctx
         self.batch_rows = batch_rows
         self._keys = keys
@@ -299,6 +303,11 @@ class Cursor:
         self._exhausted = plan is None
         self.batches_fetched = 0
         self._deadline = None   # ClusterCursor sets this (it has no ctx)
+        self.trace = trace          # per-query span tree (None = not traced)
+        self._profile = profile     # QueryProfile when PROFILE/profile=True
+        self._profile_plan = plan
+        if self._exhausted and trace is not None:
+            trace.finish()
 
     def keys(self) -> Tuple[str, ...]:
         return self._keys
@@ -327,6 +336,20 @@ class Cursor:
         """Pull one batch; each pull runs under the read lock so a writer
         never resizes the stores mid-chunk.  Between pulls writers may
         commit -- use read_transaction() for whole-result isolation."""
+        if self.trace is None:
+            return self._next_batch_inner()
+        # each pull is a direct child of the root span: pulls are where the
+        # query's wall time goes, so their union is the coverage gate; a
+        # pull that dies (DeadlineExceeded, ...) still closes its span and
+        # finishes the trace
+        try:
+            with self.trace.span("cursor.pull", parent=self.trace.root):
+                return self._next_batch_inner()
+        except BaseException:
+            self.trace.finish()
+            raise
+
+    def _next_batch_inner(self) -> Optional[List[Dict]]:
         if self._rwlock is None:
             return next(self._gen, None)
         self._rwlock.acquire_read()
@@ -340,6 +363,8 @@ class Cursor:
             batch = self._next_batch()
             if batch is None:
                 self._exhausted = True
+                if self.trace is not None:
+                    self.trace.finish()
                 return False
             self.batches_fetched += 1
             self._buf.extend(batch)
@@ -364,6 +389,8 @@ class Cursor:
             batch = self._next_batch()
             if batch is None:
                 self._exhausted = True
+                if self.trace is not None:
+                    self.trace.finish()
                 return
             self.batches_fetched += 1
             yield batch
@@ -389,6 +416,27 @@ class Cursor:
             self._gen.close()
         self._buf.clear()
         self._exhausted = True
+        if self.trace is not None:
+            self.trace.finish()
+
+    # -- PROFILE -----------------------------------------------------------------
+
+    @property
+    def profiled(self) -> bool:
+        return self._profile is not None
+
+    def profile_report(self, include_trace: bool = False) -> Optional[Dict[str, Any]]:
+        """The PROFILE payload (per-operator annotated plan, φ accounting,
+        cluster events, cost-model drift).  None unless the statement ran
+        with ``PROFILE`` / ``profile=True``.  Consume the cursor first —
+        the report covers whatever has executed so far."""
+        if self._profile is None:
+            return None
+        if self.trace is not None and self._exhausted:
+            self.trace.finish()
+        return self._profile.report(self._profile_plan, trace=self.trace,
+                                    deadline=self.deadline,
+                                    include_trace=include_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -409,11 +457,13 @@ class PreparedStatement:
 
     def run(self, parameters: Optional[Dict[str, Any]] = None,
             optimized: bool = True,
-            deadline_ms: Optional[float] = None, **params: Any) -> Cursor:
+            deadline_ms: Optional[float] = None,
+            profile: bool = False, **params: Any) -> Cursor:
         return self.session._run_parsed(self.skeleton, self.query,
                                         {**(parameters or {}), **params},
                                         optimized=optimized, text=self.text,
-                                        deadline_ms=deadline_ms)
+                                        deadline_ms=deadline_ms,
+                                        profile=profile)
 
     def explain(self) -> Dict[str, Any]:
         return self.session.explain(self.text)
@@ -552,7 +602,9 @@ class Session:
 
     def run(self, text: str, parameters: Optional[Dict[str, Any]] = None,
             optimized: bool = True,
-            deadline_ms: Optional[float] = None, **params: Any) -> Cursor:
+            deadline_ms: Optional[float] = None,
+            profile: bool = False, trace: Optional[Trace] = None,
+            **params: Any) -> Cursor:
         """Parse (cached), optimize (cached), execute; returns a streaming
         :class:`Cursor`.  CREATE statements return an empty cursor.
 
@@ -561,42 +613,75 @@ class Session:
         ``deadline_ms``) -- via the neo4j-style ``parameters`` dict; kwargs
         win on overlap.  ``deadline_ms`` is this statement's end-to-end
         budget (a number, or an already-ticking
-        :class:`~repro.core.deadline.Deadline`)."""
+        :class:`~repro.core.deadline.Deadline`).  ``profile=True`` (or a
+        ``PROFILE`` query prefix) traces + profiles this statement
+        regardless of the tracer switch; read ``cursor.profile_report()``
+        after consuming.  ``trace`` lets a caller that already opened a
+        span tree (the serving engine) pass it down."""
         if self._closed:
             raise RuntimeError("session is closed")
         params = {**(parameters or {}), **params}
         skeleton = skeleton_of(text)
+        profile = profile or skeleton[:8].upper() == "PROFILE "
+        if trace is None:
+            trace = self.db.tracer.begin("query", force=profile,
+                                         skeleton=skeleton)
         if self.cache is None or skeleton[:6].upper() == "CREATE":
             return self._run_parsed(skeleton, parse_query(text), params,
                                     optimized=optimized, text=text,
-                                    deadline_ms=deadline_ms)
+                                    deadline_ms=deadline_ms,
+                                    profile=profile, trace=trace)
         # fast path: resolve through the plan cache without parsing
         self.db.stats.refresh_from_graph(self.db.graph)
         self.db.stats.refresh_extractor_stats(self.db.registry)
         key = (skeleton, optimized, self.db.stats.epoch)
-        q, plan = self.cache.get_or_build(
-            key, lambda: self._parse_and_plan(text, optimized))
-        return self._execute(q, plan, params, text, deadline_ms=deadline_ms)
+        if trace is None:
+            q, plan = self.cache.get_or_build(
+                key, lambda: self._parse_and_plan(text, optimized))
+        else:
+            with trace.span("plan") as sp:
+                misses0 = self.cache.misses
+                q, plan = self.cache.get_or_build(
+                    key, lambda: self._parse_and_plan(text, optimized))
+                sp.set(cache="miss" if self.cache.misses > misses0 else "hit")
+        return self._execute(q, plan, params, text, deadline_ms=deadline_ms,
+                             profile=profile, trace=trace)
 
     def _run_parsed(self, skeleton: str, q: Query, params: Dict[str, Any],
                     optimized: bool, text: str,
-                    deadline_ms: Optional[float] = None) -> Cursor:
+                    deadline_ms: Optional[float] = None,
+                    profile: bool = False,
+                    trace: Optional[Trace] = None) -> Cursor:
         """Execute an already-parsed query (run() and PreparedStatement
         both land here)."""
         if self._closed:
             raise RuntimeError("session is closed")
+        profile = profile or bool(getattr(q, "profile", False))
+        if trace is None:
+            trace = self.db.tracer.begin("query", force=profile,
+                                         skeleton=skeleton)
         if isinstance(q, CreateQuery):
             return self._execute(q, None, params, text,
-                                 deadline_ms=deadline_ms)
+                                 deadline_ms=deadline_ms,
+                                 profile=profile, trace=trace)
         self.db.stats.refresh_from_graph(self.db.graph)
         self.db.stats.refresh_extractor_stats(self.db.registry)
         if self.cache is None:
             return self._execute(q, plan_query(self.db, q, optimized),
-                                 params, text, deadline_ms=deadline_ms)
+                                 params, text, deadline_ms=deadline_ms,
+                                 profile=profile, trace=trace)
         key = (skeleton, optimized, self.db.stats.epoch)
-        _, plan = self.cache.get_or_build(
-            key, lambda: (q, plan_query(self.db, q, optimized)))
-        return self._execute(q, plan, params, text, deadline_ms=deadline_ms)
+        if trace is None:
+            _, plan = self.cache.get_or_build(
+                key, lambda: (q, plan_query(self.db, q, optimized)))
+        else:
+            with trace.span("plan") as sp:
+                misses0 = self.cache.misses
+                _, plan = self.cache.get_or_build(
+                    key, lambda: (q, plan_query(self.db, q, optimized)))
+                sp.set(cache="miss" if self.cache.misses > misses0 else "hit")
+        return self._execute(q, plan, params, text, deadline_ms=deadline_ms,
+                             profile=profile, trace=trace)
 
     def _parse_and_plan(self, text: str,
                         optimized: bool) -> Tuple[Query, Optional[lp.PlanOp]]:
@@ -607,7 +692,9 @@ class Session:
 
     def _execute(self, q: Query, plan: Optional[lp.PlanOp],
                  params: Dict[str, Any], text: str,
-                 deadline_ms: Optional[float] = None) -> Cursor:
+                 deadline_ms: Optional[float] = None,
+                 profile: bool = False,
+                 trace: Optional[Trace] = None) -> Cursor:
         missing = query_params(q) - set(params)
         if missing:
             raise KeyError(f"unbound parameters: "
@@ -615,26 +702,35 @@ class Session:
         deadline = Deadline.resolve(
             deadline_ms, self.deadline_ms,
             self.db.cfg.cluster.default_deadline_ms)
+        qprof: Optional[QueryProfile] = None
+        if profile:
+            qprof = QueryProfile()
+            if plan is not None:
+                qprof.capture_predictions(plan, self.db.stats)
         ctx = ExecutionContext(self.db, params,
                                prefetch_depth=self.prefetch_depth,
-                               deadline=deadline)
+                               deadline=deadline,
+                               trace=trace, profile=qprof)
         if isinstance(q, CreateQuery):
             self._execute_write(q, text, params)
-            return Cursor(ctx, None)
+            return Cursor(ctx, None, trace=trace, profile=qprof)
         assert plan is not None
         if self._tx is not None:
             # inside a transaction the scope already holds the lock; rows
             # must not stream past its release, so materialize here
             cur = Cursor(ctx, plan, self.batch_rows,
-                         keys=_projection_keys(q))
+                         keys=_projection_keys(q),
+                         trace=trace, profile=qprof)
             rows = cur.fetchall()
-            out = Cursor(ctx, None, keys=cur.keys())
+            out = Cursor(ctx, None, keys=cur.keys(),
+                         trace=trace, profile=qprof)
+            out._profile_plan = plan
             out._buf.extend(rows)
             return out
         # otherwise each chunk pull takes the shared lock side so writers
         # never race a mid-chunk scan
         return Cursor(ctx, plan, self.batch_rows, keys=_projection_keys(q),
-                      rwlock=self.db.rwlock)
+                      rwlock=self.db.rwlock, trace=trace, profile=qprof)
 
     def _execute_write(self, q: CreateQuery, text: str,
                        params: Dict[str, Any]) -> None:

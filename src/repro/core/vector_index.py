@@ -152,7 +152,7 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
                        mode: str = "auto", rerank: bool = True,
                        stats=None, record: Optional[Callable] = None,
                        pool=None, split_rerank_budget: bool = False,
-                       deadline=None
+                       deadline=None, trace=None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """THE cluster merge schedule: per-shard ``search_many`` (ADC, float or
     fused, per each shard's cost-model call) -> one-dispatch k-way
@@ -190,7 +190,13 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
     from the shards that answered -- the padding contract above already
     guarantees dropped contributions surface as (-inf, -1) slots, never
     as fabricated candidates.  ``partial_topk`` is noted on the deadline;
-    if NO shard answers in time, :class:`DeadlineExceeded` is raised."""
+    if NO shard answers in time, :class:`DeadlineExceeded` is raised.
+
+    ``trace`` (a :class:`repro.obs.Trace`, optional) records one
+    ``knn.shard_scan`` span per shard (attributed with rows scanned and
+    re-rank mode, correct even off pool threads), a ``knn.merge`` span for
+    the device-side reduce, and a ``degradation`` event when the partial
+    top-k ladder step fires."""
     queries = np.asarray(queries, np.float32)
     qn = queries.shape[0]
     out_v = np.full((qn, k), -np.inf, np.float32)
@@ -204,14 +210,23 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
         rm = max(1, -(-max(sh.cfg.rerank_mult for sh in shards)
                       // len(shards)))
 
+    # spans from pool threads attach to the caller's current span, captured
+    # here (the pool thread's own stack is empty, so parent= is explicit)
+    t_parent = trace.current() if trace is not None else None
+
     def scan_one(s: int):
         t0 = time.perf_counter()
         rows0 = shards[s].scan_rows
         v, i = shards[s].search_many(queries, k, nprobe, stats=per_stats[s],
                                      mode=mode, rerank=rerank,
                                      rerank_mult=rm)
+        dt = time.perf_counter() - t0
+        scanned = shards[s].scan_rows - rows0
+        if trace is not None:
+            trace.add_timed("knn.shard_scan", dt, parent=t_parent, shard=s,
+                            rows=int(scanned), rerank=rerank)
         if record is not None:
-            record(s, time.perf_counter() - t0, shards[s].scan_rows - rows0)
+            record(s, dt, scanned)
         return v, i
 
     pad = (np.full((qn, k), -np.inf, np.float32),
@@ -234,6 +249,10 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
                 deadline.check("knn scatter")
             if answered < len(shards):
                 deadline.note_degradation("partial_topk")
+                if trace is not None:
+                    trace.event("degradation", parent=t_parent,
+                                step="partial_topk",
+                                answered=answered, shards=len(shards))
     elif deadline is not None:
         parts, answered = [], 0
         for s in range(len(shards)):
@@ -246,10 +265,18 @@ def scatter_gather_knn(shards: Sequence["IVFIndex"], queries: np.ndarray,
             answered += 1
         if answered < len(shards):
             deadline.note_degradation("partial_topk")
+            if trace is not None:
+                trace.event("degradation", parent=t_parent,
+                            step="partial_topk", answered=answered,
+                            shards=len(shards))
     else:
         parts = [scan_one(s) for s in range(len(shards))]
+    t_merge = time.perf_counter()
     v, i = merge_topk_dev(jnp.stack([jnp.asarray(p[0]) for p in parts]),
                           jnp.stack([jnp.asarray(p[1]) for p in parts]), k)
+    if trace is not None:
+        trace.add_timed("knn.merge", time.perf_counter() - t_merge,
+                        parent=t_parent, shards=len(parts), k=k)
     total = sum(sh.n_total for sh in shards)
     kk = min(k, total, v.shape[1])
     v = np.asarray(v)[:, :kk]

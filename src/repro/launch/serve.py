@@ -29,6 +29,7 @@ from repro.configs.pandadb import PandaDBConfig, ServingConfig, VectorIndexConfi
 from repro.core import PandaDB
 from repro.core.aipm import feature_hash_extractor, label_extractor
 from repro.data.synthetic_graph import SNBConfig, build_snb
+from repro.obs import prometheus_dump
 from repro.serving.engine import QueryServer
 
 
@@ -103,6 +104,8 @@ def run_overload(db, queries, args) -> None:
     server.close()
     print("overload:", json.dumps(summary, indent=1))
     print("counters:", json.dumps(server.route_counts(), indent=1))
+    if args.metrics:
+        print(prometheus_dump(), end="")
     if hasattr(db, "close"):
         db.close()
 
@@ -128,6 +131,9 @@ def main() -> None:
                     help="per-request budget in --overload mode")
     ap.add_argument("--queue-depth", type=int, default=32,
                     help="admission queue bound in --overload mode")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print a Prometheus-style text dump of every live "
+                         "metrics registry after the run")
     args = ap.parse_args()
 
     if args.chaos and args.replicas < 2:
@@ -159,9 +165,12 @@ def main() -> None:
     print(json.dumps(stats.summary(), indent=1))
     if args.shards > 0:
         print("routing:", json.dumps(server.route_counts(), indent=1))
-        db.close()
     else:
         print("cache:", db.cache.stats())
+    if args.metrics:
+        print(prometheus_dump(), end="")
+    if args.shards > 0:
+        db.close()
 
 
 if __name__ == "__main__":

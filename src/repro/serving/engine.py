@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.configs.pandadb import ServingConfig
 from repro.core.deadline import Deadline, DeadlineExceeded, OverloadedError
+from repro.obs import MetricsRegistry, SlowQueryLog
 
 #: a request: query text, or (text, params dict)
 Request = Union[str, Tuple[str, Dict[str, Any]]]
@@ -82,17 +83,19 @@ class ServeStats:
 
 class _ServeRequest:
     __slots__ = ("text", "params", "optimized", "done", "deadline",
-                 "t_submit")
+                 "t_submit", "trace")
 
     def __init__(self, text: str, params: Dict[str, Any], optimized: bool,
                  done: Callable[[Tuple[Any, Any]], None],
-                 deadline: Optional[Deadline], t_submit: float) -> None:
+                 deadline: Optional[Deadline], t_submit: float,
+                 trace=None) -> None:
         self.text = text
         self.params = params
         self.optimized = optimized
         self.done = done
         self.deadline = deadline
         self.t_submit = t_submit
+        self.trace = trace      # span tree opened at admission (or None)
 
 
 class _AdmissionQueue:
@@ -165,10 +168,21 @@ class QueryServer:
         self._workers: List[threading.Thread] = []
         self._started = False
         self._closed = False
-        self.counters: Dict[str, int] = {
-            "submitted": 0, "completed": 0, "in_budget": 0, "failed": 0,
-            "shed": 0, "rejected": 0, "dropped": 0, "expired": 0,
-            "degraded": 0}
+        #: unified registry: admission/overload counters + latency
+        #: histograms; ``overload_counters()`` is the byte-compatible view
+        self.metrics = MetricsRegistry("serve")
+        for name in ("submitted", "completed", "in_budget", "failed",
+                     "shed", "rejected", "dropped", "expired", "degraded"):
+            self.metrics.counter(name)
+        #: the db's tracer (PandaDB and the coordinators both carry one);
+        #: None on bare objects without the obs wiring
+        self.tracer = getattr(db, "tracer", None)
+        ocfg = getattr(getattr(db, "cfg", None), "obs", None)
+        self.slow_log: Optional[SlowQueryLog] = None
+        if ocfg is not None and ocfg.slow_query_log \
+                and ocfg.slow_query_ms > 0:
+            self.slow_log = SlowQueryLog(ocfg.slow_query_log,
+                                         ocfg.slow_query_ms)
         #: per-skeleton service-time EWMA (seconds), the admission-control
         #: cost model: cheap, self-tuning, keyed by query text
         self._service_ewma: Dict[str, float] = {}
@@ -204,8 +218,7 @@ class QueryServer:
     # -- admission control -----------------------------------------------------
 
     def _count(self, name: str, n: int = 1) -> None:
-        with self._lock:
-            self.counters[name] = self.counters.get(name, 0) + n
+        self.metrics.counter(name).inc(n)
 
     def _note_service(self, text: str, dt_s: float) -> None:
         with self._lock:
@@ -234,26 +247,38 @@ class QueryServer:
         scfg = self.serving
         deadline = Deadline.resolve(deadline_ms, scfg.default_deadline_ms)
         self._count("submitted")
+        trace = (self.tracer.begin("serve", text=text)
+                 if self.tracer is not None and self.tracer.enabled else None)
         est = self._estimate_service_s(text)
         if deadline is not None and scfg.shed_on_arrival and est is not None:
             wait_est = len(self._queue) * est / max(1, self.n_workers)
             if est + wait_est > deadline.remaining():
                 self._count("shed")
+                if trace is not None:
+                    trace.event("shed", est_ms=round(1000 * (est + wait_est),
+                                                     3))
+                    trace.finish()
                 raise OverloadedError(
                     f"shed on arrival: estimated {1000 * (est + wait_est):.1f}ms "
                     f"service exceeds {1000 * deadline.remaining():.1f}ms budget",
                     retry_after_s=self._retry_after_s(est))
         out: "queue.Queue" = queue.Queue(maxsize=1)
         req = _ServeRequest(text, params or {}, optimized, out.put, deadline,
-                            time.perf_counter())
+                            time.perf_counter(), trace=trace)
         admitted, dropped = self._queue.put(req, policy=scfg.admission_policy)
         for old in dropped:
             self._count("dropped")
+            if old.trace is not None:
+                old.trace.event("drop")
+                old.trace.finish()
             old.done(([], OverloadedError(
                 "dropped from queue to admit fresher work",
                 retry_after_s=self._retry_after_s(est))))
         if not admitted:
             self._count("rejected")
+            if trace is not None:
+                trace.event("drop", reason="queue_full")
+                trace.finish()
             raise OverloadedError(
                 f"queue full ({self._queue.depth} deep)",
                 retry_after_s=self._retry_after_s(est))
@@ -278,17 +303,24 @@ class QueryServer:
     def _execute(self, session, req: _ServeRequest) -> None:
         t0 = time.perf_counter()
         qms = (t0 - req.t_submit) * 1000
+        trace = req.trace
+        if trace is not None:
+            # the queue wait, after the fact: admission -> worker pickup
+            trace.add_timed("queue.wait", qms / 1000, parent=trace.root)
         d = req.deadline
         if d is not None and d.expired():
             # budget burned in the queue; do not occupy the worker
             self._count("expired")
+            if trace is not None:
+                trace.event("degradation", step="expired_in_queue")
+                trace.finish()
             req.done(([], DeadlineExceeded(
                 "queued", d.budget_s * 1000, d.elapsed() * 1000)))
             return
         degradations: List[str] = []
         try:
             cur = session.run(req.text, req.params, optimized=req.optimized,
-                              deadline_ms=d)
+                              deadline_ms=d, trace=trace)
             rows = cur.fetchall()
             degradations = cur.degradations
             err: Optional[BaseException] = None
@@ -299,6 +331,8 @@ class QueryServer:
             rows, err = [], e
             self._count("failed")
         dt = time.perf_counter() - t0
+        if trace is not None:
+            trace.finish()
         if err is None:
             self._count("completed")
             if degradations:
@@ -306,6 +340,15 @@ class QueryServer:
             if d is None or not d.expired():
                 self._count("in_budget")
             self._note_service(req.text, dt)
+        self.metrics.histogram("latency_ms").observe(dt * 1000)
+        self.metrics.histogram("queue_ms").observe(qms)
+        self.metrics.histogram("e2e_ms").observe(qms + dt * 1000)
+        if self.slow_log is not None:
+            self.slow_log.maybe_log(
+                text=req.text, total_ms=qms + dt * 1000, queue_ms=qms,
+                rows=len(rows), error=type(err).__name__ if err else None,
+                degradations=degradations,
+                trace_id=trace.trace_id if trace is not None else None)
         with self._lock:
             self._stats.latencies_ms.append(dt * 1000)
             self._stats.queue_ms.append(qms)
@@ -377,8 +420,8 @@ class QueryServer:
                 break
         elapsed = time.perf_counter() - t0
         self._stats.finished = time.perf_counter()
+        counters = self.overload_counters()
         with self._lock:
-            counters = dict(self.counters)
             e2e = list(self._stats.e2e_ms)
         good = counters["in_budget"]
         return {
@@ -398,8 +441,7 @@ class QueryServer:
         ``dropped`` (evicted under drop_oldest), ``expired`` (budget gone
         before/while executing), ``degraded`` (completed via the ladder),
         ``in_budget`` (completed inside their budget)."""
-        with self._lock:
-            return dict(self.counters)
+        return self.metrics.counters_view()
 
     def route_counts(self) -> Dict[str, int]:
         """Routed-vs-fanout statement counts when serving a sharded

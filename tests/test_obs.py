@@ -1,0 +1,620 @@
+"""Observability: tracing spans, unified metrics, PROFILE (PR 10).
+
+Contracts pinned here:
+
+* spans always close (normal exit, exception exit, cursor close, deadline
+  expiry, shed/drop) and the tree stays well-nested,
+* tracing ON changes no results -- single node and replicated P=2 under a
+  seeded chaos kill are byte-identical to the untraced run, and the chaos
+  trace is complete with a ``failover`` span,
+* registry counters are exact under thread hammering (the old plain-dict
+  ``counts[k] += 1`` path could lose updates between bytecode steps),
+* the consolidated counter views (``cluster_counters``, ``route_counts``,
+  ``overload_counters``) keep their old shapes,
+* ``PROFILE`` on a mixed semantic query over a replicated P=2 cluster
+  returns a per-operator annotated plan whose span tree covers >= 95% of
+  wall time, with cluster events and per-op cost-model drift.
+"""
+import dataclasses
+import json
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.pandadb import (
+    AIPMConfig,
+    ObsConfig,
+    PandaDBConfig,
+    ServingConfig,
+)
+from repro.core import PandaDB
+from repro.core.aipm import feature_hash_extractor, label_extractor
+from repro.core.cascade import CascadeCalibrator
+from repro.core.deadline import DeadlineExceeded, OverloadedError
+from repro.cluster import FaultInjector, ReplicatedPandaDB, ShardedPandaDB
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    QueryProfile,
+    SlowQueryLog,
+    Trace,
+    Tracer,
+    format_profile,
+    global_snapshot,
+    prometheus_dump,
+)
+from repro.serving.engine import QueryServer
+
+N_NODES = 72
+DIM = 32
+
+
+def _payloads(n=N_NODES, seed=3, dup_every=6):
+    rng = np.random.default_rng(seed)
+    base = rng.bytes(256)
+    return base, [base if dup_every and i % dup_every == 0 else rng.bytes(256)
+                  for i in range(n)]
+
+
+#: duplicate photos every 6 nodes: semantic-filter queries get real matches
+BASE, PAYLOADS = _payloads()
+
+SCAN_Q = "MATCH (p:Person) WHERE p.rank > 1 RETURN p.name, p.rank"
+SEM_Q = ("MATCH (p:Person) WHERE p.photo->face ~: "
+         "createFromSource($src)->face RETURN p.name")
+
+
+def slow_face_extractor(delay_s=0.004):
+    """Deterministic φ with a per-batch stall: same vectors as the plain
+    extractor, enough wall time that fixed tracing overhead amortizes."""
+    inner = feature_hash_extractor(dim=DIM)
+
+    def fn(raws):
+        time.sleep(delay_s)
+        return inner(raws)
+
+    return fn
+
+
+def _populate(db, payloads=PAYLOADS, extractor=None):
+    """Same creation order on every topology (ids must align)."""
+    db.register_extractor("face", extractor or feature_hash_extractor(dim=DIM))
+    cn = db.create_node if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_node
+    cr = db.create_relationship if isinstance(db, ShardedPandaDB) \
+        else db.graph.create_relationship
+    nodes = [cn("Person", name=f"n{i}", rank=float(i % 7),
+                photo=payloads[i]) for i in range(N_NODES)]
+    for i in range(N_NODES - 1):
+        cr(nodes[i], nodes[i + 1], "KNOWS")
+    return db
+
+
+def traced_cfg(**obs_kw):
+    obs_kw.setdefault("trace", True)
+    return dataclasses.replace(PandaDBConfig(), obs=ObsConfig(**obs_kw))
+
+
+def make_replicated(n_shards=2, replication=2, seed=0, hedge=False,
+                    merge_rows=None, trace=True, extractor=None):
+    faults = FaultInjector(seed=seed)
+    cfg = traced_cfg(trace=trace)
+    cluster = dataclasses.replace(cfg.cluster, hedge_reads=hedge)
+    if merge_rows is not None:
+        cluster = dataclasses.replace(cluster, merge_batch_rows=merge_rows)
+    cfg = dataclasses.replace(cfg, cluster=cluster)
+    c = _populate(ReplicatedPandaDB(n_shards=n_shards, cfg=cfg,
+                                    replication=replication, faults=faults),
+                  extractor=extractor)
+    return c, faults
+
+
+@pytest.fixture(scope="module")
+def single():
+    return _populate(PandaDB())
+
+
+class Gate:
+    """Extractor throttle: signals entry, blocks until released."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def wrap(self, inner):
+        def fn(raws):
+            self.entered.set()
+            assert self.release.wait(30), "gate never released"
+            return inner(raws)
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# span / trace API
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_close():
+    tr = Trace("q", skeleton="MATCH ...")
+    with tr.span("plan", cache="miss"):
+        with tr.span("optimize"):
+            pass
+    with tr.span("pull") as sp:
+        sp.set(rows=4)
+    tr.finish()
+    tr.finish()                                  # idempotent
+    assert tr.root.closed
+    plan, pull = tr.root.children
+    assert plan.name == "plan" and plan.attrs == {"cache": "miss"}
+    assert plan.children[0].name == "optimize"
+    assert pull.attrs == {"rows": 4}
+    assert all(s.closed for s in tr.spans())
+    assert tr.well_nested()
+    d = tr.to_dict()
+    assert d["root"]["children"][0]["name"] == "plan"
+    assert json.dumps(d)                         # JSON-serializable
+
+
+def test_span_closed_and_stamped_on_exception():
+    tr = Trace("q")
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("x")
+    tr.finish()
+    sp = tr.find("boom")[0]
+    assert sp.closed and sp.attrs["error"] == "ValueError"
+    assert tr.well_nested()
+
+
+def test_cross_thread_parent_attachment():
+    """Pool threads have an empty span stack; explicit ``parent=`` (captured
+    in the submitting thread) keeps the tree connected."""
+    tr = Trace("q")
+    with tr.span("scatter") as scatter:
+        def leg():
+            time.sleep(0.005)                    # the measured work
+            tr.add_timed("shard_scan", 0.001, parent=scatter, shard=1)
+            tr.event("replica.pick", parent=scatter, replica=0)
+            # without parent= a fresh thread attaches to the root
+            tr.event("orphanish")
+        t = threading.Thread(target=leg)
+        t.start()
+        t.join()
+    tr.finish()
+    scan = tr.find("shard_scan")[0]
+    assert scan.parent is scatter and scan.closed
+    assert tr.find("replica.pick")[0].parent is scatter
+    assert tr.find("orphanish")[0].parent is tr.root
+    assert tr.well_nested()
+
+
+def test_coverage_union_of_direct_children():
+    tr = Trace("q")
+    with tr.span("work"):
+        time.sleep(0.03)
+    tr.finish()
+    assert tr.coverage() > 0.9
+    idle = Trace("q")
+    time.sleep(0.01)
+    idle.event("blip")                           # zero-duration: no coverage
+    time.sleep(0.01)
+    idle.finish()
+    assert idle.coverage() < 0.2
+
+
+def test_tracer_off_by_default_and_force():
+    t = Tracer()
+    assert t.begin("query") is None and t.last is None
+    forced = t.begin("query", force=True)        # the PROFILE path
+    assert isinstance(forced, Trace) and t.last is forced
+    t.enable()
+    assert isinstance(t.begin("query"), Trace)
+    t.disable()
+    assert t.begin("query") is None
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    c = Counter("n")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    c.reset()
+    assert c.value == 0
+    g = Gauge("depth")
+    g.set(3)
+    g.add(-1)
+    assert g.value == 2.0
+    h = Histogram("lat_ms")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.count == 100 and h.sum == pytest.approx(5050.0)
+    assert 10 <= h.percentile(50) <= 60          # bucket-interpolated
+    assert h.percentile(99) <= 250
+    s = h.summary()
+    assert set(s) == {"count", "sum", "p50", "p95", "p99"}
+    assert s["p50"] <= s["p95"] <= s["p99"]
+
+
+def test_registry_views_snapshot_prometheus():
+    reg = MetricsRegistry("unit")
+    reg.counter("hits").inc(3)
+    reg.counter("sub:a").inc()
+    reg.gauge("depth").set(7)
+    reg.histogram("lat_ms").observe(12.0)
+    assert reg.counter("hits") is reg.counter("hits")      # cached
+    assert reg.counters_view() == {"hits": 3, "sub:a": 1}
+    assert reg.counters_view(prefix="sub:") == {"a": 1}
+    snap = reg.snapshot()
+    assert snap["namespace"] == "unit"
+    assert snap["counters"]["hits"] == 3
+    assert snap["gauges"]["depth"] == 7.0
+    assert snap["histograms"]["lat_ms"]["count"] == 1
+    text = reg.prometheus_text()
+    assert "# TYPE unit_hits_total counter" in text
+    assert "unit_hits_total 3" in text
+    assert "# TYPE unit_sub_a_total counter" in text       # sanitized name
+    assert "unit_depth 7.0" in text
+    assert 'unit_lat_ms_bucket{le="+Inf"} 1' in text
+    assert "unit_lat_ms_count 1" in text
+    assert any(s["namespace"] == "unit" for s in global_snapshot())
+    assert "unit_hits_total 3" in prometheus_dump()
+
+
+def test_counters_exact_under_thread_hammer():
+    """8 threads x 5000 incs == 40000 exactly.  The old per-module
+    ``dict[k] += 1`` read-modify-write could drop updates when the
+    interpreter switched threads between the load and the store; the
+    registry Counter locks the pair."""
+    reg = MetricsRegistry("hammer")
+    c = reg.counter("n")
+    h = reg.histogram("v")
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)                  # force frequent switches
+    try:
+        def work():
+            for _ in range(5000):
+                c.inc()
+                h.observe(1.0)
+        threads = [threading.Thread(target=work) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    assert c.value == 40_000
+    assert h.count == 40_000
+
+
+def test_slow_query_log(tmp_path):
+    path = tmp_path / "slow.jsonl"
+    log = SlowQueryLog(str(path), threshold_ms=10.0)
+    assert not log.maybe_log(text="fast", total_ms=3.0)
+    assert not path.exists()
+    assert log.maybe_log(text="slow", total_ms=25.0, queue_ms=5.0, rows=7,
+                         degradations=["cap_nprobe"], trace_id="t0000002a")
+    rec = json.loads(path.read_text().splitlines()[0])
+    assert rec["text"] == "slow" and rec["total_ms"] == 25.0
+    assert rec["rows"] == 7 and rec["degradations"] == ["cap_nprobe"]
+    assert rec["trace_id"] == "t0000002a" and rec["error"] is None
+
+
+# ---------------------------------------------------------------------------
+# consolidated counter views keep their old shapes
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_counter_views_shape():
+    c, _ = make_replicated(trace=False)
+    c.query(SCAN_Q)
+    c.query("MATCH (p:Person) WHERE p = $id RETURN p.name", {"id": 7})
+    rc = c.route_counts
+    assert rc["routed"] == 1 and rc["fanout"] == 1
+    cc = c.cluster_counters()
+    keys = list(cc)
+    assert {"hedges_fired", "hedges_won", "retries", "failovers",
+            "rebalance_moves", "teardown_errors", "degraded",
+            "breaker_opens", "breaker_closes", "breaker_probes"} <= set(keys)
+    assert not any(k.startswith("route_") for k in keys)
+    rr = [k for k in keys if k.startswith("replica_reads:")]
+    assert rr and rr == sorted(rr)               # per-replica keys, sorted
+    i0 = keys.index(rr[0])
+    assert keys[i0:i0 + len(rr)] == rr           # ...and contiguous
+    # the registry sees the same numbers the legacy view reports
+    assert c.metrics.counters_view()["failovers"] == cc["failovers"]
+    assert c.metrics.snapshot()["gauges"]["breaker_opens"] \
+        == cc["breaker_opens"]
+    c.close()
+
+
+def test_serve_counter_view_matches_registry():
+    db = PandaDB()
+    db.register_extractor("animal", label_extractor(["cat", "dog"]))
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(256))
+    server = QueryServer(db, n_workers=1)
+    server.start()
+    rows, err = server.submit(
+        "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    ).get(timeout=10)
+    server.close()
+    assert err is None
+    oc = server.overload_counters()
+    assert oc == server.metrics.counters_view()
+    assert set(oc) == {"submitted", "completed", "in_budget", "failed",
+                       "shed", "rejected", "dropped", "expired", "degraded"}
+    assert oc["submitted"] == oc["completed"] == 1
+    assert server.metrics.histogram("latency_ms").count == 1
+
+
+def test_aipm_and_cascade_metrics_hooks():
+    db = PandaDB()
+    db.register_extractor("face", feature_hash_extractor(dim=DIM))
+    rng = np.random.default_rng(3)
+    for i in range(8):
+        db.graph.create_node("Person", name=f"n{i}", photo=rng.bytes(256))
+    db.query(SEM_Q, {"src": BASE})
+    mv = db.metrics.counters_view()
+    assert mv.get("aipm_calls:face", 0) >= 1
+    assert mv.get("aipm_rows:face", 0) >= 8
+    assert db.metrics.histogram("aipm_batch_ms").count >= 1
+
+    reg = MetricsRegistry("cal")
+    cal = CascadeCalibrator(min_curve_pairs=4, metrics=reg)
+    scores = np.linspace(0.0, 1.0, 32)
+    cal.set_curve("face", 1, 1, scores, scores > 0.5)
+    assert cal.thresholds("face", 1, 1, 0.9) is not None   # real fit
+    assert cal.thresholds("face", 1, 1, 0.9) is not None   # memoized
+    view = reg.counters_view()
+    assert view["cascade_curves_installed"] == 1
+    assert view["cascade_band_fits"] == 1
+    assert view["cascade_fit_memo_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# tracing changes no results; spans close on every exit path
+# ---------------------------------------------------------------------------
+
+
+def test_tracing_on_byte_identical_single_node(single):
+    want_scan = single.query(SCAN_Q)
+    want_sem = single.query(SEM_Q, {"src": BASE})
+    db = _populate(PandaDB(traced_cfg()))
+    assert db.tracer.enabled
+    assert db.query(SCAN_Q) == want_scan
+    assert db.query(SEM_Q, {"src": BASE}) == want_sem
+    tr = db.tracer.last
+    assert tr is not None and tr.root.closed
+    assert all(s.closed for s in tr.spans())
+    assert tr.well_nested()
+    assert tr.find("plan") and tr.find("cursor.pull")
+
+
+@pytest.mark.chaos
+def test_tracing_on_byte_identical_replicated_chaos_kill(single):
+    """P=2 replicated, tracing ON, seeded fail-stop mid-query: rows stay
+    byte-identical and the trace is complete + well-nested with a
+    ``failover`` span recording the replica switch."""
+    want = single.query(SCAN_Q)
+    c, faults = make_replicated(hedge=False, merge_rows=4)
+    with c.session(batch_rows=8) as s:
+        cur = s.run(SCAN_Q)
+        head = [cur.fetchone() for _ in range(5)]
+        faults.fail_stop(0, 0)
+        faults.fail_stop(1, 0)
+        rows = head + cur.fetchall()
+    assert rows == want
+    tr = cur.trace
+    assert tr is not None and tr.root.closed
+    assert all(sp.closed for sp in tr.spans())
+    assert tr.well_nested()
+    fo = tr.find("failover")
+    assert fo and fo[0].attrs["to_replica"] == 1
+    assert c.cluster_counters()["failovers"] >= 1
+    c.close()
+
+
+def test_spans_closed_on_deadline_exceeded():
+    gate = Gate()
+    cfg = dataclasses.replace(
+        PandaDBConfig(aipm=AIPMConfig(workers=1, timeout_ms=30_000)),
+        obs=ObsConfig(trace=True))
+    db = PandaDB(cfg)
+    db.register_extractor(
+        "animal", gate.wrap(label_extractor(["cat", "dog"])))
+    rng = np.random.default_rng(3)
+    for i in range(12):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(256))
+    s = db.session(batch_rows=32, prefetch_depth=1)
+    with pytest.raises(DeadlineExceeded):
+        s.run("MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name",
+              deadline_ms=150).fetchall()
+    gate.release.set()
+    tr = db.tracer.last
+    assert tr is not None and tr.root.closed
+    assert all(sp.closed for sp in tr.spans())
+    assert any(sp.attrs.get("error") == "DeadlineExceeded"
+               for sp in tr.spans())
+    assert tr.well_nested()
+
+
+def test_spans_closed_on_cursor_close(single):
+    db = _populate(PandaDB(traced_cfg()))
+    with db.session(batch_rows=8) as s:
+        cur = s.run(SCAN_Q)
+        assert cur.fetchone() is not None
+        tr = cur.trace
+        assert tr is not None and not tr.root.closed
+        cur.close()
+    assert tr.root.closed
+    assert all(sp.closed for sp in tr.spans())
+    assert tr.well_nested()
+
+
+@pytest.mark.overload
+def test_spans_closed_on_overload_shed():
+    db = PandaDB(traced_cfg())
+    db.register_extractor("animal", label_extractor(["cat"]))
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(256))
+    q = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    server = QueryServer(db, n_workers=1,
+                         serving=ServingConfig(shed_on_arrival=True))
+    server.start()
+    with server._lock:
+        server._service_ewma[q] = 0.080          # seeded observation
+    with pytest.raises(OverloadedError):
+        server.submit(q, deadline_ms=5)
+    tr = db.tracer.last
+    assert tr is not None and tr.root.name == "serve" and tr.root.closed
+    assert tr.find("shed")
+    server.close()
+
+
+@pytest.mark.overload
+def test_serve_trace_records_queue_wait():
+    db = PandaDB(traced_cfg())
+    db.register_extractor("animal", label_extractor(["cat"]))
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(256))
+    server = QueryServer(db, n_workers=1)
+    server.start()
+    rows, err = server.submit(
+        "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    ).get(timeout=10)
+    server.close()
+    assert err is None
+    tr = db.tracer.last
+    assert tr.root.name == "serve" and tr.root.closed
+    assert tr.find("queue.wait") and tr.find("cursor.pull")
+    assert tr.well_nested()
+
+
+@pytest.mark.overload
+def test_slow_query_log_from_serving_engine(tmp_path):
+    path = tmp_path / "slow.jsonl"
+    cfg = traced_cfg(slow_query_ms=0.001, slow_query_log=str(path))
+    db = PandaDB(cfg)
+    db.register_extractor("animal", label_extractor(["cat"]))
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        db.graph.create_node("Pet", name=f"pet_{i}", photo=rng.bytes(256))
+    server = QueryServer(db, n_workers=1)
+    server.start()
+    text = "MATCH (p:Pet) WHERE p.photo->animal = 'cat' RETURN p.name"
+    rows, err = server.submit(text).get(timeout=10)
+    server.close()
+    assert err is None
+    rec = json.loads(path.read_text().splitlines()[0])
+    assert rec["text"] == text and rec["error"] is None
+    assert rec["total_ms"] >= rec["queue_ms"] >= 0
+    assert rec["trace_id"] == db.tracer.last.trace_id
+
+
+# ---------------------------------------------------------------------------
+# PROFILE
+# ---------------------------------------------------------------------------
+
+
+def test_profile_single_node(single):
+    db = _populate(PandaDB())                    # tracing off: PROFILE forces
+    plain = db.session().run(SEM_Q, {"src": BASE})
+    want = plain.fetchall()
+    assert not plain.profiled and plain.profile_report() is None
+    cur = db.session().run("PROFILE " + SEM_Q, {"src": BASE})
+    assert cur.fetchall() == want                # PROFILE changes no rows
+    assert cur.profiled
+    rep = cur.profile_report()
+    ops = []
+
+    def walk(node):
+        ops.append(node)
+        for ch in node["children"]:
+            walk(ch)
+
+    walk(rep["plan"])
+    timed = [n for n in ops if "time_ms" in n]
+    assert timed and all(n["calls"] >= 1 for n in timed)
+    assert rep["phi"]["extract_count"] >= 1
+    assert rep["drift"]
+    for d in rep["drift"].values():
+        assert {"predicted_s", "observed_s", "ratio"} <= set(d)
+    assert rep["well_nested"] and rep["wall_ms"] > 0
+    assert "trace" not in rep
+    assert "root" in cur.profile_report(include_trace=True)["trace"]
+    # profile=True kwarg is the same switch without the keyword
+    cur2 = db.session().run(SEM_Q, {"src": BASE}, profile=True)
+    cur2.fetchall()
+    assert cur2.profiled
+
+
+@pytest.mark.chaos
+def test_profile_replicated_mixed_query_acceptance(single):
+    """The PR acceptance gate: PROFILE of a semantic query over a
+    replicated P=2 cluster -- annotated per-operator plan, span tree
+    covering >= 95% of wall time, cluster events, per-op drift."""
+    want = single.query(SEM_Q, {"src": BASE})
+    assert want                                  # duplicates exist
+    c, _ = make_replicated(hedge=True, trace=False,
+                           extractor=slow_face_extractor())
+    with c.session() as s:
+        cur = s.run("PROFILE " + SEM_Q, {"src": BASE})
+        rows = cur.fetchall()
+    assert rows == want                          # φ is deterministic; the
+    #                                              stall only adds wall time
+    rep = cur.profile_report()
+    assert rep["shards_touched"] == [0, 1]
+    assert rep["well_nested"]
+    assert rep["span_coverage"] >= 0.95
+    assert rep["events"].get("replica.pick", 0) >= 2     # one per shard
+    assert rep["events"].get("phi.dispatch", 0) >= 1
+    assert rep["phi"]["extract_count"] >= N_NODES
+    timed = []
+
+    def walk(node):
+        if "time_ms" in node:
+            timed.append(node)
+        for ch in node["children"]:
+            walk(ch)
+
+    walk(rep["plan"])
+    assert timed
+    assert rep["drift"] and all(d["observed_s"] >= 0
+                                for d in rep["drift"].values())
+    text = format_profile(rep)
+    assert "drift (predicted/observed per op key):" in text
+    assert "span_coverage" in text
+    c.close()
+
+
+def test_profile_report_deadline_degradations():
+    prof = QueryProfile()
+
+    class _Plan:
+        def _describe_args(self):
+            return "()"
+
+        def children(self):
+            return []
+
+    class _Deadline:
+        degradations = ["cap_nprobe"]
+        approximate = True
+
+    prof.note(_Plan(), "scan", 0.001, 10, rows_out=5)
+    rep = prof.report(_Plan(), deadline=_Deadline())
+    assert rep["degradations"] == ["cap_nprobe"]
+    assert rep["approximate"] is True
